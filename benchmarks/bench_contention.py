@@ -1,0 +1,71 @@
+"""Fig. 3 analogue: compute- vs memory-bound tiles under NoC contention.
+
+The paper puts a 4x-replicated adpcm (compute-bound) and dfmul
+(memory-bound) in the far-from-memory A2 tile, NoC at 10 MHz, accelerators
+and TGs at 50 MHz, and sweeps 0..11 active traffic generators.  Expected
+shape: adpcm ~flat through 7 TGs; dfmul collapses over the same range.
+
+A pod-domain companion sweeps background all-gather streams against a
+compute-bound (train) vs memory-bound (decode) cell using the roofline
+terms (collective bandwidth share shrinks as background flows take links).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+from repro.configs.vespa_soc import CHSTONE
+from repro.core.perfmodel import AccelWorkload, SoCPerfModel
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "dryrun")
+
+
+def fig3_curves():
+    m = SoCPerfModel()
+    rates = {"acc": 1.0, "noc_mem": 0.1, "tg": 1.0}   # paper: NoC at 10 MHz
+    rows = []
+    for name in ("adpcm", "dfmul"):
+        base, ai = CHSTONE[name]
+        wl = AccelWorkload(name, base, ai, replication=4)
+        t0 = time.perf_counter_ns()
+        curve = [m.accel_throughput(wl, (3, 3), rates, n) for n in range(12)]
+        us = (time.perf_counter_ns() - t0) / 1e3
+        norm = [c / curve[0] for c in curve]
+        rows.append((f"fig3_{name}", us,
+                     "thr@tg=" + "/".join(f"{v:.2f}" for v in norm[::2])
+                     + f" flat7={norm[7] >= 0.9}"))
+    return rows
+
+
+def pod_contention():
+    """Background collective streams eat ICI bandwidth: how much background
+    traffic before each cell's bound flips to collective?"""
+    rows = []
+    cells = [("granite-8b__train_4k__pod1__fsdp-folded-gradrs", "train-opt"),
+             ("deepseek-v2-lite-16b__decode_32k__pod1__tp-kvint8",
+              "decode-opt")]
+    for tag, name in cells:
+        path = os.path.join(DRYRUN, tag + ".json")
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            d = json.load(f)
+        chips = d["chips"]
+        t_comp = d["jaxpr_flops_total"] / (chips * 197e12)
+        t_mem = d["hbm_bytes_total"] / (chips * 819e9)
+        t0 = time.perf_counter_ns()
+        pts = []
+        for bg in (0.0, 0.25, 0.5, 0.75):     # fraction of ICI stolen
+            t_coll = d["collective_bytes"] / (50e9 * (1 - bg))
+            bound = max(t_comp, t_mem, t_coll)
+            pts.append(f"{bg:.2f}:{bound:.2e}")
+        us = (time.perf_counter_ns() - t0) / 1e3
+        rows.append((f"contention_{name}", us, " ".join(pts)))
+    return rows
+
+
+def run():
+    return fig3_curves() + pod_contention()

@@ -1,0 +1,64 @@
+"""DSE driver benchmark: the sweep Vespa exists to enable.
+
+Sweeps (replication K x island rates x placement) for a CHStone accelerator
+on the paper's SoC and reports the Pareto front; then ranks the §Perf pod
+strategies for the three hillclimbed cells from dry-run artifacts.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from repro.configs.vespa_soc import CHSTONE
+from repro.core.dse import pareto_front, sweep_soc
+from repro.core.perfmodel import AccelWorkload, SoCPerfModel
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "dryrun")
+
+
+def soc_dse():
+    m = SoCPerfModel()
+    base, ai = CHSTONE["gsm"]
+    t0 = time.perf_counter_ns()
+    pts = sweep_soc(m, AccelWorkload("gsm", base, ai), n_tg=4)
+    front = pareto_front(pts)
+    us = (time.perf_counter_ns() - t0) / 1e3
+    best = max(front, key=lambda p: p.throughput)
+    return [("dse_soc_gsm", us,
+             f"points={len(pts)} pareto={len(front)} "
+             f"best: K={list(best.replication.values())[0]} "
+             f"pos={list(best.placement.values())[0]} thr={best.throughput:.2f}")]
+
+
+def pod_strategy_ranking():
+    rows = []
+    for arch, shape in [("granite-8b", "train_4k"),
+                        ("granite-moe-1b-a400m", "train_4k"),
+                        ("deepseek-v2-lite-16b", "decode_32k")]:
+        t0 = time.perf_counter_ns()
+        cands = []
+        for path in glob.glob(os.path.join(
+                DRYRUN, f"{arch}__{shape}__pod1*.json")):
+            with open(path) as f:
+                d = json.load(f)
+            chips = d["chips"]
+            bound = max(d["jaxpr_flops_total"] / (chips * 197e12),
+                        d["hbm_bytes_total"] / (chips * 819e9),
+                        d.get("collective_bytes", 0) / 50e9)
+            cands.append((bound, d.get("strategy", "tp")))
+        cands.sort()
+        us = (time.perf_counter_ns() - t0) / 1e3
+        if cands:
+            base = [b for b, s in cands if s == "tp"]
+            gain = (base[0] / cands[0][0]) if base else float("nan")
+            rows.append((f"dse_pod_{arch}_{shape}", us,
+                         f"best={cands[0][1]} bound={cands[0][0]:.3e}s "
+                         f"gain_vs_tp={gain:.2f}x of {len(cands)} points"))
+    return rows
+
+
+def run():
+    return soc_dse() + pod_strategy_ranking()

@@ -1,0 +1,74 @@
+"""Table I analogue: multi-replica tile area vs throughput.
+
+Reproduces the paper's replication study twice:
+
+1. **Paper domain** — the SoCPerfModel on the five CHStone accelerators at
+   K in {1,2,4}: throughput gain + the Table I measured numbers side by
+   side (validates the model against the paper's data).
+2. **Pod domain**  — the MRA dry-run artifacts for deepseek decode_32k at
+   K in {1,2,4,8}: per-device weight bytes ("area") vs collective wire
+   bytes (the stream the paper's AXI bridge multiplexes).
+
+CSV columns: name,us_per_call,derived.
+"""
+from __future__ import annotations
+
+import dataclasses
+import glob
+import json
+import os
+import time
+
+from repro.configs.vespa_soc import CHSTONE, TABLE_I
+from repro.core.perfmodel import AccelWorkload, SoCPerfModel
+from repro.core.replication import (replication_area_model,
+                                    replication_throughput_model)
+
+DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                      "dryrun")
+
+
+def paper_domain():
+    m = SoCPerfModel()
+    rates = {"acc": 1.0, "noc_mem": 1.0, "tg": 1.0}
+    rows = []
+    for name, (base, ai) in CHSTONE.items():
+        t0 = time.perf_counter_ns()
+        thr = {k: m.accel_throughput(
+            AccelWorkload(name, base, ai, replication=k), (1, 1), rates, 0)
+            for k in (1, 2, 4)}
+        us = (time.perf_counter_ns() - t0) / 1e3
+        meas = {k: TABLE_I[name][k][4] / TABLE_I[name][1][4] for k in (2, 4)}
+        rows.append((f"tableI_{name}", us,
+                     f"gain2={thr[2]/thr[1]:.2f}(paper {meas[2]:.2f}) "
+                     f"gain4={thr[4]/thr[1]:.2f}(paper {meas[4]:.2f})"))
+    t0 = time.perf_counter_ns()
+    g2, g4 = replication_throughput_model(2), replication_throughput_model(4)
+    us = (time.perf_counter_ns() - t0) / 1e3
+    rows.append(("tableI_avg_model", us,
+                 f"gain2={g2:.2f}(paper 1.92) gain4={g4:.2f}(paper 3.58)"))
+    return rows
+
+
+def pod_domain():
+    rows = []
+    for k in (1, 2, 4, 8):
+        tag = ("deepseek-v2-lite-16b__decode_32k__pod1"
+               + (f"__mra{k}" if k > 1 else ""))
+        path = os.path.join(DRYRUN, tag + ".json")
+        if not os.path.exists(path):
+            continue
+        with open(path) as f:
+            d = json.load(f)
+        t0 = time.perf_counter_ns()
+        area = replication_area_model(d["n_params"] * 2, 0, k)
+        us = (time.perf_counter_ns() - t0) / 1e3
+        rows.append((f"mra_pod_K{k}", us,
+                     f"coll_bytes={d['collective_bytes']:.3e} "
+                     f"weightB/dev={area['weight_bytes_per_dev']:.3e} "
+                     f"t_mem={d['hbm_bytes_total']/(256*819e9):.3e}s"))
+    return rows
+
+
+def run():
+    return paper_domain() + pod_domain()

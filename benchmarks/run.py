@@ -1,0 +1,31 @@
+"""Benchmark harness: one module per paper table/figure (+ kernels, DSE).
+
+Prints ``name,us_per_call,derived`` CSV, as required.  Paper-claims
+benchmarks print the reproduced number next to the paper's measured value.
+"""
+import sys
+
+
+def main() -> None:
+    from benchmarks import (bench_contention, bench_dfs_traffic, bench_dse,
+                            bench_kernels, bench_replication)
+    mods = [("replication(TableI)", bench_replication),
+            ("contention(Fig3)", bench_contention),
+            ("dfs_traffic(Fig4)", bench_dfs_traffic),
+            ("dse", bench_dse),
+            ("kernels", bench_kernels)]
+    print("name,us_per_call,derived")
+    failures = 0
+    for label, mod in mods:
+        try:
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.1f},{derived}")
+        except Exception as e:  # pragma: no cover
+            failures += 1
+            print(f"{label},0,ERROR:{e!r}", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,39 @@
+"""Design-space exploration: the Vespa workflow end to end.
+
+Sweeps replication K x island rates x placement for a CHStone accelerator
+on the paper's 4x4 SoC, prints the Pareto front, then applies the DFS
+energy policy to the best point.
+
+    PYTHONPATH=src python examples/dse_sweep.py --accel dfadd
+"""
+import argparse
+
+from repro.configs.vespa_soc import CHSTONE
+from repro.core.dse import pareto_front, summarize, sweep_soc
+from repro.core.perfmodel import AccelWorkload, SoCPerfModel
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--accel", default="dfadd", choices=sorted(CHSTONE))
+    ap.add_argument("--tg", type=int, default=4,
+                    help="active traffic generators")
+    args = ap.parse_args()
+
+    base, ai = CHSTONE[args.accel]
+    wl = AccelWorkload(args.accel, base, ai)
+    model = SoCPerfModel()
+    pts = sweep_soc(model, wl, n_tg=args.tg)
+    print(f"swept {len(pts)} design points for {args.accel} "
+          f"(ai={ai}, {'compute' if wl.compute_bound else 'memory'}-bound)")
+    print(summarize(pts))
+
+    best = max(pareto_front(pts), key=lambda p: p.throughput)
+    print(f"\nchosen design: K={best.replication} rates={best.rates} "
+          f"placement={best.placement}")
+    print(f"throughput {best.throughput:.2f} MB/s at "
+          f"{best.energy_per_unit:.1f} W/(MB/s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,53 @@
+"""Quickstart: build any assigned architecture, run forward / prefill /
+decode, and inspect the Vespa tile plan + monitoring counters.
+
+    PYTHONPATH=src python examples/quickstart.py --arch gemma-2b
+"""
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+import repro.core as C
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models.layers import AttnOptions
+from repro.models.transformer import LM
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b", choices=ASSIGNED_ARCHS)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch).reduced()     # CPU-sized, same family
+    print(f"arch={args.arch} family={cfg.family} "
+          f"(full model: {get_config(args.arch).n_params()/1e9:.2f}B params)")
+
+    lm = LM(cfg, opts=AttnOptions(backend="naive"), remat=False)
+    params = lm.init(jax.random.PRNGKey(0))
+
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                              cfg.vocab_size)
+    logits, aux = lm.forward(params, tokens=toks)
+    print(f"forward: logits {logits.shape}, aux={float(aux):.3f}")
+
+    lg, cache = lm.prefill(params, tokens=toks, cache_len=64)
+    nxt = jnp.argmax(lg, -1)[:, None]
+    lg2, cache = lm.decode_step(params, cache, tokens=nxt)
+    print(f"prefill+decode: next tokens {jnp.argmax(lg2, -1).tolist()}")
+
+    # the Vespa view: tiles, islands, counters
+    plan = C.default_plan(cfg)
+    islands = C.default_islands(plan)
+    print("tiles:", [f"{t.name}(K={t.replication},{t.island})"
+                     for t in plan.tiles])
+    print("islands:", {i.name: i.rate for i in islands.islands})
+    ctr = C.init_counters(plan)
+    ctr = C.charge_boundary(ctr, "attn", "mem", logits)
+    mc = C.MonitorClient()
+    mc.read(ctr, step=1)
+    print(mc.table())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Config registry: importing this package registers all assigned archs."""
+from repro.configs.base import (  # noqa: F401
+    ArchConfig,
+    ShapeConfig,
+    LM_SHAPES,
+    shapes_for,
+    get_config,
+    list_configs,
+    register,
+)
+
+# Assigned architectures (registration side effects).
+from repro.configs import (  # noqa: F401
+    h2o_danube_1_8b,
+    phi3_medium_14b,
+    granite_8b,
+    gemma_2b,
+    deepseek_v2_lite_16b,
+    granite_moe_1b_a400m,
+    mamba2_370m,
+    zamba2_7b,
+    chameleon_34b,
+    musicgen_large,
+)
+
+ASSIGNED_ARCHS = [
+    "h2o-danube-1.8b",
+    "phi3-medium-14b",
+    "granite-8b",
+    "gemma-2b",
+    "deepseek-v2-lite-16b",
+    "granite-moe-1b-a400m",
+    "mamba2-370m",
+    "zamba2-7b",
+    "chameleon-34b",
+    "musicgen-large",
+]

@@ -1,0 +1,24 @@
+"""Vespa core: the paper's three contributions as composable JAX modules.
+
+C1 multi-replica tiles   -> tiles.py + replication.py
+C2 DFS frequency islands -> islands.py + dfs.py
+C3 run-time monitoring   -> monitor.py
+supporting models        -> noc.py + perfmodel.py, DSE driver -> dse.py
+"""
+from repro.core.tiles import TilePlan, TileSpec, default_plan, validate_plan  # noqa: F401
+from repro.core.replication import (  # noqa: F401
+    make_mra_mesh, mra_rules, merged_rules, data_axes,
+    replication_area_model, replication_throughput_model)
+from repro.core.islands import (  # noqa: F401
+    IslandConfig, IslandSpec, RateLadder, TILE_LADDER, NOC_LADDER,
+    default_islands, validate_islands, resync_boundaries)
+from repro.core.dfs import (  # noqa: F401
+    DFSActuator, TileTelemetry, policy_memory_bound, policy_straggler,
+    policy_energy_per_token)
+from repro.core.monitor import (  # noqa: F401
+    Counters, MonitorClient, PKT_BYTES, init_counters, charge,
+    charge_boundary, manual_reset, bytes_of, pkts)
+from repro.core.perfmodel import (  # noqa: F401
+    RooflineTerms, roofline_from_counts, model_flops, SoCPerfModel,
+    AccelWorkload, PEAK_FLOPS, HBM_BW, ICI_BW, chip_power)
+from repro.core import dse  # noqa: F401

@@ -1,0 +1,183 @@
+"""DFS actuators + the dual-buffer hitless reconfiguration protocol (C2).
+
+The paper's actuator uses two MMCMs and an FSM: the master holds the output
+clock while the slave reconfigures, then roles swap — the platform never
+sees a dead clock.  The vespa-jax actuator keeps two *island-config
+buffers*: the live one drives the (compiled) step function while the shadow
+one is rewritten; ``commit()`` atomically swaps them between steps.  Because
+compiled executables are cached per config version, swapping back to a
+previously-used config is instant — exactly the MMCM role swap.
+
+Controller policies consume the run-time monitor (C3) and the perf model to
+pick per-island rates:
+
+* ``policy_memory_bound`` — the paper's Fig. 4 insight: islands whose tiles
+  are memory/stream-bound can drop their clock with negligible throughput
+  loss, saving energy.
+* ``policy_straggler``   — islands detected slow (exec-time counter above
+  the fleet median) get work rebalanced away / their admission lowered:
+  DFS as straggler mitigation at pod scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.islands import IslandConfig, IslandSpec
+from repro.core.tiles import TilePlan
+
+
+@dataclass
+class ActuatorState:
+    live: IslandConfig
+    shadow: Optional[IslandConfig] = None
+    swaps: int = 0
+    history: List[Tuple[int, Dict[str, float]]] = field(default_factory=list)
+
+
+class DFSActuator:
+    """Dual-buffer, glitch-free island-rate actuator.
+
+    >>> act = DFSActuator(islands)
+    >>> act.reconfigure({"noc_mem": 0.5})   # writes the SHADOW buffer
+    >>> act.commit()                        # atomic swap between steps
+    ``live()`` never observes a half-written config: reconfigure() builds a
+    complete new IslandConfig aside, and commit() swaps a single reference
+    under a lock (the FSM of the paper, in one CAS).
+    """
+
+    def __init__(self, initial: IslandConfig):
+        self._lock = threading.Lock()
+        self._st = ActuatorState(live=initial)
+
+    def live(self) -> IslandConfig:
+        with self._lock:
+            return self._st.live
+
+    def reconfigure(self, rates: Dict[str, float]) -> IslandConfig:
+        """Prepare the shadow buffer; the live config keeps driving."""
+        with self._lock:
+            base = self._st.live
+            self._st.shadow = base.with_rates(rates)
+            return self._st.shadow
+
+    def commit(self) -> IslandConfig:
+        """Swap shadow -> live (the master/slave MMCM role swap)."""
+        with self._lock:
+            if self._st.shadow is None:
+                return self._st.live
+            prev = self._st.live
+            self._st.live, self._st.shadow = self._st.shadow, None
+            self._st.swaps += 1
+            self._st.history.append(
+                (self._st.live.version,
+                 {i.name: i.rate for i in self._st.live.islands}))
+            return self._st.live
+
+    def abort(self) -> None:
+        """Drop a prepared shadow config without ever exposing it."""
+        with self._lock:
+            self._st.shadow = None
+
+    @property
+    def swaps(self) -> int:
+        with self._lock:
+            return self._st.swaps
+
+    def history(self) -> List[Tuple[int, Dict[str, float]]]:
+        with self._lock:
+            return list(self._st.history)
+
+
+# ---------------------------------------------------------------------------
+# Controller policies
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class TileTelemetry:
+    """Per-tile digest read from the C3 monitor."""
+    exec_time: float          # busy seconds (or cycles) in window
+    pkts_in: float
+    pkts_out: float
+    rtt: float
+    boundness: float          # T_mem_or_stream / T_total in [0,1]
+
+
+def policy_memory_bound(islands: IslandConfig,
+                        telemetry: Dict[str, TileTelemetry],
+                        *, threshold: float = 0.7,
+                        low_rate: float = 0.2) -> Dict[str, float]:
+    """Fig.-4 policy: drop the clock of islands whose tiles are
+    memory/stream-bound past ``threshold`` — their throughput is set by the
+    NoC+MEM island, so f_acc barely matters; energy ~ f V(f)^2 drops.
+    Never touches the noc_mem island (that's the actual bottleneck)."""
+    out: Dict[str, float] = {}
+    for isl in islands.islands:
+        if isl.fixed or isl.name == "noc_mem":
+            continue
+        ts = [telemetry[t] for t in isl.tiles if t in telemetry]
+        if not ts:
+            continue
+        b = float(np.mean([t.boundness for t in ts]))
+        out[isl.name] = low_rate if b >= threshold else 1.0
+    return out
+
+
+def policy_straggler(islands: IslandConfig,
+                     telemetry: Dict[str, TileTelemetry],
+                     *, slack: float = 1.3) -> Dict[str, float]:
+    """Straggler mitigation: islands whose exec-time exceeds ``slack`` x the
+    median run at full rate while everyone else is derated to match — the
+    fleet converges to the straggler's pace at minimum energy instead of
+    spinning.  (At pod scale the same signal triggers work rebalancing in
+    runtime/fault.py; rate-derating is the in-step response.)"""
+    med = float(np.median([t.exec_time for t in telemetry.values()])) or 1.0
+    out: Dict[str, float] = {}
+    for isl in islands.islands:
+        if isl.fixed:
+            continue
+        ts = [telemetry[t] for t in isl.tiles if t in telemetry]
+        if not ts:
+            continue
+        worst = max(t.exec_time for t in ts)
+        if worst > slack * med:
+            out[isl.name] = 1.0                   # straggler: full speed
+        else:
+            # derate to just-keep-up: rate ~ own_time / straggler_time
+            out[isl.name] = max(0.2, min(1.0, worst / (slack * med)))
+    return out
+
+
+def policy_energy_per_token(islands: IslandConfig,
+                            telemetry: Dict[str, TileTelemetry],
+                            perf_eval: Callable[[Dict[str, float]], Tuple[float, float]],
+                            *, steps: int = 25) -> Dict[str, float]:
+    """Greedy coordinate-descent over the discrete rate ladders minimizing
+    energy/token subject to <2% throughput loss vs all-max rates.
+    ``perf_eval(rates) -> (tokens_per_s, watts)`` comes from core/perfmodel.
+    """
+    rates = {i.name: i.rate for i in islands.islands if not i.fixed}
+    base_tps, _ = perf_eval({**rates, **{k: 1.0 for k in rates}})
+    best = dict(rates)
+    best_tps, best_w = perf_eval(best)
+    for _ in range(steps):
+        improved = False
+        for isl in islands.islands:
+            if isl.fixed:
+                continue
+            for lv in isl.ladder.levels():
+                cand = dict(best)
+                cand[isl.name] = lv
+                tps, w = perf_eval(cand)
+                if tps >= 0.98 * base_tps and (w / max(tps, 1e-9)) < (
+                        best_w / max(best_tps, 1e-9)) * 0.999:
+                    best, best_tps, best_w = cand, tps, w
+                    improved = True
+        if not improved:
+            break
+    return best

@@ -1,0 +1,109 @@
+"""Design-space exploration driver — what Vespa exists for.
+
+Sweeps the paper's three design axes and reports Pareto-optimal points:
+
+* replication K per accelerator tile    (C1),
+* per-island rate assignment            (C2),
+* tile placement on the NoC grid        (Fig. 2's A1-near vs A2-far).
+
+Two evaluation backends: the analytic :class:`SoCPerfModel` (fast, used for
+sweeps and the paper-claims benchmarks) and the dry-run roofline
+(launch/dryrun.py), used to validate chosen points against compiled HLO.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.islands import IslandConfig, NOC_LADDER, TILE_LADDER
+from repro.core.perfmodel import AccelWorkload, SoCPerfModel, chip_power
+from repro.core.replication import (replication_area_model,
+                                    replication_throughput_model)
+from repro.core.tiles import TilePlan
+
+
+@dataclass(frozen=True)
+class DesignPoint:
+    replication: Dict[str, int]
+    rates: Dict[str, float]
+    placement: Dict[str, Tuple[int, int]]
+    throughput: float
+    area: float                    # normalized resource cost
+    energy_per_unit: float
+
+    def key(self):
+        return (tuple(sorted(self.replication.items())),
+                tuple(sorted(self.rates.items())),
+                tuple(sorted(self.placement.items())))
+
+
+def pareto_front(points: Sequence[DesignPoint]) -> List[DesignPoint]:
+    """Maximize throughput, minimize area & energy."""
+    front: List[DesignPoint] = []
+    for p in points:
+        dominated = False
+        for q in points:
+            if q is p:
+                continue
+            if (q.throughput >= p.throughput and q.area <= p.area
+                    and q.energy_per_unit <= p.energy_per_unit
+                    and (q.throughput > p.throughput or q.area < p.area
+                         or q.energy_per_unit < p.energy_per_unit)):
+                dominated = True
+                break
+        if not dominated:
+            front.append(p)
+    return front
+
+
+def sweep_soc(model: SoCPerfModel, wl: AccelWorkload,
+              *, ks: Sequence[int] = (1, 2, 4),
+              noc_rates: Sequence[float] = (0.1, 0.5, 1.0),
+              acc_rates: Sequence[float] = (0.2, 0.6, 1.0),
+              positions: Sequence[Tuple[int, int]] = ((1, 1), (3, 3)),
+              n_tg: int = 0) -> List[DesignPoint]:
+    """Exhaustive sweep over the paper's axes for one accelerator."""
+    out: List[DesignPoint] = []
+    for k, fn, fa, pos in itertools.product(ks, noc_rates, acc_rates,
+                                            positions):
+        w = dataclasses.replace(wl, replication=k)
+        rates = {"acc": fa, "noc_mem": fn, "tg": 1.0}
+        thr = model.accel_throughput(w, pos, rates, n_tg)
+        area = replication_area_model(
+            weight_bytes=1.0, act_bytes=0.5, k=k)["total_bytes_per_dev"]
+        power = chip_power(fa, busy=1.0) + 0.3 * chip_power(fn, busy=1.0)
+        out.append(DesignPoint(
+            replication={wl.name: k}, rates=rates,
+            placement={wl.name: pos}, throughput=thr, area=area,
+            energy_per_unit=power / max(thr, 1e-9)))
+    return out
+
+
+def sweep_replication_roofline(eval_cell: Callable[[int], Dict[str, float]],
+                               ks: Sequence[int] = (1, 2, 4, 8)
+                               ) -> List[Dict[str, float]]:
+    """Pod-scale MRA sweep: ``eval_cell(K)`` lowers/compiles the cell on the
+    K-factored mesh and returns roofline terms; used by §Perf hillclimbs."""
+    rows = []
+    for k in ks:
+        r = dict(eval_cell(k))
+        r["K"] = k
+        r["predicted_gain"] = replication_throughput_model(k)
+        rows.append(r)
+    return rows
+
+
+def summarize(points: Sequence[DesignPoint], top: int = 10) -> str:
+    front = pareto_front(points)
+    front.sort(key=lambda p: -p.throughput)
+    lines = [f"{len(points)} points, {len(front)} on Pareto front"]
+    for p in front[:top]:
+        lines.append(
+            f"  K={p.replication}  rates={ {k: round(v, 2) for k, v in p.rates.items()} }"
+            f"  pos={p.placement}  thr={p.throughput:.2f}  area={p.area:.2f}"
+            f"  E/u={p.energy_per_unit:.1f}")
+    return "\n".join(lines)

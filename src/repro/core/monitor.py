@@ -1,0 +1,148 @@
+"""Run-time monitoring infrastructure (paper contribution C3).
+
+The paper exposes up to four memory-mapped counters per accelerator tile:
+execution time, packets in, packets out, round-trip time.  vespa-jax keeps a
+**counter pytree threaded through the jitted step function** — updating a
+counter is an in-graph add (costs nothing extra on device), and reading it
+is one device→host transfer, the analogue of an MMIO read over the paper's
+USB-to-serial link.
+
+Semantics match the paper:
+* ``exec_time`` auto-resets when the tile starts and stops at completion —
+  i.e. it holds the *latest* per-step busy value, not an accumulation;
+* ``pkts_in`` / ``pkts_out`` / ``rtt`` accumulate until *manually* reset;
+* only the (≤4) counters enabled in the TileSpec exist at all.
+
+Packets are ``bytes / PKT_BYTES`` with PKT_BYTES = 512 (ICI payload quantum
+standing in for the ESP NoC flit; DESIGN.md assumption #3).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.tiles import TilePlan, TileSpec, MONITOR_KINDS
+
+PKT_BYTES = 512
+
+Counters = Dict[str, Dict[str, jax.Array]]   # {tile: {kind: f32 scalar}}
+
+ACCUMULATING = ("pkts_in", "pkts_out", "rtt")
+
+
+def init_counters(plan: TilePlan) -> Counters:
+    out: Counters = {}
+    for t in plan.tiles:
+        out[t.name] = {m: jnp.zeros((), jnp.float32) for m in t.monitors}
+    return out
+
+
+def bytes_of(x: Any) -> float:
+    """Static byte count of an array or pytree (shape-only, trace-safe)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(x):
+        if hasattr(leaf, "shape"):
+            total += int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+    return float(total)
+
+
+def pkts(nbytes) -> jax.Array:
+    return jnp.asarray(nbytes, jnp.float32) / PKT_BYTES
+
+
+def charge(counters: Counters, tile: str, *, exec_time=None, pkts_in=None,
+           pkts_out=None, rtt=None) -> Counters:
+    """In-graph counter update.  Disabled counters are silently skipped
+    (the hardware without the counter instantiated simply has no register).
+
+    exec_time REPLACES (auto-reset per start/stop); the others ACCUMULATE.
+    Values may be traced scalars.
+    """
+    if tile not in counters:
+        return counters
+    row = dict(counters[tile])
+    if exec_time is not None and "exec_time" in row:
+        row["exec_time"] = jnp.asarray(exec_time, jnp.float32)
+    for name, val in (("pkts_in", pkts_in), ("pkts_out", pkts_out),
+                      ("rtt", rtt)):
+        if val is not None and name in row:
+            row[name] = row[name] + jnp.asarray(val, jnp.float32)
+    out = dict(counters)
+    out[tile] = row
+    return out
+
+
+def charge_boundary(counters: Counters, src: str, dst: str, payload) -> Counters:
+    """Charge one tile-boundary stream crossing: bytes leave ``src`` and
+    enter ``dst`` (the four AXI-Stream channels of the paper collapse to
+    payload accounting; direction gives rd vs wr)."""
+    n = pkts(bytes_of(payload))
+    counters = charge(counters, src, pkts_out=n)
+    counters = charge(counters, dst, pkts_in=n)
+    return counters
+
+
+def manual_reset(counters: Counters, tiles: Optional[Iterable[str]] = None,
+                 kinds: Iterable[str] = ACCUMULATING) -> Counters:
+    """Host-initiated reset of the accumulating counters (the paper's
+    manually-reset semantics).  exec_time is excluded by default."""
+    out = {}
+    for t, row in counters.items():
+        if tiles is not None and t not in tiles:
+            out[t] = row
+            continue
+        out[t] = {k: (jnp.zeros((), jnp.float32) if k in kinds else v)
+                  for k, v in row.items()}
+    return out
+
+
+@dataclass
+class MonitorSample:
+    step: int
+    wall_time: float
+    counters: Dict[str, Dict[str, float]]
+
+
+class MonitorClient:
+    """Host-side monitor — the USB-to-serial path of the paper.
+
+    ``read()`` pulls the device counter tree once (one transfer) and stamps
+    it with wall-clock; ``rates()`` differentiates consecutive samples into
+    pkt/s — what the paper plots in Fig. 4.
+    """
+
+    def __init__(self):
+        self.samples: List[MonitorSample] = []
+
+    def read(self, counters: Counters, step: int) -> MonitorSample:
+        host = jax.device_get(counters)
+        flat = {t: {k: float(v) for k, v in row.items()}
+                for t, row in host.items()}
+        s = MonitorSample(step=step, wall_time=time.monotonic(), counters=flat)
+        self.samples.append(s)
+        return s
+
+    def rates(self, tile: str, kind: str = "pkts_in") -> List[Tuple[int, float]]:
+        out = []
+        for a, b in zip(self.samples, self.samples[1:]):
+            dt = b.wall_time - a.wall_time
+            if dt <= 0:
+                continue
+            da = b.counters[tile].get(kind, 0.0) - a.counters[tile].get(kind, 0.0)
+            out.append((b.step, da / dt))
+        return out
+
+    def table(self) -> str:
+        if not self.samples:
+            return "(no samples)"
+        last = self.samples[-1]
+        lines = [f"step {last.step}  t={last.wall_time:.3f}"]
+        for t, row in sorted(last.counters.items()):
+            cols = "  ".join(f"{k}={v:.3g}" for k, v in sorted(row.items()))
+            lines.append(f"  {t:12s} {cols}")
+        return "\n".join(lines)

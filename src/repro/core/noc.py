@@ -1,0 +1,125 @@
+"""NoC model: topology, XY routing, link-level contention.
+
+The paper's SoC is a 4x4 mesh NoC; a TPU pod is a 2D (v5e: 16x16) ICI
+torus.  Both are grids with per-link bandwidth and hop latency, so one model
+serves the paper-claims benchmarks (4x4, CHStone tiles) and the pod-scale
+perf model (16x16, layer tiles).
+
+Contention: per-link utilization rho from summed flows; the service
+slowdown uses an M/D/1-style factor 1 + rho/(2(1-rho)) capped at
+``max_slowdown`` — an analytic stand-in for the RTL backpressure the paper
+measures (DESIGN.md assumption #4).  This reproduces the paper's Fig. 3
+shape: compute-bound tiles are flat under background traffic until the NoC
+saturates; memory-bound tiles collapse as rho -> 1.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Pos = Tuple[int, int]
+Link = Tuple[Pos, Pos]
+
+
+@dataclass(frozen=True)
+class NocConfig:
+    rows: int = 4
+    cols: int = 4
+    torus: bool = False               # paper NoC: mesh; TPU ICI: torus
+    link_bw: float = 1.0              # bytes/cycle per link (normalized)
+    hop_latency: float = 1.0          # cycles per hop
+    max_slowdown: float = 50.0
+
+
+def xy_route(cfg: NocConfig, src: Pos, dst: Pos) -> List[Link]:
+    """Dimension-ordered (X then Y) route; shortest-wrap when torus."""
+    links: List[Link] = []
+    r, c = src
+
+    def step_toward(cur: int, tgt: int, size: int) -> int:
+        if cur == tgt:
+            return cur
+        if not cfg.torus:
+            return cur + (1 if tgt > cur else -1)
+        fwd = (tgt - cur) % size
+        bwd = (cur - tgt) % size
+        return (cur + 1) % size if fwd <= bwd else (cur - 1) % size
+
+    while c != dst[1]:
+        nc = step_toward(c, dst[1], cfg.cols)
+        links.append(((r, c), (r, nc)))
+        c = nc
+    while r != dst[0]:
+        nr = step_toward(r, dst[0], cfg.rows)
+        links.append(((r, c), (nr, c)))
+        r = nr
+    return links
+
+
+def hops(cfg: NocConfig, src: Pos, dst: Pos) -> int:
+    return len(xy_route(cfg, src, dst))
+
+
+@dataclass
+class Flow:
+    src: Pos
+    dst: Pos
+    bytes_per_cycle: float          # offered load at the flow's island rate
+
+
+class NocModel:
+    """Accumulates flows onto links and answers contention queries."""
+
+    def __init__(self, cfg: NocConfig):
+        self.cfg = cfg
+        self.link_load: Dict[Link, float] = {}
+        self.flows: List[Flow] = []
+
+    def add_flow(self, f: Flow) -> None:
+        self.flows.append(f)
+        for link in xy_route(self.cfg, f.src, f.dst):
+            self.link_load[link] = self.link_load.get(link, 0.0) + f.bytes_per_cycle
+
+    def utilization(self, link: Link) -> float:
+        return self.link_load.get(link, 0.0) / self.cfg.link_bw
+
+    def max_utilization(self) -> float:
+        if not self.link_load:
+            return 0.0
+        return max(self.utilization(l) for l in self.link_load)
+
+    def slowdown(self, src: Pos, dst: Pos) -> float:
+        """M/D/1-style service slowdown along a route (worst link)."""
+        rho = 0.0
+        for link in xy_route(self.cfg, src, dst):
+            rho = max(rho, min(self.utilization(link), 0.999))
+        s = 1.0 + rho / (2.0 * (1.0 - rho))
+        return float(min(s, self.cfg.max_slowdown))
+
+    def route_latency(self, src: Pos, dst: Pos) -> float:
+        """Cycles for a packet header to traverse, incl. queueing."""
+        base = hops(self.cfg, src, dst) * self.cfg.hop_latency
+        return base * self.slowdown(src, dst)
+
+
+def collective_bytes_ring_allreduce(size_bytes: float, n: int) -> float:
+    """Per-device wire bytes of a ring all-reduce (2(n-1)/n x size)."""
+    if n <= 1:
+        return 0.0
+    return 2.0 * (n - 1) / n * size_bytes
+
+
+def collective_bytes_allgather(size_bytes: float, n: int) -> float:
+    """Per-device wire bytes to all-gather a sharded tensor of total size."""
+    if n <= 1:
+        return 0.0
+    return (n - 1) / n * size_bytes
+
+
+def collective_bytes_alltoall(size_bytes: float, n: int) -> float:
+    if n <= 1:
+        return 0.0
+    return (n - 1) / n * size_bytes

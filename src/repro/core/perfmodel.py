@@ -1,0 +1,224 @@
+"""Frequency-aware roofline performance & energy model.
+
+Two roles:
+
+1. **Paper-claims engine** — evaluates the paper's 4x4 SoC (CHStone tiles,
+   five frequency islands) so benchmarks can reproduce Table I / Fig. 3 /
+   Fig. 4 shapes analytically.
+
+2. **Pod-scale engine** — turns dry-run artifacts (HLO FLOPs / bytes /
+   collective bytes) + island rates into the three roofline terms used by
+   EXPERIMENTS.md §Roofline, and into tokens/s + watts for the DFS
+   energy-per-token policy.
+
+Frequency semantics (DESIGN.md §C2): an island's normalized rate f scales
+the *service rate* of its components — compute FLOP/s for accelerator
+islands, link bandwidth + memory-controller service for the noc_mem island.
+Energy: P(f) = P_static + P_dyn · f · V(f)^2 with V(f) = 0.7 + 0.3 f
+(classic DVFS voltage scaling).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.islands import IslandConfig
+from repro.core.noc import (Flow, NocConfig, NocModel,
+                            collective_bytes_ring_allreduce)
+from repro.core.tiles import TilePlan
+
+# ---------------------------------------------------------------------------
+# TPU v5e hardware constants (per chip) — the assignment's numbers.
+# ---------------------------------------------------------------------------
+PEAK_FLOPS = 197e12          # bf16 FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link
+VMEM_BYTES = 128 * 2**20
+P_STATIC_W = 60.0            # per chip, modeled
+P_DYN_W = 140.0              # at f=1, modeled
+
+
+def voltage(f: float) -> float:
+    return 0.7 + 0.3 * f
+
+
+def chip_power(f_comp: float, busy: float) -> float:
+    """Modeled chip power at normalized rate f and duty cycle busy."""
+    return P_STATIC_W + P_DYN_W * f_comp * voltage(f_comp) ** 2 * busy
+
+
+# ---------------------------------------------------------------------------
+# Roofline terms (pod-scale)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RooflineTerms:
+    """The three §Roofline terms, in seconds (per step)."""
+    t_compute: float
+    t_memory: float
+    t_collective: float
+    flops: float
+    hbm_bytes: float
+    collective_bytes: float
+    chips: int
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def roofline_fraction(self) -> float:
+        """max-term / sum-of-terms: 1.0 = perfectly overlapped/bound by one
+        resource; lower = time wasted on non-dominant resources if nothing
+        overlaps.  (Perfect overlap means step time = t_bound.)"""
+        s = self.t_compute + self.t_memory + self.t_collective
+        return self.t_bound / s if s > 0 else 0.0
+
+
+def roofline_from_counts(flops: float, hbm_bytes: float,
+                         collective_bytes: float, chips: int,
+                         *, f_comp: float = 1.0, f_noc: float = 1.0,
+                         peak_flops: float = PEAK_FLOPS,
+                         hbm_bw: float = HBM_BW,
+                         ici_bw: float = ICI_BW) -> RooflineTerms:
+    """HLO totals -> per-step roofline terms.  ``flops``/``hbm_bytes`` are
+    whole-program totals; collective_bytes is per-device wire bytes."""
+    return RooflineTerms(
+        t_compute=flops / (chips * peak_flops * f_comp),
+        t_memory=hbm_bytes / (chips * hbm_bw * f_noc),
+        t_collective=collective_bytes / (ici_bw * f_noc),
+        flops=flops, hbm_bytes=hbm_bytes,
+        collective_bytes=collective_bytes, chips=chips)
+
+
+def model_flops(n_params: int, tokens: int, *, train: bool = True) -> float:
+    """The 6·N·D (train) / 2·N·D (inference) convention."""
+    return (6.0 if train else 2.0) * n_params * tokens
+
+
+# ---------------------------------------------------------------------------
+# Paper-claims engine: CHStone accelerator tiles on the 4x4 SoC
+# ---------------------------------------------------------------------------
+
+
+# Per-accelerator serialized wire-interface share w, calibrated so that
+# gain(K) = 1 / ((1-w)/K + w) reproduces each accelerator's measured
+# Table-I throughput gains.  K replicas parallelize compute AND the
+# overlappable stream latency (each replica is an independent engine
+# behind the AXI bridge); only the tile's shared NoC interface serializes.
+WIRE_SHARE = {
+    "adpcm": 0.0005,    # strongly compute-bound: gains ~K (1.97x / 3.86x)
+    "dfsin": 0.003,     # compute-bound (1.97x / 3.76x)
+    "gsm": 0.035,       # mixed (1.93x / 3.62x)
+    "dfadd": 0.12,      # memory-bound (1.83x / 2.83x)
+    "dfmul": 0.155,     # memory-bound (1.73x / 3.00x)
+}
+
+
+@dataclass(frozen=True)
+class AccelWorkload:
+    """One CHStone accelerator processing a data stream.
+
+    ``ai`` (arithmetic intensity, ops/byte) separates compute-bound (adpcm,
+    dfsin) from memory-bound (dfadd, dfmul) accelerators, as the paper
+    observed empirically.  ``base_mbps`` anchors absolute throughput to
+    Table I so reproduced numbers are comparable.
+    """
+    name: str
+    base_mbps: float
+    ai: float
+    replication: int = 1
+
+    @property
+    def compute_bound(self) -> bool:
+        return self.ai >= 8.0
+
+    @property
+    def wire_share(self) -> float:
+        if self.name in WIRE_SHARE:
+            return WIRE_SHARE[self.name]
+        return 0.01 if self.compute_bound else 0.14
+
+
+@dataclass
+class SoCPerfModel:
+    """The paper's SoC: accelerator tiles + TG tiles + MEM on a 4x4 NoC,
+    five frequency islands.
+
+    Service-time model per accelerator tile:
+        t(K, f) = (1 - w) / (K · f_acc)  +  w · slow · hopf / f_noc
+    where ``w`` is the tile's serialized wire share (WIRE_SHARE), ``slow``
+    the NoC saturation factor (proportional sharing of the f_noc-scaled
+    link capacity with TG flows), and ``hopf`` a per-hop latency factor
+    (placement: A1 near MEM vs A2 far, paper Fig. 2).
+    """
+    noc: NocConfig = field(default_factory=lambda: NocConfig(4, 4))
+    mem_pos: Tuple[int, int] = (1, 0)
+    mem_service: float = 8.0        # units/cycle at f_noc=1 (Fig. 4)
+    tg_demand: float = 0.07         # per active TG core at f_tg=1 (Fig. 3)
+    tg_demand_fig4: float = 0.5     # Fig. 4 uses heavier TG streams
+    own_demand: float = 0.1
+    hop_latency_share: float = 0.03
+
+    def accel_throughput(self, wl: AccelWorkload, pos: Tuple[int, int],
+                         rates: Dict[str, float], n_tg: int) -> float:
+        """Throughput (MB/s) of one accelerator tile under contention."""
+        f_acc = max(rates.get("acc", 1.0), 1e-3)
+        f_noc = max(rates.get("noc_mem", 1.0), 1e-3)
+        f_tg = rates.get("tg", 1.0)
+        K = wl.replication
+        w = wl.wire_share
+
+        # NoC saturation: proportional sharing of the f_noc-scaled capacity
+        load = self.own_demand + self.tg_demand * f_tg * n_tg
+        cap = self.noc.link_bw * f_noc
+        slow = max(1.0, load / cap)
+        from repro.core.noc import hops
+        hopf = 1.0 + self.hop_latency_share * hops(self.noc, pos,
+                                                   self.mem_pos)
+
+        t = (1.0 - w) / (K * f_acc) + w * slow * hopf / f_noc
+        # normalize to Table I conditions (A1, K=1, f=1, no TG)
+        hopf0 = 1.0 + self.hop_latency_share * hops(self.noc, (1, 1),
+                                                    self.mem_pos)
+        t0 = (1.0 - w) + w * max(1.0, self.own_demand) * hopf0
+        return wl.base_mbps * t0 / t
+
+    def memory_traffic_mpkts(self, rates: Dict[str, float], n_tg: int,
+                             accel_positions: List[Tuple[int, int]],
+                             pkt_bytes: float = 64.0) -> float:
+        """Incoming memory traffic (Mpkt/s-shaped, normalized) — Fig. 4.
+
+        TG cores offer f_tg-scaled demand; memory-bound accelerators
+        saturate their stream path at low f_acc already, so traffic is
+        *almost independent of f_acc* — the paper's headline observation.
+        """
+        f_noc = rates.get("noc_mem", 1.0)
+        f_tg = rates.get("tg", 1.0)
+        f_acc = rates.get("acc", 1.0)
+        mem_cap = self.mem_service * f_noc
+        tg_offer = self.tg_demand_fig4 * f_tg * n_tg
+        acc_offer = sum(min(1.0, 5.0 * f_acc) * min(1.0, f_noc)
+                        for _ in accel_positions)
+        return min(mem_cap, tg_offer + acc_offer)
+
+
+def _default_tg_positions(noc: NocConfig, mem: Tuple[int, int],
+                          skip: Tuple[int, int]) -> List[Tuple[int, int]]:
+    out = []
+    for r in range(noc.rows):
+        for c in range(noc.cols):
+            if (r, c) in (mem, skip, (0, 0), (0, 3), (1, 1)):
+                continue
+            out.append((r, c))
+    return out

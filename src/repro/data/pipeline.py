@@ -1,0 +1,93 @@
+"""Deterministic, resumable, sharded synthetic data pipeline (the IO tile).
+
+Production framing without external deps: a counter-based PRNG token stream
+(threefry on (seed, step, shard)) means batch ``i`` is a pure function of
+the config — any host can regenerate any step, so
+
+* resume-after-failure is exact (no data-order drift),
+* elastic rescaling re-partitions future steps with no coordination,
+* every data-parallel shard draws a disjoint stream slice.
+
+A real deployment swaps :class:`SyntheticLM` for a tokenized corpus reader
+with the same ``batch_at(step)`` contract; everything downstream (trainer,
+checkpoint metadata, fault recovery) only relies on the contract.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Dict, Iterator, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    vocab_size: int = 32_000
+    seq_len: int = 1024
+    global_batch: int = 8
+    modality: str = "text"        # text | vision | audio
+    d_model: int = 0              # for embedding-input modalities
+
+
+class SyntheticLM:
+    """Markov-ish synthetic LM stream: tokens have local structure (so the
+    loss actually decreases) but are cheap to generate on the fly."""
+
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+
+    def batch_at(self, step: int, *, shard: int = 0, n_shards: int = 1
+                 ) -> Dict[str, np.ndarray]:
+        """The canonical contract: batch for ``step``, host-shard ``shard``."""
+        cfg = self.cfg
+        assert cfg.global_batch % n_shards == 0
+        b_local = cfg.global_batch // n_shards
+        rng = np.random.default_rng(
+            np.uint64(cfg.seed) * np.uint64(1_000_003)
+            + np.uint64(step) * np.uint64(65_537) + np.uint64(shard))
+        # structured stream: token_{t+1} = (a*token_t + noise) % V
+        base = rng.integers(0, cfg.vocab_size, size=(b_local, 1))
+        steps = rng.integers(0, 17, size=(b_local, cfg.seq_len))
+        toks = (base + np.cumsum(steps, axis=1)) % cfg.vocab_size
+        toks = toks.astype(np.int32)
+        out: Dict[str, np.ndarray] = {
+            "tokens": toks[:, :-1].copy() if cfg.seq_len > 1 else toks,
+            "labels": toks[:, 1:].copy() if cfg.seq_len > 1 else toks,
+        }
+        if cfg.modality in ("vision", "audio") and cfg.d_model:
+            # stub frontend: precomputed patch/frame embeddings (assignment)
+            emb = rng.standard_normal(
+                (b_local, out["tokens"].shape[1], cfg.d_model)).astype(np.float32)
+            out["embeds"] = (emb * 0.02).astype(np.float32)
+        return out
+
+    def __iter__(self) -> Iterator[Dict[str, np.ndarray]]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def for_arch(arch: ArchConfig, shape: ShapeConfig, seed: int = 0
+             ) -> SyntheticLM:
+    return SyntheticLM(DataConfig(
+        seed=seed, vocab_size=arch.vocab_size,
+        seq_len=shape.seq_len + 1, global_batch=shape.global_batch,
+        modality=arch.modality, d_model=arch.d_model))
+
+
+def device_put_batch(batch: Dict[str, np.ndarray], mesh, data_axes
+                     ) -> Dict[str, jax.Array]:
+    """Place a host batch sharded over the data axes of the mesh."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    out = {}
+    for k, v in batch.items():
+        spec = P(data_axes) if v.ndim >= 1 else P()
+        out[k] = jax.device_put(v, NamedSharding(mesh, spec))
+    return out

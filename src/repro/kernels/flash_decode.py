@@ -1,0 +1,109 @@
+"""Pallas TPU flash-decode: split-KV single-token attention.
+
+The decode cells are memory-bound on the KV sweep (§Roofline): one query
+token attends a W-long cache.  Flash-decoding parallelizes the SWEEP:
+
+* grid = (batch·kv_heads, kv_splits); each step streams one (KB, hd) cache
+  tile HBM→VMEM exactly once and maintains online-softmax partials in VMEM
+  scratch across splits — on TPU the grid's last dim iterates sequentially
+  per core, so the scratch carry is free, and multiple (b, h) programs fill
+  the cores.
+* the G query heads of a kv group ride along in VREGs ((G, hd) q tile) —
+  the cache tile is read once for all G heads (GQA's memory win realized).
+* masking: positions beyond ``pos`` (unwritten ring slots) are dropped via
+  the kpos tile, same contract as the prefill kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *, scale: float, window: int,
+                   nk: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    qpos = qpos_ref[0]                        # scalar-ish (1,) i32
+    kpos = kpos_ref[0]                        # (KB,) i32
+    q = q_ref[0].astype(jnp.float32)          # (G, hd)
+    k = k_ref[0].astype(jnp.float32)          # (KB, hd)
+    v = v_ref[0].astype(jnp.float32)          # (KB, hd_v)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    mask = kpos[None, :] <= qpos[0]           # (G, KB) broadcast
+    if window:
+        mask = mask & ((qpos[0] - kpos[None, :]) < window)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+    p = jnp.where(mask, jnp.exp(s - m_new[:, None]), 0.0)
+    corr = jnp.exp(jnp.minimum(m_prev - m_new, 0.0))
+    l_ref[:, 0] = l_ref[:, 0] * corr + jnp.sum(p, axis=-1)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[:, 0] = m_new
+
+    @pl.when(j == nk - 1)
+    def _finish():
+        l = jnp.maximum(l_ref[:, 0], 1e-30)
+        o_ref[0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode_pallas(q, cache_k, cache_v, qpos, kpos, *, scale: float,
+                        window: int = 0, kv_block: int = 512,
+                        interpret: bool = True):
+    """q: (B,KV,G,hd); cache_k: (B,W,KV,hd); cache_v: (B,W,KV,hd_v);
+    qpos: (B,) i32 current positions; kpos: (B,W) i32 absolute slot
+    positions (future/unwritten slots must exceed qpos).
+    Returns (B,KV,G,hd_v)."""
+    B, KV, G, hd = q.shape
+    W = cache_k.shape[1]
+    hd_v = cache_v.shape[-1]
+    KB = min(kv_block, W)
+    assert W % KB == 0, (W, KB)
+    nk = W // KB
+
+    qf = q.reshape(B * KV, G, hd)
+    kf = cache_k.transpose(0, 2, 1, 3).reshape(B * KV, W, hd)
+    vf = cache_v.transpose(0, 2, 1, 3).reshape(B * KV, W, hd_v)
+    qpe = jnp.repeat(qpos, KV).reshape(B * KV, 1)
+    kpe = jnp.repeat(kpos[:, None, :], KV, 1).reshape(B * KV, W)
+
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               nk=nk)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B * KV, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda h, j: (h, 0)),          # qpos
+            pl.BlockSpec((1, KB), lambda h, j: (h, j)),         # kpos
+            pl.BlockSpec((1, G, hd), lambda h, j: (h, 0, 0)),   # q
+            pl.BlockSpec((1, KB, hd), lambda h, j: (h, j, 0)),  # k tile
+            pl.BlockSpec((1, KB, hd_v), lambda h, j: (h, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, hd_v), lambda h, j: (h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * KV, G, hd_v), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd_v), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qpe, kpe, qf, kf, vf)
+    return out.reshape(B, KV, G, hd_v)

@@ -1,0 +1,69 @@
+"""Pallas TPU kernel: fused RMSNorm -> gated-MLP first half.
+
+Computes ``h = act(rmsnorm(x) @ Wg) * (rmsnorm(x) @ Wu)`` in one pass:
+
+* grid = (token_tiles, ff_tiles); each step loads one (TB, d) token tile
+  and one (d, FB) slice of each weight — the normalized activations never
+  round-trip to HBM between the norm and the two matmuls (on an unfused
+  path that's 3x the activation traffic).
+* the norm is recomputed per ff tile — O(TB·d) VPU work traded against
+  O(TB·d) HBM writes + reads, a >10x win at the HBM/VPU speed ratio.
+* both matmuls hit the MXU with d as the (128-aligned) contraction dim.
+
+The down-projection (h @ Wo) stays outside: XLA already fuses it with the
+residual add, and keeping it out keeps the kernel's VMEM footprint at
+TB·d + 2·d·FB + TB·FB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _fused_kernel(x_ref, scale_ref, wg_ref, wu_ref, o_ref, *, act: str,
+                  eps: float):
+    x = x_ref[...].astype(jnp.float32)                     # (TB, d)
+    scale = scale_ref[...].astype(jnp.float32)             # (d,)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    xn = x * jax.lax.rsqrt(var + eps) * (1.0 + scale)[None, :]
+    wg = wg_ref[...].astype(jnp.float32)                   # (d, FB)
+    wu = wu_ref[...].astype(jnp.float32)
+    g = jax.lax.dot_general(xn, wg, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    u = jax.lax.dot_general(xn, wu, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if act == "gelu":
+        g = jax.nn.gelu(g, approximate=True)
+    else:
+        g = jax.nn.silu(g)
+    o_ref[...] = (g * u).astype(o_ref.dtype)
+
+
+def fused_rmsnorm_mlp_pallas(x, scale, wg, wu, *, act: str = "silu",
+                             eps: float = 1e-5, token_block: int = 256,
+                             ff_block: int = 512, interpret: bool = True):
+    """x: (N, d); scale: (d,); wg/wu: (d, F).  Returns (N, F) = gated h."""
+    N, d = x.shape
+    F = wg.shape[-1]
+    TB = min(token_block, N)
+    FB = min(ff_block, F)
+    assert N % TB == 0 and F % FB == 0, (N, TB, F, FB)
+
+    kernel = functools.partial(_fused_kernel, act=act, eps=eps)
+    return pl.pallas_call(
+        kernel,
+        grid=(N // TB, F // FB),
+        in_specs=[
+            pl.BlockSpec((TB, d), lambda t, f: (t, 0)),
+            pl.BlockSpec((d,), lambda t, f: (0,)),
+            pl.BlockSpec((d, FB), lambda t, f: (0, f)),
+            pl.BlockSpec((d, FB), lambda t, f: (0, f)),
+        ],
+        out_specs=pl.BlockSpec((TB, FB), lambda t, f: (t, f)),
+        out_shape=jax.ShapeDtypeStruct((N, F), x.dtype),
+        interpret=interpret,
+    )(x, scale, wg, wu)

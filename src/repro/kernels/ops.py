@@ -1,0 +1,106 @@
+"""jit'd public wrappers for the Pallas kernels.
+
+Forward runs the kernel; backward (where models train through these ops)
+falls back to the autodiff of the pure-jnp oracle via ``jax.custom_vjp`` —
+correct gradients today, swap in hand-written backward kernels without
+touching call sites.
+
+``interpret`` defaults to True because this container is CPU-only; a TPU
+deployment flips `INTERPRET` (or passes interpret=False) and the same
+BlockSpecs compile to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as REF
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.flash_decode import flash_decode_pallas
+from repro.kernels.fused_mlp import fused_rmsnorm_mlp_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+INTERPRET = True      # CPU container: validate kernels in interpret mode
+
+
+# ----------------------------------------------------------------- attention
+@partial(jax.custom_vjp, nondiff_argnums=(5, 6))
+def flash_attention(q, k, v, qpos, kpos, window: int = 0,
+                    scale: float = 1.0):
+    return flash_attention_pallas(q, k, v, qpos, kpos, scale=scale,
+                                  window=window, interpret=INTERPRET)
+
+
+def _fa_fwd(q, k, v, qpos, kpos, window, scale):
+    out = flash_attention(q, k, v, qpos, kpos, window, scale)
+    return out, (q, k, v, qpos, kpos)
+
+
+def _fa_bwd(window, scale, res, g):
+    q, k, v, qpos, kpos = res
+    _, vjp = jax.vjp(
+        lambda q, k, v: REF.flash_attention_ref(q, k, v, qpos, kpos,
+                                                scale=scale, window=window),
+        q, k, v)
+    dq, dk, dv = vjp(g)
+    return dq, dk, dv, None, None
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+# ----------------------------------------------------------------- SSD scan
+@partial(jax.custom_vjp, nondiff_argnums=(6,))
+def ssd_scan(xs, dt, A, Bm, Cm, D, chunk: int = 256):
+    return ssd_scan_pallas(xs, dt, A, Bm, Cm, D, chunk=chunk,
+                           interpret=INTERPRET)
+
+
+def _ssd_fwd(xs, dt, A, Bm, Cm, D, chunk):
+    out = ssd_scan(xs, dt, A, Bm, Cm, D, chunk)
+    return out, (xs, dt, A, Bm, Cm, D)
+
+
+def _ssd_bwd(chunk, res, g):
+    xs, dt, A, Bm, Cm, D = res
+    _, vjp = jax.vjp(
+        lambda *a: REF.ssd_scan_ref(*a, chunk=chunk), xs, dt, A, Bm, Cm, D)
+    return vjp(g)
+
+
+ssd_scan.defvjp(_ssd_fwd, _ssd_bwd)
+
+
+# ----------------------------------------------------------------- fused MLP
+@partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def fused_rmsnorm_mlp(x, scale, wg, wu, act: str = "silu",
+                      eps: float = 1e-5):
+    return fused_rmsnorm_mlp_pallas(x, scale, wg, wu, act=act, eps=eps,
+                                    interpret=INTERPRET)
+
+
+def _fm_fwd(x, scale, wg, wu, act, eps):
+    return fused_rmsnorm_mlp(x, scale, wg, wu, act, eps), (x, scale, wg, wu)
+
+
+def _fm_bwd(act, eps, res, g):
+    x, scale, wg, wu = res
+    _, vjp = jax.vjp(
+        lambda *a: REF.fused_rmsnorm_mlp_ref(*a, act=act, eps=eps),
+        x, scale, wg, wu)
+    return vjp(g)
+
+
+fused_rmsnorm_mlp.defvjp(_fm_fwd, _fm_bwd)
+
+
+# ---------------------------------------------------------------- decode
+def flash_decode(q, cache_k, cache_v, qpos, kpos, window: int = 0,
+                 scale: float = 1.0, kv_block: int = 512):
+    """Split-KV decode attention (forward-only: serving path)."""
+    return flash_decode_pallas(q, cache_k, cache_v, qpos, kpos, scale=scale,
+                               window=window, kv_block=kv_block,
+                               interpret=INTERPRET)

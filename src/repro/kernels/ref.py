@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+
+def flash_attention_ref(q, k, v, qpos, kpos, *, scale: float,
+                        window: int = 0):
+    """Same contract as kernels.flash_attention.flash_attention_pallas."""
+    return L.attention_naive(q, k, v, qpos, kpos, window, scale)
+
+
+def ssd_scan_ref(xs, dt, A, Bm, Cm, D, *, chunk: int = 256):
+    """Same contract as kernels.ssd_scan.ssd_scan_pallas."""
+    return M.ssd_scan_ref(xs, dt, A, Bm, Cm, D, chunk)
+
+
+def fused_rmsnorm_mlp_ref(x, scale, wg, wu, *, act: str = "silu",
+                          eps: float = 1e-5):
+    xn = L.rms_norm(x, scale, eps)
+    g = xn.astype(jnp.float32) @ wg.astype(jnp.float32)
+    u = xn.astype(jnp.float32) @ wu.astype(jnp.float32)
+    g = jax.nn.gelu(g, approximate=True) if act == "gelu" else jax.nn.silu(g)
+    return (g * u).astype(x.dtype)
+
+
+def flash_decode_ref(q, cache_k, cache_v, qpos, kpos, *, scale: float,
+                     window: int = 0):
+    """Oracle for the split-KV decode kernel via attention_naive."""
+    B, KV, G, hd = q.shape
+    q5 = q[:, None, :, :, :]                      # (B,1,KV,G,hd)
+    qp = qpos[:, None]
+    out = L.attention_naive(q5, cache_k, cache_v, qp, kpos, window, scale)
+    return out[:, 0]                              # (B,KV,G,hd_v)

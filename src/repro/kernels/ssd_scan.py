@@ -1,0 +1,112 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+TPU-native layout (DESIGN.md hardware-adaptation): the GPU SSD kernel
+(Dao & Gu) uses warp-level scans; the TPU form is block matmuls + a
+sequential chunk walk:
+
+* grid = (batch, heads, chunks) with the chunk dim innermost; the running
+  state h (st x hd) lives in VMEM scratch across chunk steps — HBM sees
+  each token tile exactly once.
+* the intra-chunk quadratic term is (Q x Q) x (Q x hd) MXU matmuls with
+  Q = 128/256 (lane-aligned); decay matrices are built from within-chunk
+  cumulative sums in f32.
+* the inter-chunk recurrence h <- h * exp(sum log a) + S_c is elementwise
+  in VMEM — the serialized fraction is O(st*hd) per chunk vs O(Q^2*hd)
+  parallel work, i.e. MXU utilization grows with Q.
+
+Outputs both y and the final state (prefill needs the state for the decode
+cache).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, A_ref, B_ref, C_ref, D_ref, y_ref, hout_ref,
+                h_ref, *, nc: int):
+    c = pl.program_id(2)
+
+    @pl.when(c == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)       # (Q, hd)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)        # (Q,)
+    A = A_ref[0]                                    # scalar
+    Bm = B_ref[0].astype(jnp.float32)               # (Q, st)
+    Cm = C_ref[0].astype(jnp.float32)               # (Q, st)
+    D = D_ref[0]
+
+    log_a = dt * A                                  # (Q,) <= 0
+    la = jnp.cumsum(log_a)                          # within-chunk
+    la_last = la[-1]
+
+    # intra-chunk: att[i,j] = (C_i . B_j) * exp(la_i - la_j) * dt_j, i >= j
+    Q = x.shape[0]
+    scores = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+    diff = la[:, None] - la[None, :]
+    causal = jnp.tril(jnp.ones((Q, Q), jnp.bool_))
+    att = jnp.where(causal, scores * jnp.exp(diff) * dt[None, :], 0.0)
+    y = jax.lax.dot_general(att, x, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+
+    # inter-chunk: contribution of the carried state to each position
+    h = h_ref[...]                                  # (st, hd) f32
+    y += jnp.exp(la)[:, None] * jax.lax.dot_general(
+        Cm, h, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0, :] = (y + x * D).astype(y_ref.dtype)
+
+    # state update: h <- h * exp(la_last) + sum_j w_j B_j x_j^T
+    w = jnp.exp(la_last - la) * dt                  # (Q,)
+    S_c = jax.lax.dot_general(Bm * w[:, None], x, (((0,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32)
+    h_ref[...] = h * jnp.exp(la_last) + S_c
+
+    @pl.when(c == nc - 1)
+    def _finish():
+        hout_ref[0, 0] = h_ref[...].astype(hout_ref.dtype)
+
+
+def ssd_scan_pallas(xs, dt, A, Bm, Cm, D, *, chunk: int = 256,
+                    interpret: bool = True):
+    """xs:(B,L,nh,hd) f32; dt:(B,L,nh) f32 (post-softplus); A:(nh,) f32;
+    Bm/Cm:(B,L,st) f32 (g=1); D:(nh,).
+    Returns (y:(B,L,nh,hd) f32, h_final:(B,nh,st,hd) f32)."""
+    B, L, nh, hd = xs.shape
+    st = Bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    kernel = functools.partial(_ssd_kernel, nc=nc)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=(B, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, Q, 1, hd), lambda b, h, c: (b, c, h, 0)),  # x
+            pl.BlockSpec((1, Q, 1), lambda b, h, c: (b, c, h)),         # dt
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),                   # A
+            pl.BlockSpec((1, Q, st), lambda b, h, c: (b, c, 0)),        # B
+            pl.BlockSpec((1, Q, st), lambda b, h, c: (b, c, 0)),        # C
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),                   # D
+        ],
+        out_specs=[
+            pl.BlockSpec((1, Q, 1, hd), lambda b, h, c: (b, c, h, 0)),  # y
+            pl.BlockSpec((1, 1, st, hd), lambda b, h, c: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, L, nh, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, nh, st, hd), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((st, hd), jnp.float32)],
+        interpret=interpret,
+    )(xs, dt, A, Bm, Cm, D)
+    return y, hout

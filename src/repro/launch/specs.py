@@ -1,0 +1,198 @@
+"""Abstract input/state specs + shardings for every dry-run cell.
+
+``input_specs(arch, shape)`` returns ShapeDtypeStruct stand-ins for every
+input of the cell's step function — weak-type-correct, shardable, zero
+allocation.  ``cell_shardings`` mirrors each tree with NamedShardings.
+
+All cells feed discrete tokens: the [vlm]/[audio] archs (chameleon,
+musicgen) are early-fusion models over VQ/EnCodec *tokens*, so the modality
+frontend stub is exactly "tokens arrive from an external tokenizer"
+(DESIGN.md §Arch-applicability; the continuous-``embeds`` path exists in
+the LM API and is exercised by unit tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.replication import data_axes, merged_rules
+from repro.core.tiles import TilePlan, default_plan
+from repro.models.params import abstract_params, pspecs_for
+from repro.models.transformer import LM
+from repro.optim import adamw
+
+SDS = jax.ShapeDtypeStruct
+
+
+# ---------------------------------------------------------------------------
+# Abstract trees
+# ---------------------------------------------------------------------------
+
+
+def abstract_opt_state(params_abs):
+    f32 = lambda p: SDS(p.shape, jnp.float32)
+    return adamw.AdamWState(step=SDS((), jnp.int32),
+                            mu=jax.tree_util.tree_map(f32, params_abs),
+                            nu=jax.tree_util.tree_map(f32, params_abs))
+
+
+def abstract_batch(cfg: ArchConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    return {"tokens": SDS((B, S), jnp.int32),
+            "labels": SDS((B, S), jnp.int32)}
+
+
+def abstract_decode_inputs(lm: LM, shape: ShapeConfig):
+    """(cache, tokens) for one serve_step against a seq_len context."""
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(lambda: lm.init_cache(B, S))
+    tokens = SDS((B, 1), jnp.int32)
+    return cache, tokens
+
+
+def abstract_prefill_tokens(shape: ShapeConfig):
+    return SDS((shape.global_batch, shape.seq_len), jnp.int32)
+
+
+def abstract_counters(plan: TilePlan):
+    from repro.core.monitor import init_counters
+    return jax.eval_shape(lambda: init_counters(plan))
+
+
+# ---------------------------------------------------------------------------
+# Shardings
+# ---------------------------------------------------------------------------
+
+
+def _dp(mesh: Mesh, extra: Tuple[str, ...] = ()) -> Tuple[str, ...]:
+    """Batch axes: (pod, data) [+ replica on an MRA mesh: the AXI bridge
+    splits the stream across tile replicas] [+ any strategy extras]."""
+    base = ("pod", "data", "replica") + tuple(extra)
+    return tuple(a for a in base if a in mesh.axis_names)
+
+
+def _model_axis(mesh: Mesh):
+    """Axis for model-dim sharding of activations/caches.  On an MRA mesh
+    'replica' carries the batch stream (AXI bridge), so only 'shard' is
+    available for the model dims."""
+    names = mesh.axis_names
+    if "model" in names:
+        return "model"
+    if "shard" in names:           # MRA-factored mesh
+        return "shard"
+    return None
+
+
+def _axsize(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        n = 1
+        for a in ax:
+            n *= mesh.shape[a]
+        return n
+    return mesh.shape[ax]
+
+
+def batch_shardings(batch_abs, mesh: Mesh, extra: Tuple[str, ...] = ()):
+    dp = _dp(mesh, extra)
+
+    def one(v):
+        if getattr(v, "ndim", 0) < 1:
+            return NamedSharding(mesh, P())
+        # drop trailing axes until the batch dim divides (e.g. multi-pod
+        # FSDP with global_batch < chips falls back to DP(pod,data) + TP)
+        axes = list(dp)
+        while axes:
+            sz = int(np.prod([mesh.shape[a] for a in axes]))
+            if v.shape[0] % sz == 0:
+                return NamedSharding(mesh, P(tuple(axes)))
+            axes.pop()
+        return NamedSharding(mesh, P())
+    return jax.tree_util.tree_map(one, batch_abs)
+
+
+def cache_shardings(lm: LM, cache_abs, mesh: Mesh):
+    """Explicit shardings mirroring LM.init_cache structure.
+
+    Policy: batch over (pod,data) when divisible; the KV window (sequence)
+    axis over model (sequence-parallel decode attention — flash-decoding's
+    layout); SSM state heads over model.
+    """
+    cfg = lm.cfg
+    dp = _dp(mesh)
+    dp_sz = int(np.prod([mesh.shape[a] for a in dp])) if dp else 1
+    mdl = _model_axis(mesh)
+    m_sz = _axsize(mesh, mdl)
+
+    def attn_cache_spec(a, stacked_axes: int):
+        # (*stack, B, W, *tail)
+        b_ax, w_ax = stacked_axes, stacked_axes + 1
+        ent = [None] * a.ndim
+        if dp and a.shape[b_ax] % dp_sz == 0 and a.shape[b_ax] > 1:
+            ent[b_ax] = dp
+        if mdl and a.shape[w_ax] % m_sz == 0:
+            ent[w_ax] = mdl
+        return NamedSharding(mesh, P(*ent))
+
+    def ssm_cache_spec(a, key: str):
+        # conv_*: (L,B,c-1,ch)   state: (L,B,nh,st,hd)
+        ent = [None] * a.ndim
+        if dp and a.shape[1] % dp_sz == 0 and a.shape[1] > 1:
+            ent[1] = dp
+        if key == "state":
+            if mdl and a.shape[2] % m_sz == 0:
+                ent[2] = mdl
+        else:
+            if mdl and a.shape[-1] % m_sz == 0:
+                ent[-1] = mdl
+        return NamedSharding(mesh, P(*ent))
+
+    out: Dict[str, Any] = {}
+    for k, v in cache_abs.items():
+        if k == "pos":
+            out[k] = NamedSharding(mesh, P())
+        elif k == "prelude":
+            out[k] = [tuple(attn_cache_spec(a, 0) for a in pair) for pair in v]
+        elif k == "shared_attn":
+            out[k] = jax.tree_util.tree_map(
+                lambda a: attn_cache_spec(a, 1), v)
+        elif k == "blocks":
+            if cfg.family in ("ssm", "hybrid"):
+                out[k] = {kk: ssm_cache_spec(a, kk) for kk, a in v.items()}
+            else:
+                out[k] = tuple(attn_cache_spec(a, 1) for a in v)
+        else:                                            # pragma: no cover
+            out[k] = jax.tree_util.tree_map(
+                lambda a: NamedSharding(mesh, P()), v)
+    return out
+
+
+def param_shardings(lm: LM, mesh: Mesh, plan: Optional[TilePlan] = None,
+                    rules_override: Optional[Dict] = None):
+    plan = plan or default_plan(lm.cfg)
+    rules = merged_rules(plan, mesh)
+    if rules_override:
+        rules.update(rules_override)
+    specs = lm.param_specs()
+    pspecs = pspecs_for(specs, rules, mesh)
+    return jax.tree_util.tree_map(
+        lambda ps: NamedSharding(mesh, ps), pspecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_shardings(param_sh, mesh: Mesh):
+    return adamw.AdamWState(step=NamedSharding(mesh, P()),
+                            mu=param_sh, nu=param_sh)
+
+
+def counter_shardings(counters_abs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda a: NamedSharding(mesh, P()), counters_abs)

@@ -1,0 +1,71 @@
+"""Training launcher: ``python -m repro.launch.train --arch <id> [...]``.
+
+Runs a real end-to-end training job on the available devices (CPU-sized
+reduced configs by default; pass --full to use the published config, which
+is only practical on a real pod).  Wires the whole Vespa loop: data
+pipeline -> jitted step -> monitor -> DFS actuator -> async checkpoints ->
+fault supervisor.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.base import ShapeConfig
+from repro.models.layers import AttnOptions
+from repro.optim import adamw
+from repro.runtime.fault import FaultSupervisor
+from repro.runtime.train import TrainConfig, Trainer
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="h2o-danube-1.8b",
+                    choices=ASSIGNED_ARCHS)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--lr", type=float, default=6e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/vespa_train")
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full published config (pod-scale!)")
+    ap.add_argument("--mesh", default="none",
+                    help="'none' (local) or 'host' (all local devices as DP)")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    if not args.full:
+        cfg = cfg.reduced()
+    mesh = None
+    if args.mesh == "host":
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+
+    shape = ShapeConfig("cli", args.seq_len, args.batch, "train")
+    tc = TrainConfig(log_every=10, ckpt_every=args.ckpt_every,
+                     ckpt_dir=args.ckpt_dir, monitor_every=10,
+                     opt=adamw.AdamWConfig(lr=args.lr, warmup_steps=10,
+                                           total_steps=args.steps))
+    tr = Trainer(cfg, shape, mesh=mesh, tc=tc,
+                 lm_kwargs=dict(opts=AttnOptions(backend="chunked",
+                                                 q_block=64, kv_block=64),
+                                remat=True))
+    sup = FaultSupervisor(tr)
+    if args.resume and tr.store().latest_step() is not None:
+        tr.restore()
+        print(f"resumed from step {tr.step}")
+
+    print(f"training {args.arch} ({cfg.n_params()/1e6:.1f}M params) "
+          f"for {args.steps} steps on {len(jax.devices())} device(s)")
+    sup.run_supervised(max(args.steps - tr.step, 0))
+    tr.save(async_=False)
+    print(tr.monitor.table())
+    print(f"done at step {tr.step}; checkpoint in {args.ckpt_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,473 @@
+"""Core transformer layers: norms, RoPE, GQA/MQA/MLA attention, gated MLPs.
+
+All functions are pure; parameters are dict pytrees built from
+:mod:`repro.models.params` specs.  Attention exposes three backends:
+
+* ``naive``   — full score matrix (small shapes, oracle for tests),
+* ``chunked`` — lax.scan online-softmax flash (bounded memory, XLA-only),
+* ``pallas``  — the Pallas flash kernel from :mod:`repro.kernels`.
+
+The chunked backend has two schedules (paper-faithful baseline vs the
+"folded-triangle" beyond-paper optimization that halves causal FLOPs) —
+selected by ``AttnOptions.folded``; §Perf in EXPERIMENTS.md measures both.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models.params import spec, shard_activation
+
+DATA = ("pod", "data")     # batch sharding axes (filtered to the live mesh)
+MODEL = "model"            # intra-tile model fabric ("shard" on MRA meshes)
+MODEL_FULL = "__model_full__"   # full model fabric (K=1 tiles, e.g. vocab)
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rms_norm_spec(d: int):
+    return spec((d,), ("norm",), init="zeros")
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                         # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    sin, cos = jnp.sin(ang), jnp.cos(ang)
+    sin = sin[..., None, :]                               # broadcast over heads
+    cos = cos[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP (SwiGLU / GeGLU)
+# ---------------------------------------------------------------------------
+
+
+def mlp_spec(d: int, d_ff: int):
+    return {
+        "wi_gate": spec((d, d_ff), ("embed", "ff")),
+        "wi_up": spec((d, d_ff), ("embed", "ff")),
+        "wo": spec((d_ff, d), ("ff", "embed"), init="small"),
+    }
+
+
+def _act(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)
+
+
+def mlp_apply(p: Dict, x: jax.Array, act: str) -> jax.Array:
+    gate = _act(x @ p["wi_gate"], act)
+    h = gate * (x @ p["wi_up"])
+    h = shard_activation(h, DATA, None, MODEL)
+    return h @ p["wo"]
+
+
+# ---------------------------------------------------------------------------
+# Attention options & masking
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class AttnOptions:
+    backend: str = "chunked"     # naive | chunked | pallas
+    q_block: int = 512
+    kv_block: int = 512
+    folded: bool = False         # folded-triangle causal schedule (beyond-paper)
+
+
+def _window_mask(qpos: jax.Array, kpos: jax.Array, window: int) -> jax.Array:
+    """Causal (+ optional sliding window) mask: (..., Sq, Sk) boolean."""
+    m = kpos[..., None, :] <= qpos[..., :, None]
+    if window:
+        m &= (qpos[..., :, None] - kpos[..., None, :]) < window
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Score computation (GQA-aware)
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,Sq,KV,G,hd), k: (B,Sk,KV,hd) -> (B,KV,G,Sq,Sk)."""
+    return jnp.einsum("bqkgh,bskh->bkgqs", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def _gqa_out(w: jax.Array, v: jax.Array) -> jax.Array:
+    """w: (B,KV,G,Sq,Sk), v: (B,Sk,KV,hd) -> (B,Sq,KV,G,hd)."""
+    return jnp.einsum("bkgqs,bskh->bqkgh", w, v.astype(jnp.float32))
+
+
+def attention_naive(q, k, v, qpos, kpos, window: int, scale: float) -> jax.Array:
+    """Oracle attention.  q:(B,Sq,KV,G,hd) k,v:(B,Sk,KV,hd)."""
+    s = _gqa_scores(q, k) * scale
+    mask = _window_mask(qpos, kpos, window)               # (B,Sq,Sk)
+    s = jnp.where(mask[:, None, None, :, :], s, -1e30)
+    w = jax.nn.softmax(s, axis=-1)
+    return _gqa_out(w, v).astype(q.dtype)
+
+
+def _online_block(carry, qb, kb, vb, mask, scale):
+    """One online-softmax accumulation step.
+
+    carry = (acc (B,KV,G,Tq,hd) f32, m (B,KV,G,Tq) f32, l (B,KV,G,Tq) f32)
+    """
+    acc, m, l = carry
+    mb = mask[:, None, None, :, :]
+    s = _gqa_scores(qb, kb) * scale                       # (B,KV,G,Tq,Tk) f32
+    s = jnp.where(mb, s, -1e30)
+    m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+    # zero fully-masked entries explicitly: exp(-1e30 - (-1e30)) == 1 trap
+    p = jnp.where(mb, jnp.exp(s - m_new[..., None]), 0.0)
+    corr = jnp.exp(jnp.minimum(m - m_new, 0.0))
+    l = l * corr + jnp.sum(p, axis=-1)
+    # accumulate in (B,KV,G,Tq,hd) layout (NOT attention_naive's output order)
+    pv = jnp.einsum("bkgqs,bskh->bkgqh", p, vb.astype(jnp.float32))
+    acc = acc * corr[..., None] + pv
+    return (acc, m_new, l)
+
+
+def attention_chunked(q, k, v, qpos, kpos, window: int, scale: float,
+                      opts: AttnOptions) -> jax.Array:
+    """Flash-style attention via lax.scan with online softmax.
+
+    Baseline schedule: every (q-block, kv-block) rectangle is computed and
+    masked (the paper-faithful analogue of a streaming accelerator that does
+    not skip work).  Folded schedule (opts.folded): q-blocks are paired
+    (i, T-1-i) so each scan step does exactly one useful block — causal FLOPs
+    drop ~2x (beyond-paper optimization, §Perf).
+    """
+    B, Sq, KV, G, hd_q = q.shape
+    hd = v.shape[-1]                      # accumulator dim (MLA: vh != qk hd)
+    hd_k = k.shape[-1]
+    Sk = k.shape[1]
+    QB = min(opts.q_block, Sq)
+    KB = min(opts.kv_block, Sk)
+    nq, nk = Sq // QB, Sk // KB
+    assert Sq % QB == 0 and Sk % KB == 0, (Sq, QB, Sk, KB)
+
+    qr = q.reshape(B, nq, QB, KV, G, hd_q)
+    kr = k.reshape(B, nk, KB, KV, hd_k)
+    vr = v.reshape(B, nk, KB, KV, hd)
+    qpr = qpos.reshape(B, nq, QB)
+    kpr = kpos.reshape(B, nk, KB)
+
+    def init_carry():
+        return (jnp.zeros((B, KV, G, QB, hd), jnp.float32),
+                jnp.full((B, KV, G, QB), -1e30, jnp.float32),
+                jnp.zeros((B, KV, G, QB), jnp.float32))
+
+    if not opts.folded:
+        def q_step(_, qi):
+            qb, qp = qi
+
+            def kv_step(carry, ki):
+                kb, vb, kp = ki
+                mask = _window_mask(qp, kp, window)
+                return _online_block(carry, qb, kb, vb, mask, scale), None
+
+            (acc, m, l), _ = jax.lax.scan(
+                kv_step, init_carry(),
+                (kr.swapaxes(0, 1), vr.swapaxes(0, 1), kpr.swapaxes(0, 1)))
+            out = (acc / jnp.maximum(l[..., None], 1e-30))
+            return None, out
+
+        _, outs = jax.lax.scan(q_step, None,
+                               (qr.swapaxes(0, 1), qpr.swapaxes(0, 1)))
+        # outs: (nq, B, KV, G, QB, hd) -> (B, Sq, KV, G, hd)
+        out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, KV, G, hd)
+        return out.astype(q.dtype)
+
+    # ---- folded-triangle schedule (requires pure causal, Sq == Sk grid) ----
+    assert nq == nk and nq % 2 == 0, "folded schedule needs even block grid"
+    half = nq // 2
+
+    def pair_step(_, pi):
+        i = pi                                   # low index; high = nq-1-i
+        qlo = jax.lax.dynamic_index_in_dim(qr, i, 1, keepdims=False)
+        qhi = jax.lax.dynamic_index_in_dim(qr, nq - 1 - i, 1, keepdims=False)
+        plo = jax.lax.dynamic_index_in_dim(qpr, i, 1, keepdims=False)
+        phi = jax.lax.dynamic_index_in_dim(qpr, nq - 1 - i, 1, keepdims=False)
+
+        def kv_step(carry, j):
+            (clo, chi) = carry
+            # low q-block consumes kv blocks 0..i (i+1 of them);
+            # high q-block consumes kv blocks 0..nq-1-i.  Step j in
+            # 0..nq serves low while j<=i else high at kv index j-(i+1)... —
+            # simpler equivalent: steps 0..i -> low@j ; steps i+1..nq -> high@(j-?)
+            serve_low = j <= i
+            kv_idx = jnp.where(serve_low, j, j - (i + 1))
+            kb = jax.lax.dynamic_index_in_dim(kr, kv_idx, 1, keepdims=False)
+            vb = jax.lax.dynamic_index_in_dim(vr, kv_idx, 1, keepdims=False)
+            kp = jax.lax.dynamic_index_in_dim(kpr, kv_idx, 1, keepdims=False)
+            qb = jnp.where(serve_low, qlo, qhi)
+            qp = jnp.where(serve_low, plo, phi)
+            mask = _window_mask(qp, kp, window)
+            merged = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(serve_low, a, b), clo, chi)
+            merged = _online_block(merged, qb, kb, vb, mask, scale)
+            clo = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(serve_low, b, a), clo, merged)
+            chi = jax.tree_util.tree_map(
+                lambda a, b: jnp.where(serve_low, a, b), chi, merged)
+            return (clo, chi), None
+
+        n_steps = nq + 1
+        (clo, chi), _ = jax.lax.scan(kv_step, (init_carry(), init_carry()),
+                                     jnp.arange(n_steps))
+        olo = clo[0] / jnp.maximum(clo[2][..., None], 1e-30)
+        ohi = chi[0] / jnp.maximum(chi[2][..., None], 1e-30)
+        return None, (olo, ohi)
+
+    _, (olos, ohis) = jax.lax.scan(pair_step, None, jnp.arange(half))
+    # olos: (half, B, KV, G, QB, hd) for q-blocks 0..half-1
+    # ohis: (half, B, KV, G, QB, hd) for q-blocks nq-1..half (descending)
+    outs = jnp.concatenate([olos, ohis[::-1]], axis=0)
+    out = outs.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq, KV, G, hd)
+    return out.astype(q.dtype)
+
+
+def attention_core(q, k, v, qpos, kpos, window: int, opts: AttnOptions,
+                   scale: Optional[float] = None) -> jax.Array:
+    """Dispatch over attention backends.  Shapes as in attention_naive."""
+    hd = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    if opts.backend == "pallas":
+        from repro.kernels import ops as kops
+        return kops.flash_attention(q, k, v, qpos, kpos, window=window,
+                                    scale=scale)
+    if opts.backend == "chunked" and q.shape[1] > opts.q_block:
+        return attention_chunked(q, k, v, qpos, kpos, window, scale, opts)
+    return attention_naive(q, k, v, qpos, kpos, window, scale)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (projections + rope + cache)
+# ---------------------------------------------------------------------------
+
+
+def gqa_spec(cfg: ArchConfig):
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": spec((d, H * hd), ("embed", "qkv")),
+        "wk": spec((d, KV * hd), ("embed", "kv")),
+        "wv": spec((d, KV * hd), ("embed", "kv")),
+        "wo": spec((H * hd, d), ("qkv", "embed"), init="small"),
+    }
+
+
+def gqa_project(p: Dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
+    """Project to rotated q,k and v.  x: (B,S,d) -> q:(B,S,KV,G,hd), k/v:(B,S,KV,hd)."""
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    G = H // KV
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, KV, hd)
+    v = (x @ p["wv"]).reshape(B, S, KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta).reshape(B, S, KV, G, hd)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def gqa_apply(p: Dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
+              opts: AttnOptions, return_cache: bool = False):
+    """Full-sequence (train/prefill) GQA attention."""
+    B, S, _ = x.shape
+    q, k, v = gqa_project(p, cfg, x, positions)
+    q = shard_activation(q, DATA, None, MODEL)
+    k = shard_activation(k, DATA, None, MODEL)
+    v = shard_activation(v, DATA, None, MODEL)
+    out = attention_core(q, k, v, positions, positions, cfg.sliding_window, opts)
+    out = out.reshape(B, S, cfg.n_heads * cfg.head_dim)
+    out = out @ p["wo"]
+    if return_cache:
+        return out, (k, v)
+    return out
+
+
+def gqa_decode(p: Dict, cfg: ArchConfig, x: jax.Array, cache_k: jax.Array,
+               cache_v: jax.Array, pos: jax.Array,
+               opts: AttnOptions) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Single-token decode with (ring-buffered when SWA) KV cache.
+
+    x: (B,1,d); cache_k/v: (B,W,KV,hd); pos: scalar int32 current position.
+    Returns (out (B,1,d), new_cache_k, new_cache_v).
+    """
+    B = x.shape[0]
+    KV, hd, H = cfg.n_kv_heads, cfg.head_dim, cfg.n_heads
+    W = cache_k.shape[1]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    q, k, v = gqa_project(p, cfg, x, positions)
+    slot = (pos % W).astype(jnp.int32)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
+    # key positions for ring buffer: absolute position stored in each slot
+    idx = jnp.arange(W, dtype=jnp.int32)
+    wraps = (pos // W).astype(jnp.int32)
+    kpos = jnp.where(idx <= slot, wraps * W + idx, (wraps - 1) * W + idx)
+    # unwritten slots get a FUTURE position so the causal mask rejects them
+    kpos = jnp.where(kpos >= 0, kpos, 1_000_000_000)
+    kpos = jnp.broadcast_to(kpos[None, :], (B, W))
+    window = cfg.sliding_window if cfg.sliding_window else 0
+    out = attention_core(q, cache_k, cache_v, positions, kpos, window,
+                         dataclasses.replace(opts, backend="naive"))
+    out = out.reshape(B, 1, H * hd) @ p["wo"]
+    return out, cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def mla_spec(cfg: ArchConfig):
+    d, H = cfg.d_model, cfg.n_heads
+    r, rope, nope, vh = cfg.kv_lora_rank, cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim
+    return {
+        "wq": spec((d, H * (nope + rope)), ("embed", "qkv")),
+        "w_dkv": spec((d, r + rope), ("embed", "kv_lora")),
+        "w_uk": spec((r, H * nope), ("kv_lora", "qkv")),
+        "w_uv": spec((r, H * vh), ("kv_lora", "qkv")),
+        "wo": spec((H * vh, d), ("qkv", "embed"), init="small"),
+        "kv_norm": rms_norm_spec(r),
+    }
+
+
+def _mla_qc(p, cfg, x, positions):
+    """Queries + compressed KV stream.  Returns q_nope,(B,S,H,nope) q_rope,
+    ckv (B,S,r), k_rope (B,S,rope)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    rope, nope, r = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.kv_lora_rank
+    q = (x @ p["wq"]).reshape(B, S, H, nope + rope)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    dkv = x @ p["w_dkv"]                                   # (B,S,r+rope)
+    ckv = rms_norm(dkv[..., :r], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(dkv[..., None, r:], positions, cfg.rope_theta)[..., 0, :]
+    return q_nope, q_rope, ckv, k_rope
+
+
+def mla_apply(p: Dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array,
+              opts: AttnOptions, return_cache: bool = False):
+    """Full-sequence MLA (non-absorbed: expand K,V then plain MHA)."""
+    B, S, _ = x.shape
+    H = cfg.n_heads
+    rope, nope, vh, r = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    q_nope, q_rope, ckv, k_rope = _mla_qc(p, cfg, x, positions)
+    k_nope = (ckv @ p["w_uk"]).reshape(B, S, H, nope)
+    v = (ckv @ p["w_uv"]).reshape(B, S, H, vh)
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)         # (B,S,H,nope+rope)
+    k = jnp.concatenate([k_nope,
+                         jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, rope))],
+                        axis=-1)
+    # treat as MHA: KV=H, G=1; pad v to qk head_dim not needed (separate v dim)
+    scale = 1.0 / np.sqrt(nope + rope)
+    qq = q.reshape(B, S, H, 1, nope + rope)
+    out = attention_core(qq, k, v, positions, positions, 0, opts, scale=scale)
+    out = out.reshape(B, S, H * vh)
+    out = out @ p["wo"]
+    if return_cache:
+        return out, (ckv, k_rope)     # compressed cache (B,S,r), (B,S,rope)
+    return out
+
+
+# int8 KV-cache quantization (symmetric, static scale): halves the decode
+# memory sweep vs bf16 — §Perf cell-C lever.  The latent c_kv stream is
+# RMS-normed (unit-ish scale), so a static range works; per-position scales
+# would add a (B,W) f32 sidecar for ~0.1% extra bytes if needed.
+KV_QUANT_RANGE = 8.0
+
+
+def quant_kv(x: jax.Array) -> jax.Array:
+    s = 127.0 / KV_QUANT_RANGE
+    return jnp.clip(jnp.round(x.astype(jnp.float32) * s), -127, 127
+                    ).astype(jnp.int8)
+
+
+def dequant_kv(q: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * (KV_QUANT_RANGE / 127.0)
+
+
+def mla_decode(p: Dict, cfg: ArchConfig, x: jax.Array, cache_ckv: jax.Array,
+               cache_krope: jax.Array, pos: jax.Array,
+               opts: AttnOptions) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Absorbed-matrix MLA decode over the *compressed* cache.
+
+    cache_ckv: (B,W,r); cache_krope: (B,W,rope).  The up-projections are
+    absorbed into the query/output so per-step attention runs in the latent
+    space — the memory term reads r+rope (=576) per position instead of
+    H*(nope+vh) (=4096): the KV-cache compression that makes decode_32k's
+    memory roofline 7x smaller (§Roofline).
+    """
+    B = x.shape[0]
+    H = cfg.n_heads
+    rope, nope, vh, r = cfg.qk_rope_dim, cfg.qk_nope_dim, cfg.v_head_dim, cfg.kv_lora_rank
+    W = cache_ckv.shape[1]
+    positions = jnp.broadcast_to(pos[None, None], (B, 1)).astype(jnp.int32)
+    q_nope, q_rope, ckv, k_rope = _mla_qc(p, cfg, x, positions)
+    slot = (pos % W).astype(jnp.int32)
+    quantized = cache_ckv.dtype == jnp.int8
+    if quantized:
+        ckv_store, krope_store = quant_kv(ckv), quant_kv(k_rope)
+    else:
+        ckv_store = ckv.astype(cache_ckv.dtype)
+        krope_store = k_rope.astype(cache_krope.dtype)
+    cache_ckv = jax.lax.dynamic_update_slice_in_dim(
+        cache_ckv, ckv_store, slot, 1)
+    cache_krope = jax.lax.dynamic_update_slice_in_dim(
+        cache_krope, krope_store, slot, 1)
+    ckv_read = dequant_kv(cache_ckv) if quantized \
+        else cache_ckv.astype(jnp.float32)
+    krope_read = dequant_kv(cache_krope) if quantized \
+        else cache_krope.astype(jnp.float32)
+    # absorb W_uk into q: (B,1,H,nope) x (r,H,nope) -> (B,1,H,r)
+    w_uk = p["w_uk"].reshape(r, H, nope)
+    q_lat = jnp.einsum("bqhn,rhn->bqhr", q_nope.astype(jnp.float32),
+                       w_uk.astype(jnp.float32))
+    scores = jnp.einsum("bqhr,bsr->bhqs", q_lat, ckv_read)
+    scores += jnp.einsum("bqhe,bse->bhqs", q_rope.astype(jnp.float32),
+                         krope_read)
+    scores *= 1.0 / np.sqrt(nope + rope)
+    idx = jnp.arange(W, dtype=jnp.int32)
+    valid = idx[None, :] <= slot                           # no wrap: W == S_max
+    scores = jnp.where(valid[:, None, None, :], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    lat = jnp.einsum("bhqs,bsr->bqhr", w, ckv_read)
+    w_uv = p["w_uv"].reshape(r, H, vh)
+    out = jnp.einsum("bqhr,rhv->bqhv", lat, w_uv.astype(jnp.float32))
+    out = out.reshape(B, 1, H * vh).astype(x.dtype) @ p["wo"]
+    return out, cache_ckv, cache_krope

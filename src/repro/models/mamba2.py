@@ -1,0 +1,215 @@
+"""Mamba-2 (SSD, state-space duality) mixer — chunked scan + decode step.
+
+The SSD chunked algorithm (Dao & Gu, arXiv:2405.21060) splits the sequence
+into chunks of Q tokens: a quadratic *intra-chunk* term (MXU-friendly block
+matmuls — this is the Pallas kernel target, kernels/ssd_scan.py) and a linear
+*inter-chunk* state recurrence (lax.scan).  Decode carries (conv, state)
+caches and is O(1) per token — this is what makes ``long_500k`` runnable for
+the ssm/hybrid architectures.
+
+Projections are split (w_z/w_x/w_B/w_C/w_dt + per-stream depthwise convs)
+rather than fused, which is mathematically identical to the fused in_proj
+but gives each stream a clean TP sharding (d_inner over ``model``; the
+B/C state streams replicated, matching g=1 shared groups).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.params import spec, shard_activation
+from repro.models.layers import rms_norm, rms_norm_spec, DATA, MODEL
+
+
+def ssm_spec(cfg: ArchConfig):
+    d, di, st, nh, c = (cfg.d_model, cfg.d_inner, cfg.ssm_state,
+                        cfg.n_ssm_heads, cfg.ssm_conv)
+    g = cfg.ssm_ngroups
+    return {
+        "w_z": spec((d, di), ("embed", "d_inner")),
+        "w_x": spec((d, di), ("embed", "d_inner")),
+        "w_B": spec((d, g * st), ("embed", "ssm_state")),
+        "w_C": spec((d, g * st), ("embed", "ssm_state")),
+        "w_dt": spec((d, nh), ("embed", "ssm_heads")),
+        "conv_x": spec((c, di), (None, "d_inner"), init="normal", scale=0.5),
+        "conv_B": spec((c, g * st), (None, "ssm_state"), init="normal", scale=0.5),
+        "conv_C": spec((c, g * st), (None, "ssm_state"), init="normal", scale=0.5),
+        "dt_bias": spec((nh,), ("ssm_heads",), dtype=jnp.float32, init="zeros"),
+        "A_log": spec((nh,), ("ssm_heads",), dtype=jnp.float32, init="zeros"),
+        "D": spec((nh,), ("ssm_heads",), dtype=jnp.float32, init="ones"),
+        "norm": rms_norm_spec(di),
+        "out_proj": spec((di, d), ("d_inner", "embed"), init="small"),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv via shifted adds.  x: (B,L,C), w: (c,C)."""
+    c = w.shape[0]
+    out = x * w[-1]
+    for i in range(1, c):
+        shifted = jnp.pad(x, ((0, 0), (i, 0), (0, 0)))[:, :-i, :]
+        out = out + shifted * w[-1 - i]
+    return out
+
+
+def _conv_step(x_t: jax.Array, buf: jax.Array, w: jax.Array
+               ) -> Tuple[jax.Array, jax.Array]:
+    """Single-token depthwise conv.  x_t: (B,C); buf: (B,c-1,C) past inputs."""
+    hist = jnp.concatenate([buf, x_t[:, None, :]], axis=1)   # (B,c,C)
+    out = jnp.einsum("btc,tc->bc", hist, w)
+    return out, hist[:, 1:, :]
+
+
+def _ssd_inputs(p: Dict, cfg: ArchConfig, x: jax.Array):
+    """Shared projections for scan/decode.  x: (B,L,d)."""
+    z = x @ p["w_z"]
+    xs = x @ p["w_x"]
+    Bm = x @ p["w_B"]
+    Cm = x @ p["w_C"]
+    dt = (x @ p["w_dt"]).astype(jnp.float32)
+    return z, xs, Bm, Cm, dt
+
+
+def ssd_scan_ref(xs, dt, A, Bm, Cm, D, chunk: int):
+    """Chunked SSD.  xs:(B,L,nh,hd) f32, dt:(B,L,nh) f32 (post-softplus),
+    A:(nh,) f32 (negative), Bm/Cm:(B,L,st) f32 (g=1 shared), D:(nh,).
+    Returns (y:(B,L,nh,hd) f32, h_final:(B,nh,st,hd) f32).
+    """
+    Bb, L, nh, hd = xs.shape
+    st = Bm.shape[-1]
+    Q = min(chunk, L)
+    assert L % Q == 0, (L, Q)
+    nc = L // Q
+
+    xc = xs.reshape(Bb, nc, Q, nh, hd)
+    dtc = dt.reshape(Bb, nc, Q, nh)
+    Bc = Bm.reshape(Bb, nc, Q, st)
+    Cc = Cm.reshape(Bb, nc, Q, st)
+
+    log_a = dtc * A                                        # (b,nc,q,nh) <= 0
+    la = jnp.cumsum(log_a, axis=2)                         # within-chunk cumsum
+    la_last = la[:, :, -1:, :]                             # (b,nc,1,nh)
+
+    # --- intra-chunk (quadratic, the Pallas kernel target) ----------------
+    # decay L_ij = exp(la_i - la_j) for i >= j
+    diff = la[:, :, :, None, :] - la[:, :, None, :, :]     # (b,nc,i,j,nh)
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    Lmat = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcis,bcjs->bcij", Cc, Bc)         # (b,nc,i,j)
+    att = scores[..., None] * Lmat * dtc[:, :, None, :, :]  # (b,nc,i,j,nh)
+    y_intra = jnp.einsum("bcijn,bcjnh->bcinh", att, xc)
+
+    # --- chunk summary states ---------------------------------------------
+    w = jnp.exp(la_last - la) * dtc                        # (b,nc,q,nh)
+    S = jnp.einsum("bcjn,bcjs,bcjnh->bcnsh", w, Bc, xc)    # (b,nc,nh,st,hd)
+
+    # --- inter-chunk recurrence --------------------------------------------
+    def step(h, inputs):
+        S_c, la_c, la_last_c, C_c = inputs
+        # contribution of the incoming state to every position in the chunk
+        y_in = jnp.einsum("bis,bnsh,bin->binh", C_c, h, jnp.exp(la_c))
+        h = h * jnp.exp(la_last_c)[:, 0, :, None, None] + S_c
+        return h, y_in
+
+    h0 = jnp.zeros((Bb, nh, st, hd), jnp.float32)
+    h_final, y_inter = jax.lax.scan(
+        step, h0,
+        (S.swapaxes(0, 1), la.swapaxes(0, 1), la_last.swapaxes(0, 1),
+         Cc.swapaxes(0, 1)))
+    y_inter = y_inter.swapaxes(0, 1).reshape(Bb, nc, Q, nh, hd)
+
+    y = y_intra + y_inter + xc * D[None, None, None, :, None]
+    return y.reshape(Bb, L, nh, hd), h_final
+
+
+def ssm_apply(p: Dict, cfg: ArchConfig, x: jax.Array,
+              backend: str = "xla", return_cache: bool = False):
+    """Full-sequence Mamba-2 block.  x: (B,L,d) -> (B,L,d) [, cache]."""
+    Bb, L, d = x.shape
+    nh, hd, st = cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    c = cfg.ssm_conv
+    z, xs, Bm, Cm, dt = _ssd_inputs(p, cfg, x)
+    xs_raw, Bm_raw, Cm_raw = xs, Bm, Cm                    # pre-conv (cache tails)
+    xs = jax.nn.silu(_causal_conv(xs, p["conv_x"]))
+    Bm = jax.nn.silu(_causal_conv(Bm, p["conv_B"]))
+    Cm = jax.nn.silu(_causal_conv(Cm, p["conv_C"]))
+    xs = shard_activation(xs, DATA, None, MODEL)
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])                # (B,L,nh)
+    A = -jnp.exp(p["A_log"])                               # (nh,)
+
+    # pad to a chunk multiple; padded positions get dt=0 so they neither
+    # emit output nor perturb the carried state (a = exp(0*A) = 1, upd = 0)
+    Q = min(cfg.ssm_chunk, max(L, 1))
+    Lp = -(-L // Q) * Q
+    if Lp != L:
+        padw = ((0, 0), (0, Lp - L), (0, 0))
+        xs = jnp.pad(xs, padw)
+        Bm, Cm = jnp.pad(Bm, padw), jnp.pad(Cm, padw)
+        dt = jnp.pad(dt, padw)
+    xsh = xs.reshape(Bb, Lp, nh, hd).astype(jnp.float32)
+    if backend == "pallas":
+        from repro.kernels import ops as kops
+        y, h_final = kops.ssd_scan(xsh, dt, A, Bm.astype(jnp.float32),
+                                   Cm.astype(jnp.float32), p["D"],
+                                   chunk=cfg.ssm_chunk)
+    else:
+        y, h_final = ssd_scan_ref(xsh, dt, A, Bm.astype(jnp.float32),
+                                  Cm.astype(jnp.float32), p["D"],
+                                  chunk=cfg.ssm_chunk)
+    y = y.reshape(Bb, Lp, nh * hd)[:, :L, :].astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    y = shard_activation(y, DATA, None, MODEL)
+    out = y @ p["out_proj"]
+    if not return_cache:
+        return out
+    cache = dict(conv_x=xs_raw[:, L - (c - 1):, :],
+                 conv_B=Bm_raw[:, L - (c - 1):, :],
+                 conv_C=Cm_raw[:, L - (c - 1):, :],
+                 state=h_final)
+    return out, cache
+
+
+def ssm_decode(p: Dict, cfg: ArchConfig, x: jax.Array, cache: Dict
+               ) -> Tuple[jax.Array, Dict]:
+    """Single-token decode.  x: (B,1,d); cache keys: conv_x/conv_B/conv_C
+    (B,c-1,·) and state (B,nh,st,hd).  O(1) in context length."""
+    Bb = x.shape[0]
+    nh, hd, st = cfg.n_ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    z, xs, Bm, Cm, dt = _ssd_inputs(p, cfg, x[:, 0:1, :])
+    z, xs, Bm, Cm, dt = z[:, 0], xs[:, 0], Bm[:, 0], Cm[:, 0], dt[:, 0]
+
+    xs, conv_x = _conv_step(xs, cache["conv_x"], p["conv_x"])
+    Bm, conv_B = _conv_step(Bm, cache["conv_B"], p["conv_B"])
+    Cm, conv_C = _conv_step(Cm, cache["conv_C"], p["conv_C"])
+    xs, Bm, Cm = jax.nn.silu(xs), jax.nn.silu(Bm), jax.nn.silu(Cm)
+
+    dt = jax.nn.softplus(dt + p["dt_bias"])                # (B,nh)
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                    # (B,nh)
+    xh = xs.reshape(Bb, nh, hd).astype(jnp.float32)
+    # state update: h = a h + dt * B (outer) x
+    upd = jnp.einsum("bn,bs,bnh->bnsh", dt, Bm.astype(jnp.float32), xh)
+    h = cache["state"] * a[:, :, None, None] + upd
+    y = jnp.einsum("bs,bnsh->bnh", Cm.astype(jnp.float32), h)
+    y = y + xh * p["D"][None, :, None]
+    y = y.reshape(Bb, nh * hd).astype(x.dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"])[:, None, :]
+    new_cache = dict(conv_x=conv_x, conv_B=conv_B, conv_C=conv_C, state=h)
+    return out, new_cache
+
+
+def ssm_cache_init(cfg: ArchConfig, batch: int, dtype=jnp.bfloat16) -> Dict:
+    c = cfg.ssm_conv
+    g = cfg.ssm_ngroups
+    return dict(
+        conv_x=jnp.zeros((batch, c - 1, cfg.d_inner), dtype),
+        conv_B=jnp.zeros((batch, c - 1, g * cfg.ssm_state), dtype),
+        conv_C=jnp.zeros((batch, c - 1, g * cfg.ssm_state), dtype),
+        state=jnp.zeros((batch, cfg.n_ssm_heads, cfg.ssm_state,
+                         cfg.ssm_headdim), jnp.float32),
+    )

@@ -1,0 +1,465 @@
+"""Unified decoder LM covering the four assigned families.
+
+One functional model class drives every assigned architecture:
+
+* ``dense``  — pre-norm GQA/MQA attention + gated MLP
+* ``moe``    — same attention, MoE FFN (optional dense prelude layers)
+* ``ssm``    — Mamba-2 SSD mixer blocks, attention-free
+* ``hybrid`` — Mamba-2 backbone + one *shared* attention tile applied every
+               ``shared_attn_every`` blocks (Zamba-2).  The shared tile is the
+               dual of a Vespa multi-replica tile: one physical instance,
+               many logical users.
+
+Layers are stacked (leading L dim) and driven by ``lax.scan`` so the HLO and
+compile time stay O(1) in depth; ``jax.checkpoint`` on the scan body gives
+activation rematerialization for the train step.
+
+Three entry points mirror the assigned input shapes:
+``forward`` (train), ``prefill`` (→ cache), ``decode_step`` (cache → cache).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import moe as MoE
+from repro.models.layers import AttnOptions, DATA, MODEL, MODEL_FULL
+from repro.models.params import (ParamSpec, abstract_params, init_params,
+                                 is_spec, shard_activation, spec)
+
+
+def _stack_specs(tree, n: int):
+    """Add a leading stacked-layers dim to every ParamSpec leaf."""
+    def one(s: ParamSpec):
+        return ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype,
+                         s.init, s.scale)
+    return jax.tree_util.tree_map(one, tree, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Block definitions (single layer, unstacked)
+# ---------------------------------------------------------------------------
+
+
+def _attn_spec(cfg: ArchConfig):
+    return L.mla_spec(cfg) if cfg.attn_type == "mla" else L.gqa_spec(cfg)
+
+
+def _dense_block_spec(cfg: ArchConfig, d_ff: Optional[int] = None):
+    return {
+        "attn_norm": L.rms_norm_spec(cfg.d_model),
+        "attn": _attn_spec(cfg),
+        "mlp_norm": L.rms_norm_spec(cfg.d_model),
+        "mlp": L.mlp_spec(cfg.d_model, d_ff or cfg.d_ff),
+    }
+
+
+def _moe_block_spec(cfg: ArchConfig):
+    return {
+        "attn_norm": L.rms_norm_spec(cfg.d_model),
+        "attn": _attn_spec(cfg),
+        "mlp_norm": L.rms_norm_spec(cfg.d_model),
+        "moe": MoE.moe_spec(cfg),
+    }
+
+
+def _ssm_block_spec(cfg: ArchConfig):
+    return {"norm": L.rms_norm_spec(cfg.d_model), "ssm": M.ssm_spec(cfg)}
+
+
+def _apply_attn(p, cfg, x, positions, opts, return_cache=False):
+    if cfg.attn_type == "mla":
+        return L.mla_apply(p, cfg, x, positions, opts, return_cache)
+    return L.gqa_apply(p, cfg, x, positions, opts, return_cache)
+
+
+def _decode_attn(p, cfg, x, cache, pos, opts):
+    if cfg.attn_type == "mla":
+        out, c0, c1 = L.mla_decode(p, cfg, x, cache[0], cache[1], pos, opts)
+    else:
+        out, c0, c1 = L.gqa_decode(p, cfg, x, cache[0], cache[1], pos, opts)
+    return out, (c0, c1)
+
+
+# ---------------------------------------------------------------------------
+# The model
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class LM:
+    cfg: ArchConfig
+    opts: AttnOptions = dataclasses.field(default_factory=AttnOptions)
+    remat: bool = True
+    ssm_backend: str = "xla"
+    onehot_loss: bool = False      # vocab-parallel gold extraction (§Perf)
+    moe_ep: bool = False           # expert-parallel a2a MoE (GShard; §Perf)
+    moe_axes: Any = None           # explicit MoE shard axes (MRA per-tile K)
+    kv_cache_dtype: Any = None     # e.g. jnp.int8: quantized decode cache
+    # Per-layer PartitionSpec tree (block structure, no layer dim).  When
+    # set, layer params are sharding-constrained at USE-SITE inside the
+    # scan body; the transpose of that constraint pins the per-layer
+    # gradient sharding too, so the backward scan reduce-scatters wgrads
+    # instead of materializing them replicated (§Perf lever: memory + wire).
+    block_pspecs: Any = None
+
+    # ----------------------------------------------------------- param specs
+    def param_specs(self):
+        cfg = self.cfg
+        out: Dict[str, Any] = {
+            "embed": spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed")),
+            "final_norm": L.rms_norm_spec(cfg.d_model),
+        }
+        if not cfg.tie_embeddings:
+            out["lm_head"] = spec((cfg.d_model, cfg.vocab_size),
+                                  ("embed", "vocab"), init="small")
+        fam = cfg.family
+        if fam == "dense":
+            out["blocks"] = _stack_specs(_dense_block_spec(cfg), cfg.n_layers)
+        elif fam == "moe":
+            n_moe = cfg.n_layers - cfg.n_dense_layers
+            out["blocks"] = _stack_specs(_moe_block_spec(cfg), n_moe)
+            if cfg.n_dense_layers:
+                out["prelude"] = [
+                    _dense_block_spec(cfg) for _ in range(cfg.n_dense_layers)]
+        elif fam == "ssm":
+            out["blocks"] = _stack_specs(_ssm_block_spec(cfg), cfg.n_layers)
+        elif fam == "hybrid":
+            out["blocks"] = _stack_specs(_ssm_block_spec(cfg), cfg.n_layers)
+            out["shared_attn"] = _dense_block_spec(cfg)
+        else:
+            raise ValueError(fam)
+        return out
+
+    def init(self, key):
+        return init_params(self.param_specs(), key)
+
+    def abstract(self):
+        return abstract_params(self.param_specs())
+
+    # ------------------------------------------------------------- embedding
+    def _embed(self, params, tokens=None, embeds=None):
+        cfg = self.cfg
+        if embeds is None:
+            embeds = jnp.take(params["embed"], tokens, axis=0)
+            if cfg.tie_embeddings:   # gemma-style scaling for tied embeddings
+                embeds = embeds * jnp.asarray(np.sqrt(cfg.d_model), embeds.dtype)
+        return shard_activation(embeds, DATA, None, None)
+
+    def _logits(self, params, x):
+        cfg = self.cfg
+        x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.tie_embeddings:
+            logits = x @ params["embed"].T
+        else:
+            logits = x @ params["lm_head"]
+        return shard_activation(logits.astype(jnp.float32), DATA, None,
+                                MODEL_FULL)
+
+    # ------------------------------------------------------- full-seq blocks
+    def _block_fwd(self, bp, cfg, x, positions, want_cache: bool):
+        """One block forward; returns (x, cache_or_None, aux)."""
+        fam = cfg.family
+        aux = jnp.zeros((), jnp.float32)
+        if fam in ("dense", "moe") or bp.get("mlp") is not None:
+            h = L.rms_norm(x, bp["attn_norm"], cfg.norm_eps)
+            res = _apply_attn(bp["attn"], cfg, h, positions, self.opts,
+                              return_cache=want_cache)
+            h, cache = res if want_cache else (res, None)
+            x = x + h
+            h = L.rms_norm(x, bp["mlp_norm"], cfg.norm_eps)
+            if "moe" in bp:
+                h, aux = MoE.moe_apply(bp["moe"], cfg, h, ep=self.moe_ep,
+                                       model_axes=self.moe_axes)
+            else:
+                h = L.mlp_apply(bp["mlp"], h, cfg.act)
+            x = x + h
+            return x, cache, aux
+        # ssm / hybrid backbone block
+        h = L.rms_norm(x, bp["norm"], cfg.norm_eps)
+        res = M.ssm_apply(bp["ssm"], cfg, h, backend=self.ssm_backend,
+                          return_cache=want_cache)
+        h, cache = res if want_cache else (res, None)
+        return x + h, cache, aux
+
+    def _shared_block_fwd(self, sp, cfg, x, positions, want_cache: bool):
+        h = L.rms_norm(x, sp["attn_norm"], cfg.norm_eps)
+        res = _apply_attn(sp["attn"], cfg, h, positions, self.opts,
+                          return_cache=want_cache)
+        h, cache = res if want_cache else (res, None)
+        x = x + h
+        h = L.rms_norm(x, sp["mlp_norm"], cfg.norm_eps)
+        x = x + L.mlp_apply(sp["mlp"], h, cfg.act)
+        return x, cache
+
+    # ------------------------------------------------------------ forward/LM
+    def forward(self, params, tokens=None, embeds=None
+                ) -> Tuple[jax.Array, jax.Array]:
+        """Training/scoring forward.  Returns (logits f32, aux_loss)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, embeds)
+        B, S, _ = x.shape
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        for bp in params.get("prelude", []):
+            x, _, _ = self._block_fwd(bp, cfg, x, positions, False)
+
+        shared = params.get("shared_attn")
+        every = cfg.shared_attn_every
+
+        def body(carry, layer_in):
+            x, aux, i = carry
+            bp = layer_in
+            if self.block_pspecs is not None:
+                bp = jax.tree_util.tree_map(
+                    jax.lax.with_sharding_constraint, bp, self.block_pspecs)
+            if shared is not None and every:
+                def with_shared(x):
+                    y, _ = self._shared_block_fwd(shared, cfg, x, positions,
+                                                  False)
+                    return y
+                x = jax.lax.cond(i % every == 0, with_shared, lambda x: x, x)
+            x, _, a = self._block_fwd(bp, cfg, x, positions, False)
+            return (x, aux + a, i + 1), None
+
+        fn = jax.checkpoint(body) if self.remat else body
+        (x, aux, _), _ = jax.lax.scan(
+            fn, (x, jnp.zeros((), jnp.float32), jnp.zeros((), jnp.int32)),
+            params["blocks"])
+        n_scan = max(cfg.n_layers - cfg.n_dense_layers, 1)
+        return self._logits(params, x), aux / n_scan
+
+    # ----------------------------------------------------------------- loss
+    def loss_fn(self, params, batch) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+        logits, aux = self.forward(params, tokens=batch.get("tokens"),
+                                   embeds=batch.get("embeds"))
+        labels = batch["labels"]
+        logz = jax.nn.logsumexp(logits, axis=-1)
+        if self.onehot_loss:
+            # vocab-parallel gold extraction: iota==label compare stays
+            # sharded over V (a gather would force an all-gather of the
+            # full logits under GSPMD) — §Perf hillclimb lever
+            V = logits.shape[-1]
+            hit = labels[..., None] == jax.lax.broadcasted_iota(
+                jnp.int32, (1, 1, V), 2)
+            gold = jnp.sum(jnp.where(hit, logits, 0.0), axis=-1)
+        else:
+            gold = jnp.take_along_axis(logits, labels[..., None],
+                                       axis=-1)[..., 0]
+        nll = jnp.mean(logz - gold)
+        loss = nll + 0.01 * aux
+        return loss, {"nll": nll, "aux": aux}
+
+    # -------------------------------------------------------------- prefill
+    def prefill(self, params, tokens=None, embeds=None, cache_len: int = 0):
+        """Full-sequence forward that also builds the decode cache.
+
+        Returns (last-token logits (B,V), cache).  ``cache_len`` pads the KV
+        cache to the serving window (default: the prompt length).
+        """
+        cfg = self.cfg
+        x = self._embed(params, tokens, embeds)
+        B, S, _ = x.shape
+        W = self._window(cache_len or S)
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+        cache: Dict[str, Any] = {"pos": jnp.asarray(S, jnp.int32)}
+        pre_caches = []
+        for bp in params.get("prelude", []):
+            x, c, _ = self._block_fwd(bp, cfg, x, positions, True)
+            pre_caches.append(self._pad_attn_cache(c, W, S))
+        if pre_caches:
+            cache["prelude"] = pre_caches
+
+        shared = params.get("shared_attn")
+        every = cfg.shared_attn_every
+        n_apps = -(-cfg.n_layers // every) if (shared is not None and every) else 0
+
+        def body(carry, bp):
+            x, i, sh_stack = carry
+            if n_apps:
+                # the shared tile keeps one KV history PER application site
+                def with_shared(operand):
+                    x, stack = operand
+                    y, c = self._shared_block_fwd(shared, cfg, x, positions,
+                                                  True)
+                    app = i // every
+                    stack = jax.tree_util.tree_map(
+                        lambda s, n: jax.lax.dynamic_update_index_in_dim(
+                            s, n.astype(s.dtype), app, 0), stack, c)
+                    return y, stack
+                x, sh_stack = jax.lax.cond(
+                    i % every == 0, with_shared, lambda o: o, (x, sh_stack))
+            x, c, _ = self._block_fwd(bp, cfg, x, positions, True)
+            return (x, i + 1, sh_stack), c
+
+        sh0 = None
+        if n_apps:
+            one = self._zero_attn_cache(B, S, dtype=x.dtype)
+            sh0 = jax.tree_util.tree_map(
+                lambda a: jnp.zeros((n_apps,) + a.shape, a.dtype), one)
+        (x, _, sh_stack), block_caches = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.int32), sh0), params["blocks"])
+
+        if cfg.family in ("ssm", "hybrid"):
+            cache["blocks"] = block_caches          # no sequence axis
+        else:
+            cache["blocks"] = self._pad_attn_cache(block_caches, W, S)
+        if sh0 is not None:
+            cache["shared_attn"] = self._pad_attn_cache(sh_stack, W, S)
+        logits = self._logits(params, x[:, -1:, :])[:, 0, :]
+        return logits, cache
+
+    # ---------------------------------------------------------- decode step
+    def decode_step(self, params, cache, tokens=None, embeds=None):
+        """One-token decode.  tokens: (B,1) (or embeds (B,1,d)).
+
+        Returns (logits (B,V), new_cache)."""
+        cfg = self.cfg
+        x = self._embed(params, tokens, embeds)
+        pos = cache["pos"]
+        new_cache: Dict[str, Any] = {"pos": pos + 1}
+
+        if "prelude" in cache:
+            pcs = []
+            for bp, c in zip(params["prelude"], cache["prelude"]):
+                x, c2 = self._block_decode(bp, cfg, x, c, pos)
+                pcs.append(c2)
+            new_cache["prelude"] = pcs
+
+        shared = params.get("shared_attn")
+        every = cfg.shared_attn_every
+        sh_cache = cache.get("shared_attn")
+
+        def body(carry, layer_in):
+            x, i, sh_stack = carry
+            bp, c = layer_in
+            if shared is not None and every:
+                def with_shared(operand):
+                    x, stack = operand
+                    app = i // every
+                    sc = jax.tree_util.tree_map(
+                        lambda s: jax.lax.dynamic_index_in_dim(
+                            s, app, 0, keepdims=False), stack)
+                    h = L.rms_norm(x, shared["attn_norm"], cfg.norm_eps)
+                    h, sc2 = _decode_attn(shared["attn"], cfg, h, sc, pos,
+                                          self.opts)
+                    x = x + h
+                    h = L.rms_norm(x, shared["mlp_norm"], cfg.norm_eps)
+                    x = x + L.mlp_apply(shared["mlp"], h, cfg.act)
+                    stack = jax.tree_util.tree_map(
+                        lambda s, n: jax.lax.dynamic_update_index_in_dim(
+                            s, n.astype(s.dtype), app, 0), stack, sc2)
+                    return x, stack
+                x, sh_stack = jax.lax.cond(i % every == 0, with_shared,
+                                           lambda o: o, (x, sh_stack))
+            x, c2 = self._block_decode(bp, cfg, x, c, pos)
+            return (x, i + 1, sh_stack), c2
+
+        (x, _, sh_cache), blk = jax.lax.scan(
+            body, (x, jnp.zeros((), jnp.int32), sh_cache),
+            (params["blocks"], cache["blocks"]))
+        new_cache["blocks"] = blk
+        if sh_cache is not None:
+            new_cache["shared_attn"] = sh_cache
+        logits = self._logits(params, x)[:, 0, :]
+        return logits, new_cache
+
+    def _block_decode(self, bp, cfg, x, c, pos):
+        aux = None
+        if "ssm" in bp:
+            h = L.rms_norm(x, bp["norm"], cfg.norm_eps)
+            h, c2 = M.ssm_decode(bp["ssm"], cfg, h, c)
+            return x + h, c2
+        h = L.rms_norm(x, bp["attn_norm"], cfg.norm_eps)
+        h, c2 = _decode_attn(bp["attn"], cfg, h, c, pos, self.opts)
+        x = x + h
+        h = L.rms_norm(x, bp["mlp_norm"], cfg.norm_eps)
+        if "moe" in bp:
+            h, _ = MoE.moe_apply(bp["moe"], cfg, h, ep=self.moe_ep,
+                                 model_axes=self.moe_axes)
+        else:
+            h = L.mlp_apply(bp["mlp"], h, cfg.act)
+        return x + h, c2
+
+    # ------------------------------------------------------------ cache mgmt
+    def _window(self, requested: int) -> int:
+        """Serving KV window: SWA archs cap at the sliding window."""
+        cfg = self.cfg
+        if cfg.sliding_window:
+            return min(requested, cfg.sliding_window)
+        return requested
+
+    def _attn_cache_dims(self):
+        cfg = self.cfg
+        if cfg.attn_type == "mla":
+            return (cfg.kv_lora_rank,), (cfg.qk_rope_dim,)
+        return (cfg.n_kv_heads, cfg.head_dim), (cfg.n_kv_heads, cfg.head_dim)
+
+    def _zero_attn_cache(self, B, W, dtype=jnp.bfloat16, padded=True):
+        d0, d1 = self._attn_cache_dims()
+        return (jnp.zeros((B, W) + d0, dtype), jnp.zeros((B, W) + d1, dtype))
+
+    def _pad_attn_cache(self, c, W: int, S: int):
+        """Fit prefill-produced caches (len S) into the serving window W."""
+        if c is None:
+            return None
+        def fit(a):
+            if a is None:
+                return None
+            # prefill caches come as (B,S,*tail) or stacked (L,B,S,*tail);
+            # locate the sequence axis (first axis of size S after axis 0)
+            ax = None
+            for i in range(1, a.ndim):
+                if a.shape[i] == S:
+                    ax = i
+                    break
+            assert ax is not None, (a.shape, S)
+            if W == S:
+                return a
+            if W < S:
+                # keep the last W positions AND rotate them so position p
+                # lands in ring slot p % W (decode's slot = pos % W)
+                idx = [slice(None)] * a.ndim
+                idx[ax] = slice(S - W, S)
+                kept = a[tuple(idx)]
+                return jnp.roll(kept, shift=(S - W) % W, axis=ax)
+            pad = [(0, 0)] * a.ndim
+            pad[ax] = (0, W - S)
+            return jnp.pad(a, pad)
+        return jax.tree_util.tree_map(fit, c)
+
+    def init_cache(self, batch: int, max_len: int, dtype=None):
+        """Empty decode cache sized for ``max_len`` context."""
+        cfg = self.cfg
+        dtype = dtype or self.kv_cache_dtype or jnp.bfloat16
+        W = self._window(max_len)
+        cache: Dict[str, Any] = {"pos": jnp.asarray(0, jnp.int32)}
+        if cfg.family in ("ssm", "hybrid"):
+            one = M.ssm_cache_init(cfg, batch, dtype)
+            cache["blocks"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (cfg.n_layers,) + a.shape),
+                one)
+            if cfg.family == "hybrid" and cfg.shared_attn_every:
+                n_apps = -(-cfg.n_layers // cfg.shared_attn_every)
+                one = self._zero_attn_cache(batch, W, dtype)
+                cache["shared_attn"] = jax.tree_util.tree_map(
+                    lambda a: jnp.zeros((n_apps,) + a.shape, a.dtype), one)
+            return cache
+        n_scan = cfg.n_layers - cfg.n_dense_layers
+        one = self._zero_attn_cache(batch, W, dtype)
+        cache["blocks"] = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n_scan,) + a.shape), one)
+        if cfg.n_dense_layers:
+            cache["prelude"] = [self._zero_attn_cache(batch, W, dtype)
+                                for _ in range(cfg.n_dense_layers)]
+        return cache

@@ -1,0 +1,152 @@
+"""Serving runtime: prefill/decode engine + request scheduler with RTT.
+
+``serve_step`` (one new token against a KV cache of ``seq_len``) is the
+artifact the ``decode_*`` / ``long_*`` dry-run cells lower.  The engine adds
+a slot-based continuous-batching scheduler whose per-request dispatch→
+completion time feeds the C3 ``rtt`` counter — the direct analogue of the
+paper's DMA round-trip counter (request for data → arrival at accelerator).
+
+Slots are independent vmap lanes: every cache leaf (including the position
+counter) carries a leading slot axis, so requests admitted at different
+ticks decode against their own positions — continuous batching without
+cache repacking.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import monitor as mon
+from repro.core.tiles import TilePlan, default_plan
+from repro.models.transformer import LM
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new: int = 16
+    submitted_tick: int = 0
+    first_token_tick: Optional[int] = None
+    done_tick: Optional[int] = None
+    out: List[int] = field(default_factory=list)
+
+    @property
+    def rtt(self) -> Optional[int]:
+        """Dispatch->first-data ticks (the paper's round-trip-time)."""
+        if self.first_token_tick is None:
+            return None
+        return self.first_token_tick - self.submitted_tick
+
+
+class ServeEngine:
+    """Batched decode over fixed slots (continuous-batching-lite)."""
+
+    def __init__(self, cfg: ArchConfig, *, batch_slots: int = 4,
+                 window: int = 256, lm_kwargs: Optional[Dict] = None,
+                 plan: Optional[TilePlan] = None, seed: int = 0):
+        self.cfg = cfg
+        self.lm = LM(cfg, **(lm_kwargs or {}))
+        self.plan = plan or default_plan(cfg)
+        self.counters = mon.init_counters(self.plan)
+        self.slots = batch_slots
+        self.window = window
+        self.params = self.lm.init(jax.random.PRNGKey(seed))
+
+        lm = self.lm
+
+        def decode_all(params, cache_stack, tokens):
+            # vmap over the slot axis of every cache leaf + token lane
+            def one(cache, tok):
+                return lm.decode_step(params, cache, tokens=tok)
+            return jax.vmap(one, in_axes=(0, 0))(cache_stack, tokens)
+
+        self._decode = jax.jit(decode_all)
+        self._prefill = jax.jit(
+            lambda p, t: lm.prefill(p, tokens=t, cache_len=window))
+
+        self.tick = 0
+        self.queue: List[Request] = []
+        self.active: Dict[int, Request] = {}      # slot -> request
+        # per-slot cache stack: leading slot axis on every leaf, B=1 inside
+        one = self.lm.init_cache(1, window)
+        self.cache = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (self.slots,) + a.shape
+                                       ).astype(a.dtype)
+            if hasattr(a, "ndim") else a, one)
+        self.tokens = jnp.zeros((self.slots, 1, 1), jnp.int32)
+        self.done: List[Request] = []
+
+    # ------------------------------------------------------------- lifecycle
+    def submit(self, req: Request) -> None:
+        req.submitted_tick = self.tick
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        for slot in range(self.slots):
+            if slot in self.active or not self.queue:
+                continue
+            req = self.queue.pop(0)
+            prompt = jnp.asarray(req.prompt[None, :], jnp.int32)
+            logits, cache1 = self._prefill(self.params, prompt)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)   # (1,)
+            req.out.append(int(tok[0]))
+            req.first_token_tick = self.tick + 1
+            self.counters = mon.charge(
+                self.counters, "mem",
+                rtt=jnp.asarray(self.tick + 1 - req.submitted_tick,
+                                jnp.float32))
+            self.cache = jax.tree_util.tree_map(
+                lambda stack, new: stack.at[slot].set(new.astype(stack.dtype))
+                if hasattr(stack, "ndim") else new,
+                self.cache, cache1)
+            self.tokens = self.tokens.at[slot, 0, 0].set(tok[0])
+            self.active[slot] = req
+
+    def step(self) -> None:
+        """One decode tick for every occupied slot."""
+        self.tick += 1
+        self._admit()
+        if not self.active:
+            return
+        (logits, self.cache) = self._decode(self.params, self.cache,
+                                            self.tokens)
+        next_tok = jnp.argmax(logits, -1).astype(jnp.int32)   # (slots, 1)
+        self.tokens = next_tok[:, :, None]
+        ntok_host = np.asarray(next_tok)
+        self.counters = mon.charge(
+            self.counters, "io",
+            exec_time=jnp.asarray(len(self.active), jnp.float32))
+        for slot, req in list(self.active.items()):
+            req.out.append(int(ntok_host[slot, 0]))
+            if len(req.out) >= req.max_new:
+                req.done_tick = self.tick
+                self.done.append(req)
+                del self.active[slot]
+
+    def run(self, ticks: int) -> List[Request]:
+        for _ in range(ticks):
+            self.step()
+        return self.done
+
+    # -------------------------------------------------------------- metrics
+    def stats(self) -> Dict[str, float]:
+        rtts = [r.rtt for r in self.done if r.rtt is not None]
+        lat = [r.done_tick - r.submitted_tick for r in self.done
+               if r.done_tick is not None]
+        toks = sum(len(r.out) for r in self.done)
+        return {
+            "completed": float(len(self.done)),
+            "tokens": float(toks),
+            "mean_rtt_ticks": float(np.mean(rtts)) if rtts else 0.0,
+            "mean_latency_ticks": float(np.mean(lat)) if lat else 0.0,
+            "tokens_per_tick": toks / max(self.tick, 1),
+        }

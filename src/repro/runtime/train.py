@@ -1,0 +1,250 @@
+"""Training runtime: jitted train step + the Trainer driver loop.
+
+The step function is THE artifact the multi-pod dry-run lowers, so all
+sharding decisions live here:
+
+* params/opt-state shardings come from the TilePlan via core.replication
+  (MRA-aware rules),
+* batch enters sharded over the data axes,
+* C3 monitor counters ride through the step as donated state,
+* remat (scan-body checkpointing) keeps train_4k activation memory flat in
+  depth,
+* microbatch gradient accumulation (``accum``) trades step latency for
+  memory and overlaps the per-microbatch gradient reduce with the next
+  microbatch's compute (scan-carried partial sums).
+
+The Trainer wires in the Vespa runtime loop: monitor reads, DFS actuator
+commits between steps (hitless reconfig), async checkpoints, fault hooks.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import monitor as mon
+from repro.core.dfs import DFSActuator
+from repro.core.islands import IslandConfig, default_islands
+from repro.core.replication import data_axes, merged_rules
+from repro.core.tiles import TilePlan, default_plan
+from repro.data.pipeline import SyntheticLM, for_arch
+from repro.models.params import pspecs_for, shardings_for
+from repro.models.transformer import LM
+from repro.optim import adamw
+
+
+@dataclass
+class TrainConfig:
+    accum: int = 1                     # microbatch accumulation factor
+    log_every: int = 10
+    ckpt_every: int = 0                # 0 = disabled
+    ckpt_dir: str = "/tmp/vespa_ckpt"
+    monitor_every: int = 10
+    grad_reduce_dtype: str = ""        # "bf16": cast grads before the
+                                       # cross-device reduce (2x wire bytes)
+    opt: adamw.AdamWConfig = field(default_factory=adamw.AdamWConfig)
+
+
+def _batch_pspec(batch_tree, dp) -> Any:
+    return jax.tree_util.tree_map(
+        lambda v: P(dp) if getattr(v, "ndim", 0) >= 1 else P(), batch_tree)
+
+
+def make_train_step(lm: LM, plan: TilePlan, mesh: Optional[Mesh],
+                    tc: TrainConfig, grad_pspecs=None) -> Callable:
+    """Build the (un-jitted) train step; the caller jits with shardings.
+
+    ``grad_pspecs``: PartitionSpec tree matching params — constraining each
+    gradient leaf to its parameter's sharding makes GSPMD reduce-scatter
+    gradients to their shards instead of all-reducing the full tensors
+    (§Perf lever; ~2x wire bytes on the grad reduction, 4x with bf16).
+    """
+    cfg = lm.cfg
+
+    def _treat_grads(grads):
+        if tc.grad_reduce_dtype == "bf16":
+            grads = jax.tree_util.tree_map(
+                lambda g: g.astype(jnp.bfloat16), grads)
+        if grad_pspecs is not None:
+            grads = jax.tree_util.tree_map(
+                lambda g, ps: jax.lax.with_sharding_constraint(g, ps),
+                grads, grad_pspecs)
+        return grads
+
+    def loss_of(params, microbatch):
+        loss, parts = lm.loss_fn(params, microbatch)
+        return loss, parts
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    # static per-step NoC/mem traffic (charged to C3 counters)
+    def charge_counters(counters, batch, gnorm):
+        toks = np.prod(batch["labels"].shape)
+        n_params = cfg.n_params()
+        # DP gradient ring all-reduce bytes per device (bf16)
+        from repro.core.noc import collective_bytes_ring_allreduce
+        dp_sz = 1
+        if mesh is not None:
+            for a in ("pod", "data"):
+                if a in mesh.axis_names:
+                    dp_sz *= mesh.shape[a]
+        grad_bytes = collective_bytes_ring_allreduce(2.0 * n_params, dp_sz)
+        counters = mon.charge(counters, "noc",
+                              pkts_in=mon.pkts(grad_bytes),
+                              pkts_out=mon.pkts(grad_bytes))
+        # optimizer reads params+m+v, writes params+m+v (f32 m/v, bf16 p)
+        opt_bytes = n_params * (2 + 4 + 4) * 2
+        counters = mon.charge(counters, "mem",
+                              pkts_in=mon.pkts(opt_bytes / 2),
+                              pkts_out=mon.pkts(opt_bytes / 2))
+        counters = mon.charge(counters, "io", exec_time=jnp.asarray(toks, jnp.float32))
+        for t in plan.tiles:
+            if t.kind in ("attn", "ffn", "moe", "ssm", "shared_attn"):
+                counters = mon.charge(counters, t.name, exec_time=gnorm * 0 + 1.0)
+        return counters
+
+    def train_step(params, opt_state, batch, counters):
+        if tc.accum <= 1:
+            (loss, parts), grads = grad_fn(params, batch)
+            grads = _treat_grads(grads)
+        else:
+            # split batch into microbatches along the batch dim and scan;
+            # the per-microbatch grad psum overlaps the next microbatch
+            def micro(carry, mb):
+                acc, = carry
+                (l, p), g = grad_fn(params, mb)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc,), (l, p)
+
+            def split(v):
+                b = v.shape[0]
+                return v.reshape((tc.accum, b // tc.accum) + v.shape[1:])
+            mbs = jax.tree_util.tree_map(split, batch)
+            zero = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum,), (ls, parts_all) = jax.lax.scan(micro, (zero,), mbs)
+            grads = jax.tree_util.tree_map(lambda g: g / tc.accum, gsum)
+            loss = jnp.mean(ls)
+            parts = jax.tree_util.tree_map(jnp.mean, parts_all)
+
+        new_params, new_opt, om = adamw.update(tc.opt, grads, opt_state, params)
+        counters = charge_counters(counters, batch, om["grad_norm"])
+        metrics = {"loss": loss, **parts, **om}
+        return new_params, new_opt, counters, metrics
+
+    return train_step
+
+
+class Trainer:
+    """End-to-end training driver (examples/ use this)."""
+
+    def __init__(self, cfg: ArchConfig, shape: ShapeConfig, *,
+                 mesh: Optional[Mesh] = None, tc: Optional[TrainConfig] = None,
+                 plan: Optional[TilePlan] = None,
+                 islands: Optional[IslandConfig] = None,
+                 lm_kwargs: Optional[Dict] = None, seed: int = 0):
+        self.cfg = cfg
+        self.shape = shape
+        self.mesh = mesh
+        self.tc = tc or TrainConfig()
+        self.plan = plan or default_plan(cfg)
+        self.islands = islands or default_islands(self.plan)
+        self.actuator = DFSActuator(self.islands)
+        self.monitor = mon.MonitorClient()
+        self.lm = LM(cfg, **(lm_kwargs or {}))
+        self.data = for_arch(cfg, shape, seed=seed)
+        self.step = 0
+        self._store = None
+
+        key = jax.random.PRNGKey(seed)
+        specs = self.lm.param_specs()
+        if mesh is not None:
+            rules = merged_rules(self.plan, mesh)
+            self.param_sh = shardings_for(specs, rules, mesh)
+            init_fn = jax.jit(self.lm.init, out_shardings=self.param_sh)
+            self.params = init_fn(key)
+        else:
+            self.param_sh = None
+            self.params = self.lm.init(key)
+        self.opt_state = adamw.init(self.params)
+        self.counters = mon.init_counters(self.plan)
+        # abstract template so restore works even after total state loss
+        self._template = jax.tree_util.tree_map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+            self.state_tree())
+        self._dp = data_axes(mesh, self.plan) if mesh is not None else ()
+
+        step_fn = make_train_step(self.lm, self.plan, mesh, self.tc)
+        if mesh is not None:
+            self._step = jax.jit(step_fn, donate_argnums=(0, 1, 3))
+        else:
+            self._step = jax.jit(step_fn, donate_argnums=(0, 1, 3))
+
+    # ------------------------------------------------------------------ ckpt
+    def store(self):
+        from repro.checkpoint.store import CheckpointStore
+        if self._store is None:
+            self._store = CheckpointStore(self.tc.ckpt_dir)
+        return self._store
+
+    def state_tree(self):
+        return {"params": self.params, "opt": self.opt_state,
+                "step": jnp.asarray(self.step, jnp.int32)}
+
+    def save(self, async_: bool = True):
+        t = self.state_tree()
+        (self.store().save_async if async_ else self.store().save)(self.step, t)
+
+    def restore(self, step: Optional[int] = None):
+        """Elastic restore: target shardings come from the CURRENT mesh/plan,
+        which may differ from the one that saved (Vespa reconfig path)."""
+        like = self._template
+        shardings = None
+        if self.param_sh is not None:
+            opt_sh = adamw.AdamWState(
+                step=NamedSharding(self.mesh, P()),
+                mu=self.param_sh, nu=self.param_sh)
+            shardings = {"params": self.param_sh, "opt": opt_sh,
+                         "step": NamedSharding(self.mesh, P())}
+        t = self.store().restore(like, step=step, shardings=shardings)
+        self.params, self.opt_state = t["params"], t["opt"]
+        self.step = int(t["step"])
+
+    # ------------------------------------------------------------------ loop
+    def place_batch(self, np_batch):
+        if self.mesh is None:
+            return {k: jnp.asarray(v) for k, v in np_batch.items()}
+        from repro.data.pipeline import device_put_batch
+        return device_put_batch(np_batch, self.mesh, self._dp)
+
+    def run(self, steps: int, on_metrics: Optional[Callable] = None):
+        history = []
+        for _ in range(steps):
+            nb = self.data.batch_at(self.step)
+            batch = self.place_batch(nb)
+            self.params, self.opt_state, self.counters, m = self._step(
+                self.params, self.opt_state, batch, self.counters)
+            self.step += 1
+            if self.tc.monitor_every and self.step % self.tc.monitor_every == 0:
+                self.monitor.read(self.counters, self.step)
+            if self.tc.ckpt_every and self.step % self.tc.ckpt_every == 0:
+                self.save()
+            # DFS hitless commit point: between steps, never mid-step
+            self.islands = self.actuator.commit()
+            if self.tc.log_every and self.step % self.tc.log_every == 0:
+                mm = {k: float(v) for k, v in m.items()}
+                history.append((self.step, mm))
+                if on_metrics:
+                    on_metrics(self.step, mm)
+        if self._store is not None:
+            self._store.wait()
+        return history

@@ -1,0 +1,19 @@
+import os
+import sys
+
+# Tests run with the real (single-CPU-device) platform; ONLY the dry-run
+# sets xla_force_host_platform_device_count (per assignment).  Distributed
+# tests that need >1 device spawn subprocesses (see test_distributed.py).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,94 @@
+"""Attention backends: chunked/folded flash-in-XLA vs the naive oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.models import layers as L
+
+KEY = jax.random.PRNGKey(2)
+
+
+def _mk(B, S, KV, G, hd, dtype=jnp.float32):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, KV, G, hd), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return q, k, v, pos
+
+
+@pytest.mark.parametrize("folded", [False, True])
+@pytest.mark.parametrize("qb", [32, 64])
+def test_chunked_matches_naive(folded, qb):
+    q, k, v, pos = _mk(2, 256, 2, 3, 32)
+    scale = 1 / np.sqrt(32)
+    ref = L.attention_naive(q, k, v, pos, pos, 0, scale)
+    opts = L.AttnOptions(q_block=qb, kv_block=qb, folded=folded)
+    out = L.attention_chunked(q, k, v, pos, pos, 0, scale, opts)
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+def test_chunked_sliding_window():
+    q, k, v, pos = _mk(2, 256, 2, 2, 32)
+    scale = 1 / np.sqrt(32)
+    ref = L.attention_naive(q, k, v, pos, pos, 48, scale)
+    out = L.attention_chunked(q, k, v, pos, pos, 48, scale,
+                              L.AttnOptions(q_block=32, kv_block=32))
+    np.testing.assert_allclose(out, ref, atol=2e-5)
+
+
+def test_chunked_grad_matches_naive_grad():
+    q, k, v, pos = _mk(1, 128, 1, 2, 16)
+    scale = 1 / np.sqrt(16)
+
+    def f_naive(q):
+        return jnp.sum(L.attention_naive(q, k, v, pos, pos, 0, scale) ** 2)
+
+    def f_chunk(q):
+        return jnp.sum(L.attention_chunked(
+            q, k, v, pos, pos, 0, scale,
+            L.AttnOptions(q_block=32, kv_block=32, folded=True)) ** 2)
+
+    g1, g2 = jax.grad(f_naive)(q), jax.grad(f_chunk)(q)
+    np.testing.assert_allclose(g1, g2, atol=5e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    S=st.sampled_from([64, 128]),
+    KV=st.sampled_from([1, 2]),
+    G=st.sampled_from([1, 3]),
+    hd=st.sampled_from([8, 32]),
+    window=st.sampled_from([0, 16, 100]),
+)
+def test_property_chunked_equals_naive(S, KV, G, hd, window):
+    q, k, v, pos = _mk(1, S, KV, G, hd)
+    scale = 1 / np.sqrt(hd)
+    ref = L.attention_naive(q, k, v, pos, pos, window, scale)
+    out = L.attention_chunked(q, k, v, pos, pos, window, scale,
+                              L.AttnOptions(q_block=32, kv_block=32))
+    np.testing.assert_allclose(out, ref, atol=3e-5)
+
+
+def test_softmax_rows_sum_to_one_property():
+    """Online softmax invariant: output is a convex combination of V rows."""
+    q, k, v, pos = _mk(1, 64, 1, 1, 8)
+    vmax = jnp.max(jnp.abs(v))
+    out = L.attention_chunked(q, k, v, pos, pos, 0, 1.0,
+                              L.AttnOptions(q_block=16, kv_block=16))
+    assert float(jnp.max(jnp.abs(out))) <= float(vmax) + 1e-5
+
+
+def test_rope_rotation_invariant():
+    """RoPE: <rot(q,p), rot(k,p)> depends only on relative position."""
+    hd = 16
+    q = jax.random.normal(KEY, (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (1, 1, 1, hd))
+    def dot_at(pq, pk):
+        qr = L.apply_rope(q, jnp.array([[pq]], jnp.int32), 10_000.0)
+        kr = L.apply_rope(k, jnp.array([[pk]], jnp.int32), 10_000.0)
+        return float(jnp.sum(qr * kr))
+    assert abs(dot_at(5, 3) - dot_at(105, 103)) < 1e-4
+    assert abs(dot_at(5, 3) - dot_at(6, 3)) > 1e-6   # but not absolute-invariant

@@ -1,0 +1,81 @@
+"""Config registry + parameter accounting."""
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, list_configs, shapes_for
+from repro.configs.base import LM_SHAPES
+
+
+def test_all_assigned_archs_registered():
+    known = list_configs()
+    for a in ASSIGNED_ARCHS:
+        assert a in known
+    assert len(ASSIGNED_ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_config_sanity(arch):
+    cfg = get_config(arch)
+    assert cfg.n_layers > 0 and cfg.d_model > 0 and cfg.vocab_size > 0
+    if cfg.family in ("dense", "moe"):
+        assert cfg.n_heads * cfg.head_dim in (cfg.d_model,
+                                              cfg.n_heads * cfg.head_dim)
+        assert cfg.n_heads % max(cfg.n_kv_heads, 1) == 0
+    if cfg.family == "moe":
+        assert cfg.n_experts > 0 and cfg.top_k > 0
+    if cfg.family in ("ssm", "hybrid"):
+        assert cfg.ssm_state > 0
+        assert cfg.d_inner % cfg.ssm_headdim == 0
+
+
+# Published parameter counts (paper/hf tolerance: our count is within 20%).
+EXPECTED_PARAMS = {
+    "h2o-danube-1.8b": 1.8e9,
+    "phi3-medium-14b": 14e9,
+    "granite-8b": 8e9,
+    "gemma-2b": 2.5e9,            # 2.5B incl. the 256k-vocab embeddings
+    "deepseek-v2-lite-16b": 16e9,
+    "granite-moe-1b-a400m": 1.3e9,
+    "mamba2-370m": 0.37e9,
+    "zamba2-7b": 7.4e9,
+    "chameleon-34b": 34e9,
+    "musicgen-large": 3.3e9,
+}
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_param_counts_match_published(arch):
+    cfg = get_config(arch)
+    got = cfg.n_params()
+    exp = EXPECTED_PARAMS[arch]
+    assert 0.75 * exp <= got <= 1.35 * exp, (arch, got, exp)
+
+
+def test_moe_active_params_smaller():
+    cfg = get_config("deepseek-v2-lite-16b")
+    assert cfg.n_active_params() < 0.35 * cfg.n_params()
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_shape_cells(arch):
+    cfg = get_config(arch)
+    cells = shapes_for(cfg)
+    assert "train_4k" in cells and "decode_32k" in cells
+    if cfg.supports_long_context:
+        assert "long_500k" in cells
+    else:
+        assert "long_500k" not in cells
+
+
+def test_total_cells():
+    # 10x4 grid; long_500k applies to danube (SWA), mamba2, zamba2 only
+    total = sum(len(shapes_for(get_config(a))) for a in ASSIGNED_ARCHS)
+    assert total == 33
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_reduced_is_small_and_same_family(arch):
+    cfg = get_config(arch)
+    r = cfg.reduced()
+    assert r.family == cfg.family
+    assert r.d_model <= 128 and r.n_layers <= 4
+    assert r.vocab_size <= 1024

@@ -1,0 +1,193 @@
+"""Vespa core invariants: tiles, islands, DFS, monitor, NoC, perf model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as C
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.core.noc import NocConfig, NocModel, Flow, hops, xy_route
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_default_plan_valid(arch):
+    cfg = get_config(arch)
+    plan = C.default_plan(cfg)
+    C.validate_plan(plan, cfg)
+    isl = C.default_islands(plan)
+    C.validate_islands(isl, plan)
+
+
+def test_mra_knob_does_not_touch_other_tiles():
+    cfg = get_config("granite-8b")
+    plan = C.default_plan(cfg)
+    p2 = plan.with_replication("ffn", 4)
+    assert p2.tile("ffn").replication == 4
+    for t in plan.tiles:
+        if t.name != "ffn":
+            assert p2.tile(t.name) == t
+
+
+def test_replication_model_matches_table_i():
+    """Paper Table I: avg 1.92x @ K=2, 3.58x @ K=4."""
+    assert abs(C.replication_throughput_model(2) - 1.92) < 0.05
+    assert abs(C.replication_throughput_model(4) - 3.58) < 0.15
+    assert C.replication_throughput_model(1) == 1.0
+
+
+def test_replication_area_model_shape():
+    """Weights x K per device; activations unchanged (paper: DSP ~K,
+    LUT/FF/BRAM sub-K)."""
+    a1 = C.replication_area_model(100, 50, 1)
+    a4 = C.replication_area_model(100, 50, 4)
+    assert a4["weight_bytes_per_dev"] == 4 * a1["weight_bytes_per_dev"]
+    assert a4["act_bytes_per_dev"] == a1["act_bytes_per_dev"]
+    assert a4["total_bytes_per_dev"] < 4 * a1["total_bytes_per_dev"]
+
+
+def test_rate_ladder_matches_paper():
+    assert C.TILE_LADDER.levels_mhz() == tuple(range(10, 51, 5))
+    assert C.NOC_LADDER.levels_mhz() == tuple(range(10, 101, 5))
+    assert C.TILE_LADDER.quantize(0.43) in C.TILE_LADDER.levels()
+
+
+def test_dfs_actuator_hitless_swap():
+    cfg = get_config("granite-8b")
+    isl = C.default_islands(C.default_plan(cfg))
+    act = C.DFSActuator(isl)
+    v0 = act.live().version
+    act.reconfigure({"noc_mem": 0.5})
+    # live config untouched until commit (the master MMCM holds the clock)
+    assert act.live().version == v0
+    assert act.live().rate_of("noc") == 1.0
+    live = act.commit()
+    assert live.rate_of("noc") == 0.5 and live.version == v0 + 1
+    # abort path: shadow never observed
+    act.reconfigure({"noc_mem": 0.1})
+    act.abort()
+    assert act.commit().rate_of("noc") == 0.5
+
+
+def test_islands_are_partition():
+    cfg = get_config("zamba2-7b")
+    plan = C.default_plan(cfg)
+    isl = C.default_islands(plan)
+    seen = [t for i in isl.islands for t in i.tiles]
+    assert sorted(seen) == sorted(t.name for t in plan.tiles)
+
+
+def test_resync_boundaries_mra():
+    cfg = get_config("granite-8b")
+    plan = C.default_plan(cfg).with_replication("ffn", 4)
+    isl = C.default_islands(plan)
+    bs = C.resync_boundaries(plan, isl)
+    assert any(b.reason == "mra" for b in bs)
+
+
+# ------------------------------------------------------------------- monitor
+def test_counters_respect_enablement():
+    cfg = get_config("granite-8b")
+    plan = C.default_plan(cfg)
+    ctr = C.init_counters(plan)
+    assert "rtt" not in ctr["attn"]            # attn tile: 3 counters enabled
+    assert "rtt" in ctr["mem"]
+    ctr2 = C.charge(ctr, "attn", rtt=5.0)      # silently skipped
+    assert "rtt" not in ctr2["attn"]
+
+
+def test_counter_semantics_exec_replaces_pkts_accumulate():
+    cfg = get_config("granite-8b")
+    plan = C.default_plan(cfg)
+    ctr = C.init_counters(plan)
+    ctr = C.charge(ctr, "mem", pkts_in=10.0)
+    ctr = C.charge(ctr, "mem", pkts_in=5.0)
+    assert float(ctr["mem"]["pkts_in"]) == 15.0
+    ctr = C.charge(ctr, "io", exec_time=3.0)
+    ctr = C.charge(ctr, "io", exec_time=7.0)
+    assert float(ctr["io"]["exec_time"]) == 7.0        # auto-reset semantics
+    ctr = C.manual_reset(ctr)
+    assert float(ctr["mem"]["pkts_in"]) == 0.0
+    assert float(ctr["io"]["exec_time"]) == 7.0        # exec not reset
+
+
+@settings(max_examples=20, deadline=None)
+@given(bytes_list=st.lists(st.integers(0, 10_000), min_size=1, max_size=8))
+def test_boundary_charges_equal_byte_sum(bytes_list):
+    cfg = get_config("granite-8b")
+    plan = C.default_plan(cfg)
+    ctr = C.init_counters(plan)
+    total = 0
+    for n in bytes_list:
+        payload = jnp.zeros((n,), jnp.uint8)
+        ctr = C.charge_boundary(ctr, "attn", "mem", payload)
+        total += n
+    assert abs(float(ctr["mem"]["pkts_in"]) - total / C.PKT_BYTES) < 1e-4
+    assert abs(float(ctr["attn"]["pkts_out"]) - total / C.PKT_BYTES) < 1e-4
+
+
+# ----------------------------------------------------------------------- NoC
+def test_xy_route_lengths():
+    noc = NocConfig(4, 4)
+    assert hops(noc, (0, 0), (0, 0)) == 0
+    assert hops(noc, (0, 0), (3, 3)) == 6
+    assert hops(noc, (1, 1), (1, 0)) == 1
+
+
+def test_torus_wraps_shorter():
+    noc = NocConfig(4, 4, torus=True)
+    assert hops(noc, (0, 0), (0, 3)) == 1       # wrap
+    assert hops(noc, (0, 0), (3, 3)) == 2
+
+
+def test_contention_monotone():
+    noc = NocModel(NocConfig(4, 4))
+    s0 = noc.slowdown((3, 3), (1, 0))
+    noc.add_flow(Flow((2, 2), (1, 0), 0.5))
+    noc.add_flow(Flow((3, 1), (1, 0), 0.4))
+    s1 = noc.slowdown((3, 3), (1, 0))
+    assert s1 >= s0 >= 1.0
+
+
+# -------------------------------------------------------------- DFS policies
+def _telemetry(boundness, exec_time=1.0):
+    return C.TileTelemetry(exec_time=exec_time, pkts_in=0, pkts_out=0,
+                           rtt=0, boundness=boundness)
+
+
+def test_policy_memory_bound_drops_bound_islands():
+    cfg = get_config("granite-8b")
+    plan = C.default_plan(cfg)
+    isl = C.default_islands(plan)
+    tel = {t.name: _telemetry(0.9) for t in plan.tiles}
+    tel["ffn"] = _telemetry(0.1)
+    rates = C.policy_memory_bound(isl, tel)
+    assert rates["attn"] < 1.0                  # memory-bound -> derated
+    assert rates["ffn"] == 1.0                  # compute-bound -> full rate
+    assert "noc_mem" not in rates               # never derate the bottleneck
+
+
+def test_policy_straggler_keeps_straggler_fast():
+    cfg = get_config("granite-8b")
+    plan = C.default_plan(cfg)
+    isl = C.default_islands(plan)
+    tel = {t.name: _telemetry(0.5, exec_time=1.0) for t in plan.tiles}
+    tel["attn"] = _telemetry(0.5, exec_time=5.0)      # straggler
+    rates = C.policy_straggler(isl, tel)
+    assert rates["attn"] == 1.0
+    assert all(v <= 1.0 for v in rates.values())
+
+
+# ----------------------------------------------------------------- roofline
+def test_roofline_terms_and_dominance():
+    t = C.roofline_from_counts(flops=1e15, hbm_bytes=1e12,
+                               collective_bytes=1e9, chips=256)
+    assert t.t_compute > 0 and t.t_memory > 0 and t.t_collective > 0
+    assert t.dominant in ("compute", "memory", "collective")
+    assert 0 < t.roofline_fraction <= 1.0
+
+
+def test_dfs_rate_scales_terms():
+    t1 = C.roofline_from_counts(1e15, 1e12, 1e9, 256, f_comp=1.0)
+    t2 = C.roofline_from_counts(1e15, 1e12, 1e9, 256, f_comp=0.5)
+    assert abs(t2.t_compute - 2 * t1.t_compute) < 1e-12

@@ -1,0 +1,153 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret) vs pure-jnp oracle."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+# ------------------------------------------------------------ flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,S,KV,G,hdq,hdv,win", [
+    (2, 256, 2, 2, 64, 64, 0),
+    (1, 128, 1, 4, 32, 32, 0),        # MQA
+    (2, 256, 2, 2, 64, 64, 48),       # sliding window
+    (1, 128, 4, 1, 192, 128, 0),      # MLA dims (qk 192 / v 128)
+    (1, 512, 1, 1, 8, 8, 0),
+])
+def test_flash_attention_sweep(B, S, KV, G, hdq, hdv, win, dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, KV, G, hdq)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, hdq)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, hdv)).astype(dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    scale = 1 / np.sqrt(hdq)
+    out = ops.flash_attention(q, k, v, pos, pos, win, scale)
+    exp = ref.flash_attention_ref(q, k, v, pos, pos, scale=scale, window=win)
+    atol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=atol)
+
+
+def test_flash_attention_grad_matches_ref():
+    B, S, KV, G, hd = 1, 128, 1, 2, 16
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, KV, G, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    g1 = jax.grad(lambda q: ops.flash_attention(
+        q, k, v, pos, pos, 0, 0.25).sum())(q)
+    g2 = jax.grad(lambda q: ref.flash_attention_ref(
+        q, k, v, pos, pos, scale=0.25).sum())(q)
+    np.testing.assert_allclose(g1, g2, atol=5e-5)
+
+
+# ------------------------------------------------------------------- SSD scan
+@pytest.mark.parametrize("dtype", [jnp.float32])
+@pytest.mark.parametrize("B,L,nh,hd,st,chunk", [
+    (2, 128, 3, 32, 16, 32),
+    (1, 64, 1, 8, 8, 16),
+    (1, 256, 2, 64, 128, 64),
+    (3, 96, 4, 16, 32, 32),
+])
+def test_ssd_scan_sweep(B, L, nh, hd, st, chunk, dtype):
+    ks = jax.random.split(KEY, 5)
+    xs = jax.random.normal(ks[0], (B, L, nh, hd), dtype)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, nh), dtype))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,), dtype) * 0.2)
+    Bm = jax.random.normal(ks[3], (B, L, st), dtype)
+    Cm = jax.random.normal(ks[4], (B, L, st), dtype)
+    D = jnp.ones((nh,), dtype)
+    y, h = ops.ssd_scan(xs, dt, A, Bm, Cm, D, chunk)
+    ye, he = ref.ssd_scan_ref(xs, dt, A, Bm, Cm, D, chunk=chunk)
+    np.testing.assert_allclose(y, ye, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(h, he, atol=1e-4, rtol=1e-4)
+
+
+def test_ssd_matches_sequential_recurrence():
+    """Chunked SSD (any chunk) == token-by-token state recurrence."""
+    B, L, nh, hd, st = 1, 48, 2, 8, 4
+    ks = jax.random.split(KEY, 5)
+    xs = jax.random.normal(ks[0], (B, L, nh, hd))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, L, nh)))
+    A = -jnp.exp(jax.random.normal(ks[2], (nh,)) * 0.2)
+    Bm = jax.random.normal(ks[3], (B, L, st))
+    Cm = jax.random.normal(ks[4], (B, L, st))
+    D = jnp.zeros((nh,))
+
+    # independent oracle: plain recurrence
+    h = np.zeros((B, nh, st, hd))
+    ys = []
+    for t in range(L):
+        a = np.exp(np.asarray(dt[:, t]) * np.asarray(A))        # (B,nh)
+        upd = np.einsum("bn,bs,bnh->bnsh", np.asarray(dt[:, t]),
+                        np.asarray(Bm[:, t]), np.asarray(xs[:, t]))
+        h = h * a[:, :, None, None] + upd
+        ys.append(np.einsum("bs,bnsh->bnh", np.asarray(Cm[:, t]), h))
+    y_seq = np.stack(ys, axis=1)
+
+    for chunk in (8, 16, 48):
+        y, hf = ops.ssd_scan(xs, dt, A, Bm, Cm, D, chunk)
+        np.testing.assert_allclose(y, y_seq, atol=1e-4, rtol=1e-4)
+        np.testing.assert_allclose(hf, h, atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------------------ fused MLP
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+@pytest.mark.parametrize("N,d,F", [(64, 96, 128), (128, 64, 256)])
+def test_fused_mlp_sweep(N, d, F, act, dtype):
+    ks = jax.random.split(KEY, 4)
+    x = (jax.random.normal(ks[0], (N, d)) * 0.5).astype(dtype)
+    scale = jax.random.normal(ks[1], (d,)).astype(dtype) * 0.1
+    wg = (jax.random.normal(ks[2], (d, F)) * 0.1).astype(dtype)
+    wu = (jax.random.normal(ks[3], (d, F)) * 0.1).astype(dtype)
+    out = ops.fused_rmsnorm_mlp(x, scale, wg, wu, act)
+    exp = ref.fused_rmsnorm_mlp_ref(x, scale, wg, wu, act=act)
+    atol = 2e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), atol=atol)
+
+
+@settings(max_examples=10, deadline=None)
+@given(N=st.sampled_from([32, 64]), d=st.sampled_from([32, 64]),
+       F=st.sampled_from([64, 128]))
+def test_property_fused_mlp(N, d, F):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (N, d)) * 0.5
+    scale = jnp.zeros((d,))
+    wg = jax.random.normal(ks[2], (d, F)) * 0.1
+    wu = jax.random.normal(ks[3], (d, F)) * 0.1
+    out = ops.fused_rmsnorm_mlp(x, scale, wg, wu)
+    exp = ref.fused_rmsnorm_mlp_ref(x, scale, wg, wu)
+    np.testing.assert_allclose(out, exp, atol=3e-5)
+
+
+# -------------------------------------------------------------- flash decode
+@pytest.mark.parametrize("B,W,KV,G,hd,hdv,win,pos", [
+    (2, 256, 2, 2, 64, 64, 0, 100),
+    (1, 128, 1, 4, 32, 32, 0, 127),    # MQA, full cache
+    (2, 256, 2, 2, 64, 64, 48, 200),   # sliding window (ring semantics)
+    (1, 256, 4, 1, 192, 128, 0, 60),   # MLA dims
+])
+def test_flash_decode_sweep(B, W, KV, G, hd, hdv, win, pos):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, KV, G, hd), jnp.float32)
+    ck = jax.random.normal(ks[1], (B, W, KV, hd), jnp.float32)
+    cv = jax.random.normal(ks[2], (B, W, KV, hdv), jnp.float32)
+    qpos = jnp.full((B,), pos, jnp.int32)
+    idx = jnp.arange(W, dtype=jnp.int32)
+    # ring-buffer absolute positions: slots > pos%W hold older entries
+    wraps = pos // W
+    kpos = jnp.where(idx <= pos % W, wraps * W + idx, (wraps - 1) * W + idx)
+    kpos = jnp.where(kpos >= 0, kpos, 10**9)
+    kpos = jnp.broadcast_to(kpos[None], (B, W))
+    scale = 1 / np.sqrt(hd)
+    out = ops.flash_decode(q, ck, cv, qpos, kpos, win, scale, kv_block=64)
+    exp = ref.flash_decode_ref(q, ck, cv, qpos, kpos, scale=scale, window=win)
+    np.testing.assert_allclose(out, exp, atol=3e-5)

@@ -1,0 +1,110 @@
+"""Per-arch smoke tests (reduced configs) + decode/prefill consistency."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.models.layers import AttnOptions
+from repro.models.transformer import LM
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _lm(cfg, **kw):
+    return LM(cfg, opts=AttnOptions(backend="naive"), remat=False, **kw)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_forward_shapes_no_nan(arch):
+    cfg = get_config(arch).reduced()
+    lm = _lm(cfg)
+    params = lm.init(KEY)
+    B, S = 2, 32
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    logits, aux = lm.forward(params, tokens=toks)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert logits.dtype == jnp.float32
+    assert not bool(jnp.isnan(logits).any())
+    assert jnp.isfinite(aux)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_train_step_no_nan(arch):
+    cfg = get_config(arch).reduced()
+    lm = LM(cfg, opts=AttnOptions(backend="naive"), remat=True)
+    params = lm.init(KEY)
+    B, S = 2, 32
+    batch = {
+        "tokens": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(KEY, (B, S), 0, cfg.vocab_size),
+    }
+    (loss, parts), grads = jax.value_and_grad(lm.loss_fn, has_aux=True)(
+        params, batch)
+    assert jnp.isfinite(loss)
+    leaves = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in leaves)
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    """The serving path must agree with the training forward — exactly."""
+    cfg = get_config(arch).reduced()
+    lm = _lm(cfg)
+    params = jax.tree_util.tree_map(
+        lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+        lm.init(KEY))
+    B, S = 2, 33
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    full, _ = lm.forward(params, tokens=toks)
+    scale = float(jnp.max(jnp.abs(full))) or 1.0
+    lg_pref, cache = lm.prefill(params, tokens=toks[:, :S - 1], cache_len=S + 4)
+    cache = jax.tree_util.tree_map(
+        lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+        cache)
+    assert float(jnp.max(jnp.abs(lg_pref - full[:, S - 2]))) / scale < 1e-4
+    lg_dec, cache = lm.decode_step(params, cache, tokens=toks[:, S - 1:S])
+    assert float(jnp.max(jnp.abs(lg_dec - full[:, S - 1]))) / scale < 1e-4
+
+
+def test_sliding_window_ring_buffer_eviction():
+    """Danube SWA: decode far past the window must equal windowed forward."""
+    cfg = get_config("h2o-danube-1.8b").reduced()      # window = 32
+    lm = _lm(cfg)
+    params = jax.tree_util.tree_map(
+        lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+        lm.init(KEY))
+    B, S = 1, 40                                       # beyond the window
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    full, _ = lm.forward(params, tokens=toks)
+    _, cache = lm.prefill(params, tokens=toks[:, :S - 1], cache_len=64)
+    cache = jax.tree_util.tree_map(
+        lambda a: a.astype(jnp.float32) if a.dtype == jnp.bfloat16 else a,
+        cache)
+    lg, _ = lm.decode_step(params, cache, tokens=toks[:, S - 1:S])
+    scale = float(jnp.max(jnp.abs(full)))
+    assert float(jnp.max(jnp.abs(lg - full[:, S - 1]))) / scale < 1e-4
+
+
+def test_embeds_input_path():
+    """Modality-frontend stub: precomputed embeddings instead of tokens."""
+    cfg = get_config("musicgen-large").reduced()
+    lm = _lm(cfg)
+    params = lm.init(KEY)
+    B, S = 2, 16
+    emb = jax.random.normal(KEY, (B, S, cfg.d_model), jnp.float32) * 0.02
+    logits, _ = lm.forward(params, embeds=emb)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert not bool(jnp.isnan(logits).any())
+
+
+def test_hybrid_shared_tile_param_sharing():
+    """Zamba2: one physical shared-attention tile (params not per-layer)."""
+    cfg = get_config("zamba2-7b").reduced()
+    lm = _lm(cfg)
+    params = lm.init(KEY)
+    assert "shared_attn" in params
+    # blocks are stacked over layers; shared tile has no layer dim
+    wq = params["shared_attn"]["attn"]["wq"]
+    assert wq.ndim == 2
+    ssm_w = params["blocks"]["ssm"]["w_x"]
+    assert ssm_w.shape[0] == cfg.n_layers

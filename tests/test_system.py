@@ -1,0 +1,73 @@
+"""End-to-end system behaviour: the Vespa loop (train + monitor + DFS +
+checkpoint + DSE) running together, as a deployment would."""
+import numpy as np
+import pytest
+
+import repro.core as C
+from repro.configs import get_config
+from repro.configs.base import ShapeConfig
+from repro.core.dfs import TileTelemetry
+from repro.models.layers import AttnOptions
+from repro.optim import adamw
+from repro.runtime.fault import FaultSupervisor
+from repro.runtime.train import TrainConfig, Trainer
+
+
+def test_full_vespa_loop(tmp_path):
+    """Train with monitoring, apply a DFS policy from telemetry, checkpoint,
+    crash, recover, keep training — loss history stays consistent."""
+    cfg = get_config("h2o-danube-1.8b").reduced()
+    shape = ShapeConfig("tiny", 48, 4, "train")
+    tc = TrainConfig(log_every=1, ckpt_every=3, ckpt_dir=str(tmp_path),
+                     monitor_every=1,
+                     opt=adamw.AdamWConfig(lr=5e-4, warmup_steps=2,
+                                           total_steps=100))
+    tr = Trainer(cfg, shape, tc=tc,
+                 lm_kwargs=dict(opts=AttnOptions(backend="naive"),
+                                remat=True))
+    sup = FaultSupervisor(tr)
+
+    hist = tr.run(6)
+    assert len(tr.monitor.samples) >= 6
+
+    # C3 -> C2: derive telemetry from counters, run the Fig.4 policy, commit
+    sample = tr.monitor.samples[-1]
+    tel = {}
+    for t in tr.plan.tiles:
+        row = sample.counters.get(t.name, {})
+        tel[t.name] = TileTelemetry(
+            exec_time=row.get("exec_time", 1.0) or 1.0,
+            pkts_in=row.get("pkts_in", 0.0), pkts_out=row.get("pkts_out", 0.0),
+            rtt=row.get("rtt", 0.0), boundness=0.9)
+    rates = C.policy_memory_bound(tr.islands, tel)
+    tr.actuator.reconfigure(rates)
+    tr.run(1)                                  # hitless commit between steps
+    assert tr.actuator.swaps >= 1
+
+    # crash + recover
+    tr.store().wait()
+    before = tr.step
+    tr.params = None                           # simulated total state loss
+    sup.recover()
+    assert tr.step <= before
+    h2 = tr.run(2)
+    assert np.isfinite(h2[-1][1]["loss"])
+
+
+def test_dse_sweep_produces_pareto_front():
+    from repro.core.dse import sweep_soc, pareto_front, summarize
+    from repro.core.perfmodel import SoCPerfModel, AccelWorkload
+    from repro.configs.vespa_soc import CHSTONE
+
+    m = SoCPerfModel()
+    base, ai = CHSTONE["gsm"]
+    pts = sweep_soc(m, AccelWorkload("gsm", base, ai), n_tg=4)
+    assert len(pts) == 3 * 3 * 3 * 2
+    front = pareto_front(pts)
+    assert 1 <= len(front) < len(pts)
+    # placement matters: near-memory position dominates far for same config
+    near = [p for p in pts if p.placement["gsm"] == (1, 1)]
+    far = [p for p in pts if p.placement["gsm"] == (3, 3)]
+    assert np.mean([p.throughput for p in near]) >= np.mean(
+        [p.throughput for p in far])
+    assert "Pareto" in summarize(pts)
