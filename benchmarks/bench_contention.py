@@ -16,6 +16,8 @@ import json
 import os
 import time
 
+import numpy as np
+
 from repro.configs.vespa_soc import CHSTONE
 from repro.core.perfmodel import AccelWorkload, SoCPerfModel
 
@@ -25,15 +27,18 @@ DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
 
 def fig3_curves():
     m = SoCPerfModel()
-    rates = {"acc": 1.0, "noc_mem": 0.1, "tg": 1.0}   # paper: NoC at 10 MHz
     rows = []
     for name in ("adpcm", "dfmul"):
         base, ai = CHSTONE[name]
         wl = AccelWorkload(name, base, ai, replication=4)
         t0 = time.perf_counter_ns()
-        curve = [m.accel_throughput(wl, (3, 3), rates, n) for n in range(12)]
+        # the whole 0..11-TG curve in one batched call (n_tg is an axis);
+        # paper conditions: NoC at 10 MHz, accelerators and TGs at 50 MHz
+        curve = m.accel_throughput_batch(
+            base_mbps=base, wire_share=wl.wire_share, k=wl.replication,
+            f_acc=1.0, f_noc=0.1, f_tg=1.0, n_tg=np.arange(12), pos=(3, 3))
         us = (time.perf_counter_ns() - t0) / 1e3
-        norm = [c / curve[0] for c in curve]
+        norm = [float(c) / float(curve[0]) for c in curve]
         rows.append((f"fig3_{name}", us,
                      "thr@tg=" + "/".join(f"{v:.2f}" for v in norm[::2])
                      + f" flat7={norm[7] >= 0.9}"))

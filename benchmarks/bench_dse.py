@@ -1,8 +1,17 @@
 """DSE driver benchmark: the sweep Vespa exists to enable.
 
-Sweeps (replication K x island rates x placement) for a CHStone accelerator
-on the paper's SoC and reports the Pareto front; then ranks the §Perf pod
-strategies for the three hillclimbed cells from dry-run artifacts.
+Three parts:
+
+1. ``soc_dse`` — the original small scalar sweep (kept as the reference
+   and regression canary for the per-point path).
+2. ``soc_dse_batch`` — the batched engine at scale: a joint two-accelerator
+   sweep (K ladders x full island-rate ladders x all 4x4 placements,
+   >= 1e6 design points) through ``grid_sweep``, reporting points/second,
+   the O(N log N) Pareto front, and a scalar-parity spot check.  Emits
+   ``BENCH_dse.json`` (machine-readable) so the perf trajectory is tracked
+   across PRs.
+3. ``pod_strategy_ranking`` — ranks §Perf pod strategies for the three
+   hillclimbed cells from dry-run artifacts.
 """
 from __future__ import annotations
 
@@ -11,12 +20,16 @@ import json
 import os
 import time
 
+import numpy as np
+
 from repro.configs.vespa_soc import CHSTONE
-from repro.core.dse import pareto_front, sweep_soc
+from repro.core.dse import grid_sweep, pareto_front, sweep_soc
+from repro.core.islands import NOC_LADDER, TILE_LADDER
 from repro.core.perfmodel import AccelWorkload, SoCPerfModel
 
 DRYRUN = os.path.join(os.path.dirname(__file__), "..", "experiments",
                       "dryrun")
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_dse.json")
 
 
 def soc_dse():
@@ -31,6 +44,87 @@ def soc_dse():
              f"points={len(pts)} pareto={len(front)} "
              f"best: K={list(best.replication.values())[0]} "
              f"pos={list(best.placement.values())[0]} thr={best.throughput:.2f}")]
+
+
+def _parity_spot_check(m, res, samples=200, seed=0):
+    """Max relative error of the batched sweep vs the scalar path on a
+    random sample of valid points."""
+    rng = np.random.default_rng(seed)
+    valid = np.nonzero(res.valid)[0]
+    idx = rng.choice(valid, size=min(samples, valid.shape[0]), replace=False)
+    worst = 0.0
+    for i in idx:
+        dp = res.design_point(int(i))
+        total = 0.0
+        for wl in res.workloads:
+            w = AccelWorkload(wl.name, wl.base_mbps, wl.ai,
+                              replication=dp.replication[wl.name])
+            total += m.accel_throughput(w, dp.placement[wl.name], dp.rates,
+                                        res.n_tg)
+        worst = max(worst, abs(total - dp.throughput) / max(abs(total), 1e-12))
+    return worst
+
+
+def soc_dse_batch():
+    m = SoCPerfModel()
+    wls = [AccelWorkload("dfsin", *CHSTONE["dfsin"]),
+           AccelWorkload("gsm", *CHSTONE["gsm"])]
+    axes = dict(ks=(1, 2, 4), acc_rates=TILE_LADDER.levels(),
+                noc_rates=NOC_LADDER.levels(),
+                tg_rates=TILE_LADDER.levels()[::2], n_tg=4)
+
+    t0 = time.perf_counter()
+    res = grid_sweep(m, wls, **axes)
+    sweep_s = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    front = res.pareto_indices()
+    pareto_s = time.perf_counter() - t0
+    best = res.design_point(int(res.topk_indices(1)[0]))
+    parity = _parity_spot_check(m, res)
+
+    rows = [("dse_grid_sweep", sweep_s * 1e6,
+             f"points={len(res)} pps={len(res) / sweep_s:,.0f} "
+             f"pareto={front.shape[0]}({pareto_s:.2f}s) "
+             f"parity_rel_err={parity:.1e} "
+             f"best: K={best.replication} pos={best.placement} "
+             f"thr={best.throughput:.2f}")]
+
+    # jax.jit path on the same grid (first call includes compilation)
+    try:
+        t0 = time.perf_counter()
+        resj = grid_sweep(m, wls, **axes, backend="jax")
+        jax_s = time.perf_counter() - t0
+        dev = float(np.max(np.abs(resj.throughput - res.throughput)
+                           / np.maximum(np.abs(res.throughput), 1e-12)))
+        rows.append(("dse_grid_sweep_jax", jax_s * 1e6,
+                     f"points={len(resj)} pps={len(resj) / jax_s:,.0f} "
+                     f"max_rel_dev_vs_numpy={dev:.1e}"))
+        jax_stats = {"seconds": jax_s, "points_per_sec": len(resj) / jax_s,
+                     "max_rel_dev_vs_numpy": dev}
+    except Exception as e:                                # pragma: no cover
+        jax_stats = {"error": repr(e)}
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump({
+            "points": len(res),
+            "valid_points": res.n_valid,
+            "sweep_seconds": sweep_s,
+            "points_per_sec": len(res) / sweep_s,
+            "pareto_seconds": pareto_s,
+            "pareto_size": int(front.shape[0]),
+            "parity_max_rel_err": parity,
+            "backend": res.backend,
+            "jax": jax_stats,
+            "best": {"replication": best.replication,
+                     "rates": best.rates,
+                     "placement": {k: list(v)
+                                   for k, v in best.placement.items()},
+                     "throughput": best.throughput,
+                     "area": best.area,
+                     "energy_per_unit": best.energy_per_unit},
+        }, f, indent=2)
+    return rows
 
 
 def pod_strategy_ranking():
@@ -61,4 +155,4 @@ def pod_strategy_ranking():
 
 
 def run():
-    return soc_dse() + pod_strategy_ranking()
+    return soc_dse() + soc_dse_batch() + pod_strategy_ranking()

@@ -1,12 +1,25 @@
 """Benchmark harness: one module per paper table/figure (+ kernels, DSE).
 
-Prints ``name,us_per_call,derived`` CSV, as required.  Paper-claims
-benchmarks print the reproduced number next to the paper's measured value.
+Prints ``name,us_per_call,derived`` CSV by default, as required.
+``--json`` instead emits one machine-readable JSON document (a list of
+``{"name", "us_per_call", "derived"}`` rows) so CI can diff benchmark
+output across PRs; ``--out FILE`` writes it to a file as well.
+Paper-claims benchmarks print the reproduced number next to the paper's
+measured value.
 """
+import argparse
+import json
 import sys
 
 
-def main() -> None:
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", action="store_true",
+                    help="emit a JSON row list instead of CSV")
+    ap.add_argument("--out", default=None,
+                    help="also write the (JSON) output to this file")
+    args = ap.parse_args(argv)
+
     from benchmarks import (bench_contention, bench_dfs_traffic, bench_dse,
                             bench_kernels, bench_replication)
     mods = [("replication(TableI)", bench_replication),
@@ -14,15 +27,27 @@ def main() -> None:
             ("dfs_traffic(Fig4)", bench_dfs_traffic),
             ("dse", bench_dse),
             ("kernels", bench_kernels)]
-    print("name,us_per_call,derived")
+    rows = []
     failures = 0
     for label, mod in mods:
         try:
             for name, us, derived in mod.run():
-                print(f"{name},{us:.1f},{derived}")
+                rows.append({"name": name, "us_per_call": round(us, 1),
+                             "derived": derived})
         except Exception as e:  # pragma: no cover
             failures += 1
             print(f"{label},0,ERROR:{e!r}", file=sys.stderr)
+
+    if args.json:
+        doc = json.dumps(rows, indent=2)
+        print(doc)
+        if args.out:
+            with open(args.out, "w") as f:
+                f.write(doc + "\n")
+    else:
+        print("name,us_per_call,derived")
+        for r in rows:
+            print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
     if failures:
         raise SystemExit(1)
 

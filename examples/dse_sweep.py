@@ -1,16 +1,23 @@
 """Design-space exploration: the Vespa workflow end to end.
 
-Sweeps replication K x island rates x placement for a CHStone accelerator
-on the paper's 4x4 SoC, prints the Pareto front, then applies the DFS
-energy policy to the best point.
+Runs the batched DSE engine over the full design space for a CHStone
+accelerator on the paper's 4x4 SoC — replication K x the complete
+island-rate ladders x every grid placement — prints the Pareto front and
+points/second, cross-checks a few points against the scalar reference
+path, then applies the batched DFS energy policy to the chosen design.
 
     PYTHONPATH=src python examples/dse_sweep.py --accel dfadd
 """
 import argparse
 
+import numpy as np
+
 from repro.configs.vespa_soc import CHSTONE
-from repro.core.dse import pareto_front, summarize, sweep_soc
-from repro.core.perfmodel import AccelWorkload, SoCPerfModel
+from repro.core.dfs import policy_energy_per_token_sweep
+from repro.core.dse import grid_sweep, summarize_result
+from repro.core.islands import (IslandConfig, IslandSpec, NOC_LADDER,
+                                TILE_LADDER)
+from repro.core.perfmodel import AccelWorkload, SoCPerfModel, chip_power
 
 
 def main() -> None:
@@ -18,21 +25,59 @@ def main() -> None:
     ap.add_argument("--accel", default="dfadd", choices=sorted(CHSTONE))
     ap.add_argument("--tg", type=int, default=4,
                     help="active traffic generators")
+    ap.add_argument("--backend", default="numpy", choices=("numpy", "jax"))
     args = ap.parse_args()
 
     base, ai = CHSTONE[args.accel]
     wl = AccelWorkload(args.accel, base, ai)
     model = SoCPerfModel()
-    pts = sweep_soc(model, wl, n_tg=args.tg)
-    print(f"swept {len(pts)} design points for {args.accel} "
-          f"(ai={ai}, {'compute' if wl.compute_bound else 'memory'}-bound)")
-    print(summarize(pts))
 
-    best = max(pareto_front(pts), key=lambda p: p.throughput)
-    print(f"\nchosen design: K={best.replication} rates={best.rates} "
+    # Full ladders, all placements, K up to 8 — one vectorized sweep.
+    res = grid_sweep(
+        model, wl, ks=(1, 2, 4, 8),
+        acc_rates=TILE_LADDER.levels(), noc_rates=NOC_LADDER.levels(),
+        tg_rates=TILE_LADDER.levels(), n_tg=args.tg, backend=args.backend)
+    print(f"swept {len(res):,} design points for {args.accel} "
+          f"(ai={ai}, {'compute' if wl.compute_bound else 'memory'}-bound) "
+          f"in {res.elapsed_s:.3f}s [{args.backend}]")
+    print(summarize_result(res))
+
+    # Spot-check the batched engine against the scalar reference path.
+    spots = res.topk_indices(3)
+    worst = 0.0
+    for i in spots:
+        dp = res.design_point(int(i))
+        k = dp.replication[wl.name]
+        s = model.accel_throughput(
+            AccelWorkload(wl.name, base, ai, replication=k),
+            dp.placement[wl.name], dp.rates, args.tg)
+        worst = max(worst, abs(s - dp.throughput) / max(s, 1e-12))
+    print(f"\nscalar-path spot check on top-3: max rel err {worst:.2e}")
+
+    best = res.design_point(int(res.topk_indices(1)[0]))
+    print(f"chosen design: K={best.replication} rates={best.rates} "
           f"placement={best.placement}")
     print(f"throughput {best.throughput:.2f} MB/s at "
           f"{best.energy_per_unit:.1f} W/(MB/s)")
+
+    # Batched DFS energy policy on the chosen design: all acc x noc rate
+    # combinations are evaluated in one vectorized call.
+    k = best.replication[wl.name]
+    pos = best.placement[wl.name]
+    islands = IslandConfig((
+        IslandSpec("acc", (wl.name,), TILE_LADDER, 1.0),
+        IslandSpec("noc_mem", ("NOC", "MEM"), NOC_LADDER, 1.0)))
+
+    def eval_batch(rates):
+        fa, fn = rates["acc"], rates["noc_mem"]
+        tps = model.accel_throughput_batch(
+            base_mbps=base, wire_share=wl.wire_share, k=k,
+            f_acc=fa, f_noc=fn, f_tg=1.0, n_tg=args.tg, pos=pos)
+        watts = chip_power(fa, 1.0) + 0.3 * chip_power(fn, 1.0)
+        return tps, np.broadcast_to(watts, np.shape(tps))
+
+    rates = policy_energy_per_token_sweep(islands, eval_batch)
+    print(f"DFS energy policy (batched ladder sweep): {rates}")
 
 
 if __name__ == "__main__":

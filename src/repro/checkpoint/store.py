@@ -33,7 +33,30 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:                       # container without zstandard:
+    zstandard = None                      # fall back to stdlib zlib
+import zlib
+
+_ZSTD_MAGIC = b"\x28\xb5\x2f\xfd"
+
+
+def _compress(data: bytes, level: int) -> bytes:
+    if zstandard is not None:
+        return zstandard.ZstdCompressor(level=level).compress(data)
+    return zlib.compress(data, min(level, 9))
+
+
+def _decompress(blob: bytes) -> bytes:
+    if blob[:4] == _ZSTD_MAGIC:
+        if zstandard is None:
+            raise RuntimeError(
+                "checkpoint was written with zstd but zstandard is not "
+                "installed; pip install zstandard to restore it")
+        return zstandard.ZstdDecompressor().decompress(blob)
+    return zlib.decompress(blob)
 
 
 def _flatten_with_paths(tree):
@@ -72,7 +95,6 @@ class CheckpointStore:
         tmp = final + ".tmp"
         shutil.rmtree(tmp, ignore_errors=True)
         os.makedirs(tmp)
-        cctx = zstandard.ZstdCompressor(level=self.zstd_level)
         manifest: Dict[str, Any] = {"step": step, "leaves": []}
         offset = 0
         chunks: List[bytes] = []
@@ -83,7 +105,7 @@ class CheckpointStore:
                 "host": 0, "offset": offset, "length": len(raw)})
             chunks.append(raw)
             offset += len(raw)
-        blob = cctx.compress(b"".join(chunks))
+        blob = _compress(b"".join(chunks), self.zstd_level)
         with open(os.path.join(tmp, "shard_00000.bin.zst"), "wb") as f:
             f.write(blob)
         with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
@@ -143,7 +165,7 @@ class CheckpointStore:
         with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
             manifest = msgpack.unpackb(f.read())
         with open(os.path.join(d, "shard_00000.bin.zst"), "rb") as f:
-            blob = zstandard.ZstdDecompressor().decompress(f.read())
+            blob = _decompress(f.read())
         by_path = {l["path"]: l for l in manifest["leaves"]}
 
         paths, leaves, treedef = _flatten_with_paths(like)

@@ -14,11 +14,18 @@ from repro.core.islands import (  # noqa: F401
     default_islands, validate_islands, resync_boundaries)
 from repro.core.dfs import (  # noqa: F401
     DFSActuator, TileTelemetry, policy_memory_bound, policy_straggler,
-    policy_energy_per_token)
+    policy_energy_per_token, policy_energy_per_token_sweep)
 from repro.core.monitor import (  # noqa: F401
     Counters, MonitorClient, PKT_BYTES, init_counters, charge,
     charge_boundary, manual_reset, bytes_of, pkts)
+from repro.core.noc import (  # noqa: F401
+    NocConfig, NocModel, Flow, RoutingTables, routing_tables, hops_batch,
+    link_loads_batch, route_max_utilization, positions_to_indices)
 from repro.core.perfmodel import (  # noqa: F401
     RooflineTerms, roofline_from_counts, model_flops, SoCPerfModel,
     AccelWorkload, PEAK_FLOPS, HBM_BW, ICI_BW, chip_power)
+from repro.core.dse import (  # noqa: F401
+    DesignPoint, SweepResult, grid_sweep, sweep_soc, pareto_front,
+    pareto_front_bruteforce, pareto_front_indices, summarize,
+    summarize_result)
 from repro.core import dse  # noqa: F401

@@ -153,6 +153,50 @@ def policy_straggler(islands: IslandConfig,
     return out
 
 
+def policy_energy_per_token_sweep(
+        islands: IslandConfig,
+        perf_eval_batch: Callable[[Dict[str, np.ndarray]],
+                                  Tuple[np.ndarray, np.ndarray]],
+        *, max_loss: float = 0.02) -> Dict[str, float]:
+    """Exhaustive batched rate search minimizing energy/token.
+
+    The batched counterpart of :func:`policy_energy_per_token`: instead of
+    greedy coordinate descent with one scalar ``perf_eval`` call per probe,
+    it materializes the full cross-product of every non-fixed island's rate
+    ladder as stacked arrays and evaluates all configurations in ONE
+    ``perf_eval_batch`` call — ``perf_eval_batch({island: rates_array})
+    -> (tokens_per_s_array, watts_array)`` (built on
+    ``SoCPerfModel.accel_throughput_batch`` in practice).  Ladders are
+    small (9–19 levels), so the exhaustive grid is ~1e4–1e6 points, well
+    inside the batched engine's budget, and — unlike coordinate descent —
+    it cannot get stuck in a local minimum.
+
+    Returns the rate assignment with the lowest watts/token among points
+    whose throughput is within ``max_loss`` of the all-max-rates config.
+    """
+    free = [isl for isl in islands.islands if not isl.fixed]
+    if not free:
+        return {}
+    ladders = [np.asarray(isl.ladder.levels(), dtype=np.float64)
+               for isl in free]
+    grids = np.meshgrid(*ladders, indexing="ij")
+    flat = {isl.name: g.ravel() for isl, g in zip(free, grids)}
+    tps, watts = perf_eval_batch(flat)
+    tps = np.asarray(tps, dtype=np.float64)
+    watts = np.asarray(watts, dtype=np.float64)
+    # baseline = every island at its max ladder level (flat index computed
+    # explicitly: a ladder whose step doesn't divide its range never
+    # contains f/f_max == 1.0 as its last level)
+    base_idx = np.ravel_multi_index(
+        tuple(int(np.argmax(lv)) for lv in ladders),
+        tuple(lv.shape[0] for lv in ladders))
+    base_tps = tps[base_idx]
+    feasible = tps >= (1.0 - max_loss) * base_tps
+    ept = np.where(feasible, watts / np.maximum(tps, 1e-9), np.inf)
+    best = int(np.argmin(ept))
+    return {isl.name: float(flat[isl.name][best]) for isl in free}
+
+
 def policy_energy_per_token(islands: IslandConfig,
                             telemetry: Dict[str, TileTelemetry],
                             perf_eval: Callable[[Dict[str, float]], Tuple[float, float]],

@@ -9,17 +9,38 @@ Sweeps the paper's three design axes and reports Pareto-optimal points:
 Two evaluation backends: the analytic :class:`SoCPerfModel` (fast, used for
 sweeps and the paper-claims benchmarks) and the dry-run roofline
 (launch/dryrun.py), used to validate chosen points against compiled HLO.
+
+Two evaluation *shapes*:
+
+* :func:`sweep_soc` — the original scalar ``itertools.product`` loop.  It
+  builds a :class:`DesignPoint` per point and is kept as the slow,
+  obviously-correct reference the batched engine is tested against.
+* :func:`grid_sweep` — the batched array program.  It materializes the
+  full cross-product (joint multi-accelerator K ladders x island-rate
+  ladders x all grid placements) as broadcast axes, pushes the whole grid
+  through ``SoCPerfModel.accel_throughput_batch`` in one vectorized call,
+  and returns a :class:`SweepResult` of flat objective arrays — millions
+  of design points per second, no per-point Python objects.  DesignPoints
+  are materialized lazily (:meth:`SweepResult.design_point`) only for the
+  handful of survivors (Pareto front / top-k).
+
+The Pareto front is sort-based O(N log N) (:func:`pareto_front_indices`);
+the O(N^2) brute force survives as :func:`pareto_front_bruteforce` for
+verification.
 """
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import time
+from bisect import bisect_right
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.islands import IslandConfig, NOC_LADDER, TILE_LADDER
+from repro.core.noc import pos_index
 from repro.core.perfmodel import AccelWorkload, SoCPerfModel, chip_power
 from repro.core.replication import (replication_area_model,
                                     replication_throughput_model)
@@ -41,8 +62,86 @@ class DesignPoint:
                 tuple(sorted(self.placement.items())))
 
 
-def pareto_front(points: Sequence[DesignPoint]) -> List[DesignPoint]:
-    """Maximize throughput, minimize area & energy."""
+# ---------------------------------------------------------------------------
+# Pareto fronts
+# ---------------------------------------------------------------------------
+
+
+def pareto_front_indices(throughput, area, energy) -> np.ndarray:
+    """Indices of the 3-objective Pareto front in O(N log N).
+
+    Maximize ``throughput``; minimize ``area`` and ``energy``.  Points are
+    processed in descending-throughput groups; a (area, energy) staircase
+    of the already-accepted, strictly-faster points answers "is this point
+    dominated?" in O(log F).  Semantics match the O(N^2) brute force: q
+    dominates p iff q is >=/<=/<= on all three objectives and strictly
+    better on at least one (exact duplicates do not dominate each other).
+    Returns indices in ascending input order.
+    """
+    thr = np.asarray(throughput, dtype=np.float64)
+    area = np.asarray(area, dtype=np.float64)
+    energy = np.asarray(energy, dtype=np.float64)
+    n = thr.shape[0]
+    if n == 0:
+        return np.empty(0, dtype=np.int64)
+    order = np.lexsort((energy, area, -thr))
+    # python lists: ~3x faster to index in the scan than numpy scalars
+    thr_l = thr[order].tolist()
+    area_l = area[order].tolist()
+    energy_l = energy[order].tolist()
+    order_l = order.tolist()
+
+    keep: List[int] = []
+    stair_a: List[float] = []       # staircase areas, ascending
+    stair_e: List[float] = []       # matching energies, strictly descending
+    INF = float("inf")
+    i = 0
+    while i < n:
+        j = i
+        t = thr_l[i]
+        while j < n and thr_l[j] == t:
+            j += 1
+        # 1) cull against strictly-faster accepted points
+        survivors = []
+        for p in range(i, j):
+            a, e = area_l[p], energy_l[p]
+            s = bisect_right(stair_a, a)
+            if s > 0 and stair_e[s - 1] <= e:
+                continue                      # dominated by a faster point
+            survivors.append(p)
+        # 2) within-group dominance (equal throughput; needs strictness).
+        # survivors are sorted by (area, energy) thanks to the lexsort.
+        best_e_smaller_area = INF             # min energy over area < cur
+        cur_area, cur_min_e = None, INF       # min energy within area == cur
+        kept_group: List[Tuple[float, float]] = []
+        for p in survivors:
+            a, e = area_l[p], energy_l[p]
+            if a != cur_area:
+                best_e_smaller_area = min(best_e_smaller_area, cur_min_e)
+                cur_area, cur_min_e = a, INF
+            if not (best_e_smaller_area <= e or cur_min_e < e):
+                keep.append(order_l[p])
+                kept_group.append((a, e))
+            cur_min_e = min(cur_min_e, e)
+        # 3) fold the group's minimal (area, energy) pairs into the staircase
+        for a, e in kept_group:
+            s = bisect_right(stair_a, a)
+            if s > 0 and stair_e[s - 1] <= e:
+                continue                      # already covered
+            stair_a.insert(s, a)
+            stair_e.insert(s, e)
+            k = s + 1
+            while k < len(stair_a) and stair_e[k] >= e:
+                k += 1
+            del stair_a[s + 1:k]
+            del stair_e[s + 1:k]
+        i = j
+    keep.sort()
+    return np.asarray(keep, dtype=np.int64)
+
+
+def pareto_front_bruteforce(points: Sequence[DesignPoint]) -> List[DesignPoint]:
+    """O(N^2) reference implementation (kept for verification/tests)."""
     front: List[DesignPoint] = []
     for p in points:
         dominated = False
@@ -60,13 +159,215 @@ def pareto_front(points: Sequence[DesignPoint]) -> List[DesignPoint]:
     return front
 
 
+def pareto_front(points: Sequence[DesignPoint]) -> List[DesignPoint]:
+    """Maximize throughput, minimize area & energy — O(N log N)."""
+    pts = list(points)
+    idx = pareto_front_indices(
+        np.asarray([p.throughput for p in pts]),
+        np.asarray([p.area for p in pts]),
+        np.asarray([p.energy_per_unit for p in pts]))
+    return [pts[i] for i in idx]
+
+
+# ---------------------------------------------------------------------------
+# Batched grid sweep
+# ---------------------------------------------------------------------------
+
+
+@dataclass(eq=False)
+class SweepResult:
+    """Objective arrays for a full cross-product sweep, plus lazy
+    :class:`DesignPoint` materialization.
+
+    ``axes`` is the ordered list of (name, values) swept dimensions; flat
+    arrays are C-ordered over ``shape``, so axis values for point ``i`` are
+    recovered with ``np.unravel_index`` — no per-point objects exist until
+    :meth:`design_point` is called for a survivor.
+    """
+    axes: Tuple[Tuple[str, Tuple], ...]
+    shape: Tuple[int, ...]
+    workloads: Tuple[AccelWorkload, ...]
+    n_tg: int
+    throughput: np.ndarray              # (N,) float64, total across accels
+    area: np.ndarray                    # (N,) float64
+    energy_per_unit: np.ndarray         # (N,) float64
+    valid: np.ndarray                   # (N,) bool (placement collisions out)
+    elapsed_s: float = 0.0
+    backend: str = "numpy"
+
+    def __len__(self) -> int:
+        return int(self.throughput.shape[0])
+
+    @property
+    def n_valid(self) -> int:
+        return int(self.valid.sum())
+
+    @property
+    def points_per_second(self) -> float:
+        return len(self) / self.elapsed_s if self.elapsed_s > 0 else float("inf")
+
+    def pareto_indices(self) -> np.ndarray:
+        """Flat indices of the (valid-only) Pareto front, O(N log N)."""
+        flat = np.nonzero(self.valid)[0]
+        sub = pareto_front_indices(self.throughput[flat], self.area[flat],
+                                   self.energy_per_unit[flat])
+        return flat[sub]
+
+    def topk_indices(self, k: int, objective: str = "throughput",
+                     maximize: Optional[bool] = None) -> np.ndarray:
+        """Flat indices of the k best valid points on one objective,
+        best-first, via argpartition (no full sort, no DesignPoints)."""
+        vals = getattr(self, objective)
+        if maximize is None:
+            maximize = objective == "throughput"
+        flat = np.nonzero(self.valid)[0]
+        v = vals[flat]
+        k = min(k, v.shape[0])
+        if k == 0:
+            return np.empty(0, dtype=np.int64)
+        key = -v if maximize else v
+        part = np.argpartition(key, k - 1)[:k]
+        return flat[part[np.argsort(key[part], kind="stable")]]
+
+    def axis_values(self, i: int) -> Dict[str, object]:
+        """Swept axis values of flat point ``i`` as {axis_name: value}."""
+        coords = np.unravel_index(i, self.shape)
+        return {name: values[c]
+                for (name, values), c in zip(self.axes, coords)}
+
+    def design_point(self, i: int) -> DesignPoint:
+        """Materialize one flat index as a :class:`DesignPoint`."""
+        av = self.axis_values(i)
+        replication = {wl.name: int(av[f"K:{wl.name}"])
+                       for wl in self.workloads}
+        placement = {wl.name: tuple(av[f"pos:{wl.name}"])
+                     for wl in self.workloads}
+        rates = {"acc": float(av["f_acc"]), "noc_mem": float(av["f_noc"]),
+                 "tg": float(av["f_tg"])}
+        return DesignPoint(
+            replication=replication, rates=rates, placement=placement,
+            throughput=float(self.throughput[i]), area=float(self.area[i]),
+            energy_per_unit=float(self.energy_per_unit[i]))
+
+    def design_points(self, indices: Iterable[int]) -> List[DesignPoint]:
+        return [self.design_point(int(i)) for i in indices]
+
+
+def _axis(values, dim: int, ndim: int) -> np.ndarray:
+    """Reshape a 1-D axis to broadcast at dimension ``dim`` of ``ndim``."""
+    a = np.asarray(values)
+    shape = [1] * ndim
+    shape[dim] = a.shape[0]
+    return a.reshape(shape)
+
+
+def grid_sweep(model: SoCPerfModel,
+               workloads,
+               *,
+               ks: Sequence[int] = (1, 2, 4),
+               acc_rates: Sequence[float] = (0.2, 0.6, 1.0),
+               noc_rates: Sequence[float] = (0.1, 0.5, 1.0),
+               tg_rates: Sequence[float] = (1.0,),
+               positions: Optional[Sequence[Tuple[int, int]]] = None,
+               n_tg: int = 0,
+               backend: str = "numpy") -> SweepResult:
+    """Batched cross-product sweep over the paper's design axes.
+
+    ``workloads`` is one :class:`AccelWorkload` or a sequence for a *joint*
+    multi-accelerator sweep (each accelerator gets its own K axis and its
+    own placement axis; rates are shared, as in the paper's islands).  The
+    swept dimensions, in axis order, are::
+
+        K:<wl> (per accel) | f_noc | f_acc | f_tg | pos:<wl> (per accel)
+
+    ``positions`` defaults to every grid node except the MEM tile.  Joint
+    placements where two accelerators collide are masked invalid (their
+    objective entries are still computed — the arrays stay rectangular —
+    but :meth:`SweepResult.pareto_indices` / ``topk_indices`` skip them).
+
+    Throughput of a joint point is the sum of the accelerators' modeled
+    throughputs; area sums each accelerator's replication cost; energy is
+    chip power at (f_acc, f_noc) per unit of total throughput — identical
+    formulas to :func:`sweep_soc`, evaluated as arrays.  With
+    ``backend="jax"`` the throughput kernel runs jit-compiled.
+    """
+    if isinstance(workloads, AccelWorkload):
+        workloads = (workloads,)
+    workloads = tuple(workloads)
+    if positions is None:
+        positions = [(r, c) for r in range(model.noc.rows)
+                     for c in range(model.noc.cols)
+                     if (r, c) != model.mem_pos]
+    positions = [tuple(p) for p in positions]
+    pos_idx = np.asarray([pos_index(model.noc, p) for p in positions])
+
+    A = len(workloads)
+    axes: List[Tuple[str, Tuple]] = []
+    for wl in workloads:
+        axes.append((f"K:{wl.name}", tuple(int(k) for k in ks)))
+    axes.append(("f_noc", tuple(float(f) for f in noc_rates)))
+    axes.append(("f_acc", tuple(float(f) for f in acc_rates)))
+    axes.append(("f_tg", tuple(float(f) for f in tg_rates)))
+    for wl in workloads:
+        axes.append((f"pos:{wl.name}", tuple(positions)))
+    ndim = len(axes)
+    shape = tuple(len(v) for _, v in axes)
+
+    t0 = time.perf_counter()
+    k_ax = [_axis([float(k) for k in ks], a, ndim) for a in range(A)]
+    fn_ax = _axis(list(noc_rates), A, ndim)
+    fa_ax = _axis(list(acc_rates), A + 1, ndim)
+    ft_ax = _axis(list(tg_rates), A + 2, ndim)
+    pos_ax = [_axis(pos_idx, A + 3 + a, ndim) for a in range(A)]
+
+    total_thr = np.zeros(shape, dtype=np.float64)
+    for a, wl in enumerate(workloads):
+        thr = model.accel_throughput_batch(
+            base_mbps=wl.base_mbps, wire_share=wl.wire_share, k=k_ax[a],
+            f_acc=fa_ax, f_noc=fn_ax, f_tg=ft_ax, n_tg=n_tg,
+            pos_idx=pos_ax[a], backend=backend)
+        total_thr = total_thr + np.broadcast_to(thr, shape)
+
+    # area: replication cost per accel, looked up per K level
+    area_by_k = {int(k): replication_area_model(
+        weight_bytes=1.0, act_bytes=0.5, k=int(k))["total_bytes_per_dev"]
+        for k in ks}
+    area = np.zeros(shape, dtype=np.float64)
+    for a in range(A):
+        area = area + _axis([area_by_k[int(k)] for k in ks], a, ndim)
+
+    power = chip_power(fa_ax, busy=1.0) + 0.3 * chip_power(fn_ax, busy=1.0)
+    energy = np.broadcast_to(power, shape) / np.maximum(total_thr, 1e-9)
+
+    valid = np.ones(shape, dtype=bool)
+    for a in range(A):
+        for b in range(a + 1, A):
+            valid &= pos_ax[a] != pos_ax[b]
+
+    elapsed = time.perf_counter() - t0
+    return SweepResult(
+        axes=tuple(axes), shape=shape, workloads=workloads, n_tg=n_tg,
+        throughput=total_thr.ravel(),
+        area=np.ascontiguousarray(np.broadcast_to(area, shape)).ravel(),
+        energy_per_unit=energy.ravel(), valid=valid.ravel(),
+        elapsed_s=elapsed, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Scalar reference sweep (original API)
+# ---------------------------------------------------------------------------
+
+
 def sweep_soc(model: SoCPerfModel, wl: AccelWorkload,
               *, ks: Sequence[int] = (1, 2, 4),
               noc_rates: Sequence[float] = (0.1, 0.5, 1.0),
               acc_rates: Sequence[float] = (0.2, 0.6, 1.0),
               positions: Sequence[Tuple[int, int]] = ((1, 1), (3, 3)),
               n_tg: int = 0) -> List[DesignPoint]:
-    """Exhaustive sweep over the paper's axes for one accelerator."""
+    """Exhaustive scalar sweep over the paper's axes for one accelerator.
+
+    The per-point reference path; :func:`grid_sweep` is the batched
+    equivalent and is tested to match it within fp tolerance."""
     out: List[DesignPoint] = []
     for k, fn, fa, pos in itertools.product(ks, noc_rates, acc_rates,
                                             positions):
@@ -102,6 +403,21 @@ def summarize(points: Sequence[DesignPoint], top: int = 10) -> str:
     front.sort(key=lambda p: -p.throughput)
     lines = [f"{len(points)} points, {len(front)} on Pareto front"]
     for p in front[:top]:
+        lines.append(
+            f"  K={p.replication}  rates={ {k: round(v, 2) for k, v in p.rates.items()} }"
+            f"  pos={p.placement}  thr={p.throughput:.2f}  area={p.area:.2f}"
+            f"  E/u={p.energy_per_unit:.1f}")
+    return "\n".join(lines)
+
+
+def summarize_result(res: SweepResult, top: int = 10) -> str:
+    """Summary of a batched sweep without materializing all points."""
+    front_idx = res.pareto_indices()
+    order = np.argsort(-res.throughput[front_idx], kind="stable")
+    lines = [f"{len(res)} points ({res.n_valid} valid, "
+             f"{res.points_per_second:,.0f} pts/s), "
+             f"{front_idx.shape[0]} on Pareto front"]
+    for p in res.design_points(front_idx[order][:top]):
         lines.append(
             f"  K={p.replication}  rates={ {k: round(v, 2) for k, v in p.rates.items()} }"
             f"  pos={p.placement}  thr={p.throughput:.2f}  area={p.area:.2f}"

@@ -21,13 +21,15 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
 from repro.core.islands import IslandConfig
 from repro.core.noc import (Flow, NocConfig, NocModel,
-                            collective_bytes_ring_allreduce)
+                            collective_bytes_ring_allreduce, hops,
+                            pos_index, routing_tables)
 from repro.core.tiles import TilePlan
 
 # ---------------------------------------------------------------------------
@@ -150,6 +152,63 @@ class AccelWorkload:
         return 0.01 if self.compute_bound else 0.14
 
 
+def _throughput_math(xp, base_mbps, wire_share, k, f_acc, f_noc, f_tg,
+                     n_tg, hop_counts, *, own_demand, tg_demand, link_bw,
+                     hop_latency_share, ref_hops):
+    """The accelerator service-time model as pure array math.
+
+    ``xp`` is the array namespace (numpy or jax.numpy); every data argument
+    broadcasts, so the same expression serves the scalar wrapper, the numpy
+    batch path, and the jitted jax path.  Kept in one place so the three
+    paths can never drift.
+    """
+    f_acc = xp.maximum(f_acc, 1e-3)
+    f_noc = xp.maximum(f_noc, 1e-3)
+    w = wire_share
+    # NoC saturation: proportional sharing of the f_noc-scaled capacity
+    load = own_demand + tg_demand * f_tg * n_tg
+    slow = xp.maximum(1.0, load / (link_bw * f_noc))
+    hopf = 1.0 + hop_latency_share * hop_counts
+    t = (1.0 - w) / (k * f_acc) + w * slow * hopf / f_noc
+    # normalize to Table I conditions (A1, K=1, f=1, no TG)
+    hopf0 = 1.0 + hop_latency_share * ref_hops
+    t0 = (1.0 - w) + w * max(1.0, own_demand) * hopf0
+    return base_mbps * t0 / t
+
+
+@lru_cache(maxsize=None)
+def _jitted_throughput_kernel(own_demand: float, tg_demand: float,
+                              link_bw: float, hop_latency_share: float,
+                              ref_hops: float):
+    """jax.jit-compiled throughput kernel, cached per model constants
+    (closed over as compile-time constants; built on first use).
+
+    Note: runs at jax's default precision — enable jax_enable_x64 for
+    float64 parity with the numpy path; otherwise expect ~1e-6 relative
+    deviations from float32 rounding.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def kernel(base_mbps, wire_share, k, f_acc, f_noc, f_tg, n_tg,
+               hop_counts):
+        return _throughput_math(
+            jnp, base_mbps, wire_share, k, f_acc, f_noc, f_tg, n_tg,
+            hop_counts, own_demand=own_demand, tg_demand=tg_demand,
+            link_bw=link_bw, hop_latency_share=hop_latency_share,
+            ref_hops=ref_hops)
+
+    return jax.jit(kernel)
+
+
+def _memory_traffic_math(xp, f_acc, f_noc, f_tg, n_tg, n_accels, *,
+                         mem_service, tg_demand_fig4):
+    mem_cap = mem_service * f_noc
+    tg_offer = tg_demand_fig4 * f_tg * n_tg
+    acc_offer = n_accels * xp.minimum(1.0, 5.0 * f_acc) * xp.minimum(1.0, f_noc)
+    return xp.minimum(mem_cap, tg_offer + acc_offer)
+
+
 @dataclass
 class SoCPerfModel:
     """The paper's SoC: accelerator tiles + TG tiles + MEM on a 4x4 NoC,
@@ -161,6 +220,14 @@ class SoCPerfModel:
     the NoC saturation factor (proportional sharing of the f_noc-scaled
     link capacity with TG flows), and ``hopf`` a per-hop latency factor
     (placement: A1 near MEM vs A2 far, paper Fig. 2).
+
+    Evaluation comes in two shapes: the scalar methods
+    (:meth:`accel_throughput`, :meth:`memory_traffic_mpkts`) keep the
+    original per-point API, and the ``*_batch`` methods evaluate stacked
+    arrays of design points in one vectorized pass — the DSE hot path
+    (``core/dse.py:grid_sweep`` drives millions of points through them).
+    The scalar methods are thin wrappers over the batch kernel, so the two
+    paths cannot diverge.
     """
     noc: NocConfig = field(default_factory=lambda: NocConfig(4, 4))
     mem_pos: Tuple[int, int] = (1, 0)
@@ -170,29 +237,85 @@ class SoCPerfModel:
     own_demand: float = 0.1
     hop_latency_share: float = 0.03
 
+    # ------------------------------------------------------------- helpers
+    def _ref_hops(self) -> int:
+        """Hops of the Table-I reference placement (A1 = (1, 1))."""
+        return hops(self.noc, (1, 1), self.mem_pos)
+
+    def hop_counts(self, pos=None, pos_idx=None) -> np.ndarray:
+        """Hop counts from position(s) to the MEM tile via the cached
+        routing tables.  ``pos`` is one (r, c) tuple or an (..., 2) array;
+        ``pos_idx`` flat node indices."""
+        tables = routing_tables(self.noc)
+        mem_idx = pos_index(self.noc, self.mem_pos)
+        if pos_idx is None:
+            a = np.asarray(pos)
+            pos_idx = a[..., 0] * self.noc.cols + a[..., 1]
+        return tables.hop_matrix[np.asarray(pos_idx), mem_idx]
+
+    # -------------------------------------------------------- batched API
+    def accel_throughput_batch(self, *, base_mbps, wire_share, k,
+                               f_acc, f_noc, f_tg=1.0, n_tg=0,
+                               pos=None, pos_idx=None,
+                               backend: str = "numpy") -> np.ndarray:
+        """Throughput (MB/s) for a stacked batch of design points.
+
+        Every argument broadcasts against the others (numpy rules), so a
+        full cross-product sweep passes each axis reshaped to its own
+        dimension and gets the full grid back in one call:
+
+        * ``base_mbps`` / ``wire_share`` — workload characterization
+          (scalars for a single accelerator, arrays to sweep workloads),
+        * ``k`` — replication counts,
+        * ``f_acc`` / ``f_noc`` / ``f_tg`` — island rates,
+        * ``n_tg`` — active traffic generators (scalar or array),
+        * ``pos`` (one (r, c) or (..., 2) array) or ``pos_idx`` (flat node
+          indices) — tile placements, resolved through the precomputed
+          hop matrix (no per-point route walks),
+        * ``backend`` — ``"numpy"`` (float64, the parity reference) or
+          ``"jax"`` (jit-compiled; float32 unless jax_enable_x64).
+        """
+        hop_counts = self.hop_counts(pos=pos, pos_idx=pos_idx)
+        consts = dict(own_demand=self.own_demand, tg_demand=self.tg_demand,
+                      link_bw=self.noc.link_bw,
+                      hop_latency_share=self.hop_latency_share,
+                      ref_hops=self._ref_hops())
+        if backend == "jax":
+            kern = _jitted_throughput_kernel(
+                self.own_demand, self.tg_demand, self.noc.link_bw,
+                self.hop_latency_share, float(consts["ref_hops"]))
+            out = kern(base_mbps, wire_share, k, f_acc, f_noc, f_tg, n_tg,
+                       hop_counts)
+            return np.asarray(out)
+        arrs = [np.asarray(a, dtype=np.float64)
+                for a in (base_mbps, wire_share, k, f_acc, f_noc, f_tg, n_tg)]
+        return _throughput_math(np, *arrs, hop_counts, **consts)
+
+    def memory_traffic_batch(self, *, f_acc, f_noc, f_tg=1.0, n_tg=0,
+                             n_accels=1) -> np.ndarray:
+        """Batched Fig.-4 memory-traffic model (broadcasting arguments).
+
+        ``n_accels`` is the number of accelerator tiles streaming to MEM
+        (the scalar API's ``len(accel_positions)``; the offer is
+        position-independent)."""
+        arrs = [np.asarray(a, dtype=np.float64)
+                for a in (f_acc, f_noc, f_tg, n_tg, n_accels)]
+        return _memory_traffic_math(
+            np, *arrs, mem_service=self.mem_service,
+            tg_demand_fig4=self.tg_demand_fig4)
+
+    # --------------------------------------------------------- scalar API
     def accel_throughput(self, wl: AccelWorkload, pos: Tuple[int, int],
                          rates: Dict[str, float], n_tg: int) -> float:
-        """Throughput (MB/s) of one accelerator tile under contention."""
-        f_acc = max(rates.get("acc", 1.0), 1e-3)
-        f_noc = max(rates.get("noc_mem", 1.0), 1e-3)
-        f_tg = rates.get("tg", 1.0)
-        K = wl.replication
-        w = wl.wire_share
+        """Throughput (MB/s) of one accelerator tile under contention.
 
-        # NoC saturation: proportional sharing of the f_noc-scaled capacity
-        load = self.own_demand + self.tg_demand * f_tg * n_tg
-        cap = self.noc.link_bw * f_noc
-        slow = max(1.0, load / cap)
-        from repro.core.noc import hops
-        hopf = 1.0 + self.hop_latency_share * hops(self.noc, pos,
-                                                   self.mem_pos)
-
-        t = (1.0 - w) / (K * f_acc) + w * slow * hopf / f_noc
-        # normalize to Table I conditions (A1, K=1, f=1, no TG)
-        hopf0 = 1.0 + self.hop_latency_share * hops(self.noc, (1, 1),
-                                                    self.mem_pos)
-        t0 = (1.0 - w) + w * max(1.0, self.own_demand) * hopf0
-        return wl.base_mbps * t0 / t
+        Thin wrapper over :meth:`accel_throughput_batch` (same kernel)."""
+        out = self.accel_throughput_batch(
+            base_mbps=wl.base_mbps, wire_share=wl.wire_share,
+            k=wl.replication, f_acc=rates.get("acc", 1.0),
+            f_noc=rates.get("noc_mem", 1.0), f_tg=rates.get("tg", 1.0),
+            n_tg=n_tg, pos=pos)
+        return float(out)
 
     def memory_traffic_mpkts(self, rates: Dict[str, float], n_tg: int,
                              accel_positions: List[Tuple[int, int]],
@@ -202,15 +325,12 @@ class SoCPerfModel:
         TG cores offer f_tg-scaled demand; memory-bound accelerators
         saturate their stream path at low f_acc already, so traffic is
         *almost independent of f_acc* — the paper's headline observation.
-        """
-        f_noc = rates.get("noc_mem", 1.0)
-        f_tg = rates.get("tg", 1.0)
-        f_acc = rates.get("acc", 1.0)
-        mem_cap = self.mem_service * f_noc
-        tg_offer = self.tg_demand_fig4 * f_tg * n_tg
-        acc_offer = sum(min(1.0, 5.0 * f_acc) * min(1.0, f_noc)
-                        for _ in accel_positions)
-        return min(mem_cap, tg_offer + acc_offer)
+        Thin wrapper over :meth:`memory_traffic_batch`."""
+        out = self.memory_traffic_batch(
+            f_acc=rates.get("acc", 1.0), f_noc=rates.get("noc_mem", 1.0),
+            f_tg=rates.get("tg", 1.0), n_tg=n_tg,
+            n_accels=len(accel_positions))
+        return float(out)
 
 
 def _default_tg_positions(noc: NocConfig, mem: Tuple[int, int],
