@@ -1,0 +1,108 @@
+"""Closed-loop simulation benchmark: the runtime story at traffic scale.
+
+Replays a ~1M-request diurnal day through the 12-accelerator 4x4 SoC
+(dfmul tiles, K=8, fine-grained per-tile islands) three ways — fixed max
+frequency, Fig.-4 memory-bound DFS, PID utilization DFS — reporting
+simulated ticks/sec and requests/sec (wall), p99 latency and energy per
+request.  Emits ``BENCH_sim.json`` so the closed-loop perf/efficiency
+trajectory is tracked across PRs, the sim counterpart of
+``BENCH_dse.json``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from functools import partial
+
+import numpy as np
+
+from repro.core.dfs import PIDRatePolicy, policy_memory_bound
+from repro.core.perfmodel import AccelWorkload, SoCPerfModel
+from repro.sim import (ControllerHarness, SimConfig, SimEngine, SimPlatform,
+                       diurnal_trace, with_total)
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..", "BENCH_sim.json")
+
+N_REQUESTS = 1_000_000
+TICKS = 8_700                # with_total pins 1M requests -> ~0.30 mean util
+DT = 5e-3
+
+
+def _platform() -> SimPlatform:
+    m = SoCPerfModel()
+    pos = [(r, c) for r in range(4) for c in range(4)
+           if (r, c) not in {(1, 0), (0, 0), (0, 3)}][:12]
+    wls = [AccelWorkload("dfmul", 8.70, 1.1, replication=8) for _ in pos]
+    return SimPlatform.build(m, wls, pos, noc_rate=1.0, n_tg=2,
+                             req_mb=0.005)
+
+
+def _controllers(plat):
+    return {
+        "fixed": None,
+        "membound": ControllerHarness(
+            plat.islands,
+            partial(policy_memory_bound, threshold=0.55, low_rate=0.5),
+            queue_guard_ticks=3.0),
+        "pid": ControllerHarness(plat.islands, PIDRatePolicy(target=0.7),
+                                 queue_guard_ticks=3.0),
+    }
+
+
+def bench_sim():
+    plat = _platform()
+    cap = SimEngine(plat).capacity_rps()
+    trace = with_total(
+        diurnal_trace(cap * 0.35, TICKS, plat.n_tiles, dt=DT, depth=0.5,
+                      seed=7),
+        N_REQUESTS)
+
+    rows = []
+    stats = {}
+    for name, ctl in _controllers(plat).items():
+        eng = SimEngine(plat, config=SimConfig(control_interval=25),
+                        controller=ctl)
+        t0 = time.perf_counter()
+        r = eng.run(trace)
+        wall = time.perf_counter() - t0
+        rows.append((f"sim_{name}", wall * 1e6,
+                     f"reqs={r.completed:,.0f} ticks/s={r.ticks / wall:,.0f} "
+                     f"reqs/s={r.completed / wall:,.0f} "
+                     f"p99={r.p99_latency_s * 1e3:.1f}ms "
+                     f"mJ/req={r.energy_per_request_j * 1e3:.2f} "
+                     f"swaps={r.swaps}"))
+        stats[name] = {
+            "wall_seconds": wall,
+            "ticks_per_sec": r.ticks / wall,
+            "requests_per_sec": r.completed / wall,
+            "completed": r.completed,
+            "dropped": r.dropped,
+            "p50_latency_s": r.p50_latency_s,
+            "p99_latency_s": r.p99_latency_s,
+            "energy_per_request_j": r.energy_per_request_j,
+            "mean_power_w": r.mean_power_w,
+            "dfs_swaps": r.swaps,
+        }
+
+    base = stats["fixed"]["energy_per_request_j"]
+    for name in ("membound", "pid"):
+        stats[name]["energy_saving_vs_fixed"] = (
+            1.0 - stats[name]["energy_per_request_j"] / base)
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump({
+            "n_requests": N_REQUESTS,
+            "ticks": TICKS,
+            "dt": DT,
+            "n_tiles": plat.n_tiles,
+            "capacity_rps_total": float(cap.sum()),
+            "mean_utilization": float(
+                trace.offered_rps / cap.sum()),
+            "runs": stats,
+        }, f, indent=2)
+    return rows
+
+
+def run():
+    return bench_sim()

@@ -21,11 +21,12 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_contention, bench_dfs_traffic, bench_dse,
-                            bench_kernels, bench_replication)
+                            bench_kernels, bench_replication, bench_sim)
     mods = [("replication(TableI)", bench_replication),
             ("contention(Fig3)", bench_contention),
             ("dfs_traffic(Fig4)", bench_dfs_traffic),
             ("dse", bench_dse),
+            ("sim(closed-loop)", bench_sim),
             ("kernels", bench_kernels)]
     rows = []
     failures = 0

@@ -13,8 +13,8 @@ from repro.core.islands import (  # noqa: F401
     IslandConfig, IslandSpec, RateLadder, TILE_LADDER, NOC_LADDER,
     default_islands, validate_islands, resync_boundaries)
 from repro.core.dfs import (  # noqa: F401
-    DFSActuator, TileTelemetry, policy_memory_bound, policy_straggler,
-    policy_energy_per_token, policy_energy_per_token_sweep)
+    DFSActuator, PIDRatePolicy, TileTelemetry, policy_memory_bound,
+    policy_straggler, policy_energy_per_token, policy_energy_per_token_sweep)
 from repro.core.monitor import (  # noqa: F401
     Counters, MonitorClient, PKT_BYTES, init_counters, charge,
     charge_boundary, manual_reset, bytes_of, pkts)
@@ -25,7 +25,7 @@ from repro.core.perfmodel import (  # noqa: F401
     RooflineTerms, roofline_from_counts, model_flops, SoCPerfModel,
     AccelWorkload, PEAK_FLOPS, HBM_BW, ICI_BW, chip_power)
 from repro.core.dse import (  # noqa: F401
-    DesignPoint, SweepResult, grid_sweep, sweep_soc, pareto_front,
-    pareto_front_bruteforce, pareto_front_indices, summarize,
-    summarize_result)
+    ClosedLoopScore, DesignPoint, SweepResult, closed_loop_score,
+    grid_sweep, sweep_soc, pareto_front, pareto_front_bruteforce,
+    pareto_front_indices, summarize, summarize_result)
 from repro.core import dse  # noqa: F401

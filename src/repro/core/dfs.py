@@ -22,8 +22,9 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+from collections import deque
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Deque, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -31,12 +32,18 @@ from repro.core.islands import IslandConfig, IslandSpec
 from repro.core.tiles import TilePlan
 
 
+DEFAULT_HISTORY_MAXLEN = 256
+
+
 @dataclass
 class ActuatorState:
     live: IslandConfig
     shadow: Optional[IslandConfig] = None
     swaps: int = 0
-    history: List[Tuple[int, Dict[str, float]]] = field(default_factory=list)
+    # bounded: long-running controllers commit thousands of swaps; only a
+    # recent window is ever inspected, so old entries are evicted FIFO
+    history: Deque[Tuple[int, Dict[str, float]]] = field(
+        default_factory=lambda: deque(maxlen=DEFAULT_HISTORY_MAXLEN))
 
 
 class DFSActuator:
@@ -50,9 +57,15 @@ class DFSActuator:
     under a lock (the FSM of the paper, in one CAS).
     """
 
-    def __init__(self, initial: IslandConfig):
+    def __init__(self, initial: IslandConfig,
+                 history_maxlen: int = DEFAULT_HISTORY_MAXLEN):
         self._lock = threading.Lock()
-        self._st = ActuatorState(live=initial)
+        self._st = ActuatorState(
+            live=initial, history=deque(maxlen=history_maxlen))
+
+    @property
+    def history_maxlen(self) -> Optional[int]:
+        return self._st.history.maxlen
 
     def live(self) -> IslandConfig:
         with self._lock:
@@ -151,6 +164,63 @@ def policy_straggler(islands: IslandConfig,
             # derate to just-keep-up: rate ~ own_time / straggler_time
             out[isl.name] = max(0.2, min(1.0, worst / (slack * med)))
     return out
+
+
+class PIDRatePolicy:
+    """PID-style per-island utilization tracking DFS policy.
+
+    Interprets each tile's ``exec_time`` counter as its busy fraction over
+    the sample window (what the simulation engine's C3 monitor reports)
+    and servos every non-fixed island's rate so the island-mean busy
+    fraction tracks ``target``: an underutilized island has headroom, so
+    its clock drops (energy ~ f·V(f)^2 falls); a saturated island
+    (busy -> 1, queues forming) gets its clock raised back before latency
+    escapes.  Unlike :func:`policy_memory_bound` (a model-driven static
+    classification) this is a purely measurement-driven feedback loop, so
+    it adapts to diurnal/bursty load the model never saw.
+
+    Stateful (per-island integral + previous error) — construct one
+    instance per controlled platform.  The returned rates are continuous;
+    the actuator's ladder quantization supplies the hysteresis that keeps
+    small errors from dithering the clock.
+    """
+
+    def __init__(self, *, target: float = 0.7, kp: float = 0.8,
+                 ki: float = 0.25, kd: float = 0.0, min_rate: float = 0.2,
+                 integral_clamp: float = 2.0,
+                 skip: Tuple[str, ...] = ("noc_mem",)):
+        assert 0.0 < target <= 1.0
+        self.target = target
+        self.kp, self.ki, self.kd = kp, ki, kd
+        self.min_rate = min_rate
+        self.integral_clamp = integral_clamp
+        self.skip = tuple(skip)
+        self._integral: Dict[str, float] = {}
+        self._prev_err: Dict[str, float] = {}
+
+    def reset(self) -> None:
+        self._integral.clear()
+        self._prev_err.clear()
+
+    def __call__(self, islands: IslandConfig,
+                 telemetry: Dict[str, TileTelemetry]) -> Dict[str, float]:
+        out: Dict[str, float] = {}
+        for isl in islands.islands:
+            if isl.fixed or isl.name in self.skip:
+                continue
+            ts = [telemetry[t] for t in isl.tiles if t in telemetry]
+            if not ts:
+                continue
+            util = float(np.mean([t.exec_time for t in ts]))
+            err = util - self.target            # positive => overloaded
+            i_term = float(np.clip(self._integral.get(isl.name, 0.0) + err,
+                                   -self.integral_clamp, self.integral_clamp))
+            d_term = err - self._prev_err.get(isl.name, err)
+            self._integral[isl.name] = i_term
+            self._prev_err[isl.name] = err
+            new = isl.rate + self.kp * err + self.ki * i_term + self.kd * d_term
+            out[isl.name] = float(np.clip(new, self.min_rate, 1.0))
+        return out
 
 
 def policy_energy_per_token_sweep(

@@ -192,6 +192,7 @@ class SweepResult:
     area: np.ndarray                    # (N,) float64
     energy_per_unit: np.ndarray         # (N,) float64
     valid: np.ndarray                   # (N,) bool (placement collisions out)
+    mem_traffic: Optional[np.ndarray] = None   # (N,) float64, Fig.-4 model
     elapsed_s: float = 0.0
     backend: str = "numpy"
 
@@ -339,6 +340,12 @@ def grid_sweep(model: SoCPerfModel,
     power = chip_power(fa_ax, busy=1.0) + 0.3 * chip_power(fn_ax, busy=1.0)
     energy = np.broadcast_to(power, shape) / np.maximum(total_thr, 1e-9)
 
+    # Fig.-4 memory-pressure objective: offered MEM traffic at each rate
+    # point (placement-independent, so it broadcasts over the K/pos axes)
+    mem_traffic = np.broadcast_to(
+        model.memory_traffic_batch(f_acc=fa_ax, f_noc=fn_ax, f_tg=ft_ax,
+                                   n_tg=n_tg, n_accels=A), shape)
+
     valid = np.ones(shape, dtype=bool)
     for a in range(A):
         for b in range(a + 1, A):
@@ -350,7 +357,104 @@ def grid_sweep(model: SoCPerfModel,
         throughput=total_thr.ravel(),
         area=np.ascontiguousarray(np.broadcast_to(area, shape)).ravel(),
         energy_per_unit=energy.ravel(), valid=valid.ravel(),
+        mem_traffic=np.ascontiguousarray(mem_traffic).ravel(),
         elapsed_s=elapsed, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Closed-loop re-ranking: the static sweep meets the runtime simulator
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ClosedLoopScore:
+    """Simulated runtime scores for a set of sweep survivors.
+
+    ``indices`` are flat :class:`SweepResult` indices; the parallel arrays
+    hold each point's simulated p99 latency, energy per request and
+    sustained throughput under the replayed trace.  ``order`` re-ranks
+    ``indices`` best-first: points meeting the p99 SLA sorted by energy
+    per request, then SLA violators by how badly they miss it.
+    """
+    indices: np.ndarray                 # (M,) int64
+    p99_latency_s: np.ndarray           # (M,) float64
+    energy_per_request_j: np.ndarray    # (M,) float64
+    throughput_rps: np.ndarray          # (M,) float64
+    order: np.ndarray                   # (M,) int64 positions into indices
+    results: List[object]               # per-point sim.SimResult
+
+    def ranked_indices(self) -> np.ndarray:
+        """Flat SweepResult indices, best-first."""
+        return self.indices[self.order]
+
+
+def closed_loop_score(result: SweepResult, trace, *,
+                      model: SoCPerfModel,
+                      indices: Optional[Sequence[int]] = None,
+                      top: int = 8,
+                      p99_sla_s: Optional[float] = None,
+                      controller_factory=None,
+                      req_mb: float = 0.1,
+                      sim_config=None) -> ClosedLoopScore:
+    """Re-rank static-sweep survivors by *simulated* runtime behaviour.
+
+    The static objectives of :func:`grid_sweep` assume steady saturated
+    streams; under dynamic traffic two points with equal static throughput
+    can have wildly different tail latency and idle-power profiles.  This
+    bridge replays ``trace`` (a ``repro.sim.Trace`` whose destinations map
+    1:1 to ``result.workloads``) through each survivor — by default the
+    ``top`` throughput points of the Pareto front — with an optional
+    online DFS controller in the loop, and ranks by (p99 SLA met, energy
+    per request).  The static sweep and the runtime loop become one
+    pipeline::
+
+        res   = grid_sweep(model, wls, ...)
+        score = closed_loop_score(res, diurnal_trace(...), model=model,
+                                  p99_sla_s=0.05)
+        best  = res.design_point(int(score.ranked_indices()[0]))
+
+    ``controller_factory`` is called per point with the materialized
+    :class:`~repro.sim.SimPlatform` and must return a
+    ``repro.sim.ControllerHarness`` (or None for open-loop replay).
+    Imports ``repro.sim`` lazily — the core DSE layer stays importable
+    without the simulation subsystem.
+    """
+    from repro.sim import SimConfig, SimEngine, SimPlatform
+
+    if indices is None:
+        pf = result.pareto_indices()
+        ordr = np.argsort(-result.throughput[pf], kind="stable")
+        indices = pf[ordr][:top]
+    indices = np.asarray(indices, dtype=np.int64)
+
+    p99 = np.empty(indices.shape[0])
+    ept = np.empty(indices.shape[0])
+    thr = np.empty(indices.shape[0])
+    results: List[object] = []
+    for j, i in enumerate(indices):
+        dp = result.design_point(int(i))
+        platform = SimPlatform.from_design_point(
+            model, dp, result.workloads, req_mb=req_mb, n_tg=result.n_tg)
+        controller = (controller_factory(platform)
+                      if controller_factory is not None else None)
+        engine = SimEngine(platform,
+                           config=sim_config or SimConfig(),
+                           controller=controller)
+        r = engine.run(trace)
+        results.append(r)
+        p99[j] = r.p99_latency_s
+        ept[j] = r.energy_per_request_j
+        thr[j] = r.throughput_rps
+
+    if p99_sla_s is not None:
+        miss = np.maximum(0.0, p99 / p99_sla_s - 1.0)
+        order = np.lexsort((ept, miss))     # SLA first, then energy
+    else:
+        order = np.lexsort((p99, ept))      # energy first, p99 tie-break
+    return ClosedLoopScore(indices=indices, p99_latency_s=p99,
+                           energy_per_request_j=ept, throughput_rps=thr,
+                           order=np.asarray(order, dtype=np.int64),
+                           results=results)
 
 
 # ---------------------------------------------------------------------------

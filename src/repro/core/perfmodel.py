@@ -291,6 +291,37 @@ class SoCPerfModel:
                 for a in (base_mbps, wire_share, k, f_acc, f_noc, f_tg, n_tg)]
         return _throughput_math(np, *arrs, hop_counts, **consts)
 
+    def service_time_terms_batch(self, *, wire_share, k,
+                                 f_acc, f_noc, f_tg=1.0, n_tg=0,
+                                 pos=None, pos_idx=None):
+        """Decomposed service time of the throughput kernel (numpy only).
+
+        Returns ``(t_comp, t_wire, t_ref)`` — the compute term
+        ``(1-w)/(K f_acc)``, the serialized wire/NoC term
+        ``w·slow·hopf/f_noc``, and the Table-I normalization ``t0`` — such
+        that ``base_mbps * t_ref / (t_comp + t_wire)`` equals
+        :meth:`accel_throughput_batch` exactly (tested).  The simulation
+        engine consumes the split form: ``t_wire/(t_comp+t_wire)`` is the
+        stream-boundness signal the Fig.-4 DFS policy keys on, and dynamic
+        NoC contention (from live per-tick flows) scales ``t_wire`` alone,
+        leaving the compute term untouched.
+        """
+        hop_counts = self.hop_counts(pos=pos, pos_idx=pos_idx)
+        w = np.asarray(wire_share, dtype=np.float64)
+        k = np.asarray(k, dtype=np.float64)
+        f_acc = np.maximum(np.asarray(f_acc, dtype=np.float64), 1e-3)
+        f_noc = np.maximum(np.asarray(f_noc, dtype=np.float64), 1e-3)
+        f_tg = np.asarray(f_tg, dtype=np.float64)
+        n_tg = np.asarray(n_tg, dtype=np.float64)
+        load = self.own_demand + self.tg_demand * f_tg * n_tg
+        slow = np.maximum(1.0, load / (self.noc.link_bw * f_noc))
+        hopf = 1.0 + self.hop_latency_share * hop_counts
+        t_comp = (1.0 - w) / (k * f_acc)
+        t_wire = w * slow * hopf / f_noc
+        hopf0 = 1.0 + self.hop_latency_share * self._ref_hops()
+        t_ref = (1.0 - w) + w * max(1.0, self.own_demand) * hopf0
+        return t_comp, t_wire, t_ref
+
     def memory_traffic_batch(self, *, f_acc, f_noc, f_tg=1.0, n_tg=0,
                              n_accels=1) -> np.ndarray:
         """Batched Fig.-4 memory-traffic model (broadcasting arguments).

@@ -1,0 +1,28 @@
+"""Closed-loop SoC simulation: vectorized traffic replay + online DFS.
+
+The run-time counterpart of the static DSE engine — replays request
+traces through one concrete design while monitor-driven DFS controllers
+retune island rates in the loop:
+
+engine.py    — tick-based batched event loop (flat arrays, no per-request
+               Python objects; service rates from the perfmodel kernel,
+               contention from the NoC routing tables)
+traffic.py   — composable arrival-trace generators (constant, Poisson,
+               diurnal, MMPP-bursty, replay) scaling to millions of
+               requests
+control.py   — controller harness: windowed C3 counter samples -> dfs
+               policies -> dual-buffer actuator commits
+telemetry.py — ring-buffer time series + JSON export
+
+DSE bridge: ``core/dse.py:closed_loop_score`` re-ranks ``grid_sweep``
+Pareto survivors by simulated tail latency and energy under dynamic
+traffic.
+"""
+from repro.sim.engine import (  # noqa: F401
+    SimConfig, SimEngine, SimPlatform, SimResult)
+from repro.sim.control import ControlAction, ControllerHarness  # noqa: F401
+from repro.sim.telemetry import (  # noqa: F401
+    RingBuffer, Telemetry, TelemetrySchema, weighted_percentiles)
+from repro.sim.traffic import (  # noqa: F401
+    Trace, constant_trace, diurnal_trace, mmpp_trace, poisson_trace,
+    replay_trace, superpose, with_total)

@@ -1,0 +1,155 @@
+"""Online DFS control harness for the simulation loop.
+
+Bridges the vectorized engine to the scalar policy world of
+``core/dfs.py``: every ``control_interval`` ticks the engine hands the
+harness a windowed counter sample (busy fraction, stream-boundness,
+accumulated pkts/rtt — the C3 monitor, vectorized); the harness
+
+1. differences the accumulating counters against its previous sample
+   (the host-side *manual reset* of ``core/monitor.py``, without ever
+   zeroing the device counters),
+2. rebuilds the per-tile :class:`~repro.core.dfs.TileTelemetry` digests
+   the policies consume,
+3. invokes the policy (``policy_memory_bound``, ``policy_straggler``,
+   :class:`~repro.core.dfs.PIDRatePolicy`, or any callable with the same
+   signature),
+4. applies the *backpressure guard*: any non-fixed island whose tiles
+   have more than ``queue_guard_ticks`` ticks of backlog is forced to
+   ``guard_rate`` regardless of what the policy said — energy policies
+   must never starve a growing queue, the closed-loop counterpart of the
+   paper's "negligible throughput loss" proviso,
+5. commits the changed rates through the dual-buffer
+   :class:`~repro.core.dfs.DFSActuator` (no commit — and no config
+   version bump, so the engine keeps its cached service rates — when the
+   quantized rates are all unchanged).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Deque, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dfs import DFSActuator, TileTelemetry
+from repro.core.islands import IslandConfig
+
+Policy = Callable[[IslandConfig, Dict[str, TileTelemetry]], Dict[str, float]]
+
+
+@dataclass
+class ControlAction:
+    """One controller decision, for post-run inspection."""
+    tick: int
+    requested: Dict[str, float]          # raw policy output
+    guarded: Tuple[str, ...]             # islands overridden by the guard
+    committed: Optional[int]             # new config version, or None
+
+
+class ControllerHarness:
+    """Samples counters, runs a DFS policy, commits through the actuator."""
+
+    def __init__(self, initial: IslandConfig, policy: Optional[Policy],
+                 *, queue_guard_ticks: Optional[float] = 4.0,
+                 guard_release_ticks: Optional[float] = None,
+                 guard_rate: float = 1.0, history_maxlen: int = 256,
+                 actions_maxlen: int = 1024):
+        self.actuator = DFSActuator(initial, history_maxlen=history_maxlen)
+        self.policy = policy
+        self.queue_guard_ticks = queue_guard_ticks
+        # hysteresis: an island stays guarded until its backlog drains
+        # below the (lower) release threshold — without it the guard and
+        # an energy policy flap against each other every interval at peak
+        self.guard_release_ticks = (
+            guard_release_ticks if guard_release_ticks is not None
+            else (queue_guard_ticks / 4.0
+                  if queue_guard_ticks is not None else None))
+        self.guard_rate = guard_rate
+        self._guard_active: set = set()
+        # bounded like ActuatorState.history: million-tick soaks commit
+        # thousands of intervals, only a recent window is ever inspected
+        self.actions: Deque[ControlAction] = deque(maxlen=actions_maxlen)
+        self._prev_pkts_in: Optional[np.ndarray] = None
+        self._prev_pkts_out: Optional[np.ndarray] = None
+        self._prev_rtt: Optional[np.ndarray] = None
+
+    def live(self) -> IslandConfig:
+        return self.actuator.live()
+
+    def begin_run(self) -> None:
+        """Called by the engine at the start of each run: the engine's
+        accumulating counters restart from zero, so the differencing
+        baselines must too (policy state — PID integrals, guard latches —
+        deliberately survives across runs)."""
+        self._prev_pkts_in = None
+        self._prev_pkts_out = None
+        self._prev_rtt = None
+
+    # ------------------------------------------------------------ sampling
+    def _window_sample(self, names, busy, boundness, pkts_in, pkts_out,
+                       rtt) -> Dict[str, TileTelemetry]:
+        """Accumulating counters are differenced against the previous
+        sample; exec_time/boundness are already per-window values."""
+        zero = np.zeros_like(pkts_in)
+        d_in = pkts_in - (self._prev_pkts_in if self._prev_pkts_in is not None
+                          else zero)
+        d_out = pkts_out - (self._prev_pkts_out
+                            if self._prev_pkts_out is not None else zero)
+        d_rtt = rtt - (self._prev_rtt if self._prev_rtt is not None else zero)
+        self._prev_pkts_in = np.array(pkts_in)
+        self._prev_pkts_out = np.array(pkts_out)
+        self._prev_rtt = np.array(rtt)
+        return {
+            n: TileTelemetry(
+                exec_time=float(busy[i]), pkts_in=float(d_in[i]),
+                pkts_out=float(d_out[i]), rtt=float(d_rtt[i]),
+                boundness=float(boundness[i]))
+            for i, n in enumerate(names)}
+
+    # ---------------------------------------------------------------- step
+    def step(self, *, tick: int, names, busy, boundness, pkts_in, pkts_out,
+             rtt, queue_ticks) -> Optional[IslandConfig]:
+        """One control interval: sample -> policy -> guard -> commit.
+
+        Returns the new live :class:`IslandConfig` if a swap happened,
+        else ``None`` (the engine keeps its cached service rates)."""
+        telemetry = self._window_sample(names, busy, boundness,
+                                        pkts_in, pkts_out, rtt)
+        live = self.actuator.live()
+        requested: Dict[str, float] = {}
+        if self.policy is not None:
+            requested = dict(self.policy(live, telemetry) or {})
+
+        guarded: List[str] = []
+        if self.queue_guard_ticks is not None:
+            backlog = {n: float(queue_ticks[i]) for i, n in enumerate(names)}
+            for isl in live.islands:
+                if isl.fixed:
+                    continue
+                worst = max((backlog.get(t, 0.0) for t in isl.tiles),
+                            default=0.0)
+                if worst > self.queue_guard_ticks:
+                    self._guard_active.add(isl.name)
+                elif worst < self.guard_release_ticks:
+                    self._guard_active.discard(isl.name)
+                if isl.name in self._guard_active:
+                    requested[isl.name] = self.guard_rate
+                    guarded.append(isl.name)
+
+        # drop no-op rate changes so the config version only bumps on a
+        # real swap (ladder-quantized comparison, as with_rates would do)
+        changes: Dict[str, float] = {}
+        for isl in live.islands:
+            if isl.name not in requested or isl.fixed:
+                continue
+            if isl.ladder.quantize(requested[isl.name]) != isl.rate:
+                changes[isl.name] = requested[isl.name]
+
+        committed = None
+        if changes:
+            self.actuator.reconfigure(changes)
+            committed = self.actuator.commit().version
+        self.actions.append(ControlAction(
+            tick=tick, requested=requested, guarded=tuple(guarded),
+            committed=committed))
+        return self.actuator.live() if committed is not None else None

@@ -1,0 +1,445 @@
+"""Vectorized tick-based closed-loop SoC simulation engine.
+
+Replays a request :class:`~repro.sim.traffic.Trace` through one concrete
+SoC design (accelerator tiles with replication K placed on the NoC grid,
+partitioned into frequency islands) while an online DFS controller runs in
+the loop.  The run-time analogue of ``core/dse.py:grid_sweep``: the sweep
+answers "which design?", the engine answers "how does that design behave
+under *this* traffic with *this* controller?".
+
+Hot-path design — everything is flat (A,)-shaped arrays over accelerator
+tiles, advanced one tick at a time; requests are fluid counts, never
+Python objects:
+
+* service rates come from the same kernel as the static model
+  (:meth:`SoCPerfModel.service_time_terms_batch`, the decomposed form of
+  ``accel_throughput_batch``) and are **cached per island-config
+  version** — they are only recomputed when the DFS actuator commits,
+  exactly like the cached compiled executables behind the dual-buffer
+  actuator;
+* NoC contention uses the precomputed routing tables: each tile's
+  route-to-MEM link incidence is one static (A, L) 0/1 matrix, so
+  per-tick link loads are a single matvec and the worst-link utilization
+  per route one masked max.  The resulting M/D/1 slowdown scales the
+  *wire* term of the service time only (the compute term never queues in
+  the fabric; the static kernel's own TG-saturation factor stays as-is,
+  so nothing is double counted);
+* monitor counters follow ``core/monitor.py`` semantics vectorized:
+  ``exec_time`` holds the latest busy fraction (auto-reset), pkts/rtt
+  accumulate until the controller's windowed read differences them.
+
+Latency is reconstructed exactly (at tick granularity) after the run from
+the cumulative arrival/service curves of each FIFO fluid queue: the
+mid-rank of every tick's admitted batch is looked up in the cumulative
+service curve with one ``searchsorted`` per tile, giving per-batch
+sojourn times whose request-count-weighted percentiles are the reported
+p50/p99 — no per-request bookkeeping at any point.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.islands import (IslandConfig, IslandSpec, NOC_LADDER,
+                                TILE_LADDER)
+from repro.core.noc import contention_slowdown, pos_index, routing_tables
+from repro.core.perfmodel import AccelWorkload, SoCPerfModel, chip_power
+from repro.sim.telemetry import (Telemetry, TelemetrySchema,
+                                 weighted_percentiles)
+from repro.sim.traffic import Trace
+
+PKT_BYTES = 512.0        # matches core/monitor.py (kept numeric here so the
+                         # engine hot path never imports the jax-side module)
+
+
+# ---------------------------------------------------------------------------
+# Platform: one concrete design, in array form
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SimPlatform:
+    """A simulatable SoC instance: per-accelerator-tile arrays + islands.
+
+    Tile order is the trace's destination order.  ``islands`` is the
+    *initial* island partition/rates; the controller (if any) evolves it
+    through its actuator at run time.
+    """
+    model: SoCPerfModel
+    islands: IslandConfig
+    names: Tuple[str, ...]
+    base_mbps: np.ndarray           # (A,)
+    wire_share: np.ndarray          # (A,)
+    k: np.ndarray                   # (A,)
+    pos_idx: np.ndarray             # (A,) flat NoC node indices
+    req_mb: np.ndarray              # (A,) MB of stream payload per request
+    n_tg: int = 0
+    f_tg: float = 1.0
+
+    @property
+    def n_tiles(self) -> int:
+        return len(self.names)
+
+    @classmethod
+    def build(cls, model: SoCPerfModel,
+              workloads: Sequence[AccelWorkload],
+              positions: Sequence[Tuple[int, int]],
+              *, names: Optional[Sequence[str]] = None,
+              island_groups: Optional[Dict[str, Sequence[str]]] = None,
+              rates: Optional[Dict[str, float]] = None,
+              noc_rate: float = 1.0, req_mb: float = 0.1,
+              n_tg: int = 0, f_tg: float = 1.0) -> "SimPlatform":
+        """Assemble a platform from parallel workload/position lists.
+
+        ``island_groups`` maps island name -> tile names (default: every
+        tile is its own island — the paper's finest-grained DFS); a
+        ``noc_mem`` island is always appended.  ``rates`` presets island
+        rates (default 1.0).
+        """
+        assert len(workloads) == len(positions)
+        if names is None:
+            names = []
+            for i, wl in enumerate(workloads):
+                names.append(f"{wl.name}{i}")
+        names = tuple(names)
+        assert len(set(names)) == len(names), "duplicate tile names"
+        taken = set()
+        for p in positions:
+            assert tuple(p) != tuple(model.mem_pos), "tile placed on MEM"
+            assert tuple(p) not in taken, f"tile collision at {p}"
+            taken.add(tuple(p))
+        if island_groups is None:
+            island_groups = {n: (n,) for n in names}
+        rates = dict(rates or {})
+        specs = [IslandSpec(iname, tuple(tiles), TILE_LADDER,
+                            rate=float(rates.get(iname, 1.0)))
+                 for iname, tiles in island_groups.items()]
+        specs.append(IslandSpec("noc_mem", ("NOC", "MEM"), NOC_LADDER,
+                                rate=float(rates.get("noc_mem", noc_rate))))
+        return cls(
+            model=model, islands=IslandConfig(tuple(specs)), names=names,
+            base_mbps=np.asarray([w.base_mbps for w in workloads], float),
+            wire_share=np.asarray([w.wire_share for w in workloads], float),
+            k=np.asarray([float(w.replication) for w in workloads]),
+            pos_idx=np.asarray([pos_index(model.noc, tuple(p))
+                                for p in positions], dtype=np.int64),
+            req_mb=np.full(len(names), float(req_mb)),
+            n_tg=int(n_tg), f_tg=float(f_tg))
+
+    @classmethod
+    def from_design_point(cls, model: SoCPerfModel, dp,
+                          workloads: Sequence[AccelWorkload],
+                          *, req_mb: float = 0.1, n_tg: int = 0
+                          ) -> "SimPlatform":
+        """Bridge from the DSE layer: instantiate a ``grid_sweep``
+        survivor (a :class:`~repro.core.dse.DesignPoint`) for replay —
+        replication/placement from the point, island rates from its
+        ``acc``/``noc_mem``/``tg`` rate assignment."""
+        wls = [AccelWorkload(w.name, w.base_mbps, w.ai,
+                             replication=int(dp.replication[w.name]))
+               for w in workloads]
+        return cls.build(
+            model, wls, [dp.placement[w.name] for w in workloads],
+            names=[w.name for w in workloads],
+            rates={**{w.name: float(dp.rates.get("acc", 1.0))
+                      for w in workloads},
+                   "noc_mem": float(dp.rates.get("noc_mem", 1.0))},
+            req_mb=req_mb, n_tg=n_tg, f_tg=float(dp.rates.get("tg", 1.0)))
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SimConfig:
+    control_interval: int = 50          # ticks between controller samples
+    telemetry_interval: int = 20        # ticks between telemetry rows
+    telemetry_capacity: int = 4096      # ring-buffer rows kept
+    dynamic_contention: bool = True     # live NoC queueing on the wire term
+    max_queue: float = float("inf")     # requests/tile before drops
+    noc_power_share: float = 0.3        # matches grid_sweep's energy model
+
+
+@dataclass
+class SimResult:
+    ticks: int
+    dt: float
+    offered: float                      # requests offered by the trace
+    completed: float                    # requests served
+    dropped: float                      # admission drops (max_queue)
+    residual: float                     # still queued when the trace ended
+    throughput_rps: float               # completed / simulated seconds
+    p50_latency_s: float
+    p99_latency_s: float
+    energy_j: float
+    energy_per_request_j: float
+    mean_power_w: float
+    swaps: int                          # actuator commits during the run
+    elapsed_wall_s: float
+    telemetry: Telemetry
+
+    @property
+    def ticks_per_s_wall(self) -> float:
+        return self.ticks / self.elapsed_wall_s if self.elapsed_wall_s else 0.0
+
+    @property
+    def requests_per_s_wall(self) -> float:
+        return (self.completed / self.elapsed_wall_s
+                if self.elapsed_wall_s else 0.0)
+
+    def summary(self) -> str:
+        return (f"{self.ticks} ticks ({self.ticks * self.dt:.1f}s sim, "
+                f"{self.elapsed_wall_s:.2f}s wall, "
+                f"{self.requests_per_s_wall:,.0f} req/s wall): "
+                f"completed {self.completed:,.0f}/{self.offered:,.0f} "
+                f"({self.throughput_rps:,.0f} rps), "
+                f"p50 {self.p50_latency_s * 1e3:.2f}ms "
+                f"p99 {self.p99_latency_s * 1e3:.2f}ms, "
+                f"{self.energy_per_request_j * 1e3:.3f} mJ/req, "
+                f"{self.swaps} DFS swaps")
+
+
+class SimEngine:
+    """Ticks a :class:`SimPlatform` through a trace, controller in loop."""
+
+    def __init__(self, platform: SimPlatform, *,
+                 config: SimConfig = SimConfig(), controller=None):
+        self.platform = platform
+        self.config = config
+        self.controller = controller    # a control.ControllerHarness or None
+        m = platform.model
+        A = platform.n_tiles
+        # static route->link incidence of each tile's stream to MEM:
+        # inc[a, l] == 1 iff tile a's XY route to the MEM tile uses link l
+        t = routing_tables(m.noc)
+        mem_idx = pos_index(m.noc, m.mem_pos)
+        inc = np.zeros((A, t.n_links), dtype=np.float64)
+        for a, s in enumerate(platform.pos_idx):
+            pair = int(s) * t.n_nodes + mem_idx
+            ids = t.link_ids[t.route_offsets[pair]:t.route_offsets[pair + 1]]
+            inc[a, ids] = 1.0
+        self._inc = inc
+        self._hop_counts = m.hop_counts(pos_idx=platform.pos_idx)
+        # compute term at the reference rate f_acc=1 (boundness baseline)
+        self._t_comp_ref = (1.0 - platform.wire_share) / platform.k
+        # tile -> island index (stable across with_rates: order preserved)
+        isl_names = platform.islands.names()
+        self._island_of_tile = np.asarray(
+            [isl_names.index(platform.islands.island_of(n).name)
+             for n in platform.names], dtype=np.int64)
+        try:
+            self._noc_island = isl_names.index("noc_mem")
+        except ValueError:
+            self._noc_island = -1
+
+    # ------------------------------------------------------------ service
+    def _rates(self, cfg: IslandConfig) -> Tuple[np.ndarray, float, np.ndarray]:
+        """(per-tile f, f_noc, per-island rate vector) for one config."""
+        island_rates = np.asarray([i.rate for i in cfg.islands])
+        f_tile = island_rates[self._island_of_tile]
+        f_noc = (float(island_rates[self._noc_island])
+                 if self._noc_island >= 0 else 1.0)
+        return f_tile, f_noc, island_rates
+
+    def _service(self, cfg: IslandConfig) -> Dict[str, np.ndarray]:
+        """Static service-time terms for one island config (cached by the
+        caller per config version — the analogue of the actuator's cached
+        compiled executables)."""
+        p = self.platform
+        f_tile, f_noc, island_rates = self._rates(cfg)
+        t_comp, t_wire, t_ref = p.model.service_time_terms_batch(
+            wire_share=p.wire_share, k=p.k, f_acc=f_tile, f_noc=f_noc,
+            f_tg=p.f_tg, n_tg=p.n_tg, pos_idx=p.pos_idx)
+        return {"t_comp": np.broadcast_to(t_comp, (p.n_tiles,)),
+                "t_wire": np.broadcast_to(t_wire, (p.n_tiles,)),
+                "t_ref": np.broadcast_to(np.asarray(t_ref, float),
+                                         (p.n_tiles,)),
+                "f_tile": f_tile, "f_noc": f_noc,
+                "island_rates": island_rates, "version": cfg.version}
+
+    def capacity_rps(self, cfg: Optional[IslandConfig] = None) -> np.ndarray:
+        """Uncontended per-tile service capacity (requests/s) — exactly
+        ``accel_throughput_batch / req_mb`` for the given config."""
+        svc = self._service(cfg or self.platform.islands)
+        thr = self.platform.base_mbps * svc["t_ref"] / (
+            svc["t_comp"] + svc["t_wire"])
+        return thr / self.platform.req_mb
+
+    # ---------------------------------------------------------------- run
+    def run(self, trace: Trace) -> SimResult:
+        p, cfg = self.platform, self.config
+        A, T, dt = p.n_tiles, trace.ticks, trace.dt
+        assert trace.n_dests == A, (trace.n_dests, A)
+        arrivals = trace.arrivals
+
+        if self.controller is not None:
+            self.controller.begin_run()     # counter baselines reset per run
+            live = self.controller.live()
+        else:
+            live = p.islands
+        svc = self._service(live)
+
+        queue = np.zeros(A)
+        busy = np.zeros(A)
+        admitted_hist = np.zeros((T, A))
+        served_hist = np.zeros((T, A))
+        dropped = 0.0
+        energy = 0.0
+        # vectorized monitor counters (core/monitor.py semantics)
+        pkts_in = np.zeros(A)           # accumulate
+        pkts_out = np.zeros(A)          # accumulate
+        rtt_acc = np.zeros(A)           # accumulate
+        # controller/telemetry window accumulators
+        win_busy = np.zeros(A)
+        win_served = 0.0
+        win_ticks = 0
+        ctl_busy = np.zeros(A)
+        ctl_ticks = 0
+        swaps0 = (self.controller.actuator.swaps
+                  if self.controller is not None else 0)
+
+        telem = Telemetry(
+            TelemetrySchema(islands=live.names(), tiles=p.names),
+            capacity=cfg.telemetry_capacity)
+
+        own_demand = p.model.own_demand
+        link_bw = p.model.noc.link_bw
+        max_slow = p.model.noc.max_slowdown
+        inc = self._inc
+        dyn = np.ones(A)
+        rho = np.zeros(A)
+
+        wall0 = time.perf_counter()
+        for t_i in range(T):
+            q = queue + arrivals[t_i]
+            adm = arrivals[t_i]
+            if cfg.max_queue != float("inf"):
+                over = np.maximum(q - cfg.max_queue, 0.0)
+                q -= over
+                adm = adm - over
+                dropped += float(over.sum())
+            admitted_hist[t_i] = adm
+
+            if cfg.dynamic_contention:
+                # live accel->MEM flows onto links: one matvec + masked
+                # max; link capacity is f_noc-scaled like the static
+                # kernel's saturation term (C2: island rate scales links)
+                loads = (own_demand * busy) @ inc
+                rho = (inc * loads).max(axis=1) / (link_bw * svc["f_noc"])
+                dyn = contention_slowdown(rho, max_slow)
+            cap_tick = (p.base_mbps * svc["t_ref"]
+                        / (svc["t_comp"] + svc["t_wire"] * dyn)
+                        / p.req_mb) * dt
+            served = np.minimum(q, cap_tick)
+            queue = q - served
+            busy = served / cap_tick
+            served_hist[t_i] = served
+
+            # counters: pkts accumulate; exec_time (busy) auto-resets
+            pk_in = adm * p.req_mb * 1e6 / PKT_BYTES
+            pk_out = served * p.req_mb * 1e6 / PKT_BYTES
+            pkts_in += pk_in
+            pkts_out += pk_out
+            rtt_acc += self._hop_counts * dyn * p.model.noc.hop_latency
+
+            tile_power = float(np.sum(chip_power(svc["f_tile"], busy)))
+            noc_power = cfg.noc_power_share * chip_power(svc["f_noc"], 1.0)
+            energy += (tile_power + noc_power) * dt
+
+            win_busy += busy
+            win_served += float(served.sum())
+            win_ticks += 1
+            ctl_busy += busy
+            ctl_ticks += 1
+
+            if cfg.telemetry_interval and (t_i + 1) % cfg.telemetry_interval == 0:
+                cap_rps_now = cap_tick / dt
+                telem.record(
+                    tick=t_i, f_noc=svc["f_noc"],
+                    island_rates=svc["island_rates"],
+                    queue_depth=queue, busy=win_busy / win_ticks,
+                    throughput_rps=win_served / (win_ticks * dt),
+                    power_w=tile_power + noc_power,
+                    link_util_max=float(rho.max(initial=0.0)),
+                    link_util_mean=float(rho.mean()) if A else 0.0,
+                    latency_est_s=float(
+                        np.sum(queue) / max(np.sum(cap_rps_now), 1e-9)))
+                win_busy = np.zeros(A)
+                win_served = 0.0
+                win_ticks = 0
+
+            if (self.controller is not None and cfg.control_interval
+                    and (t_i + 1) % cfg.control_interval == 0):
+                # Stream-boundness is classified against the tile's
+                # *reference-rate* compute term (f_acc = 1): Fig. 4 asks
+                # "is this tile's throughput set by the NoC/MEM path?",
+                # and evaluating it at the currently-derated rate would
+                # make the classification chase the actuator (flapping).
+                t_wire_now = svc["t_wire"] * dyn
+                new_cfg = self.controller.step(
+                    tick=t_i,
+                    names=p.names,
+                    busy=ctl_busy / max(ctl_ticks, 1),
+                    boundness=t_wire_now / (self._t_comp_ref + t_wire_now),
+                    pkts_in=pkts_in, pkts_out=pkts_out, rtt=rtt_acc,
+                    queue_ticks=queue / np.maximum(cap_tick, 1e-12))
+                ctl_busy = np.zeros(A)
+                ctl_ticks = 0
+                if new_cfg is not None:
+                    svc = self._service(new_cfg)
+                    telem.event(t_i, "dfs_commit",
+                                version=new_cfg.version,
+                                rates={i.name: i.rate
+                                       for i in new_cfg.islands})
+        elapsed = time.perf_counter() - wall0
+
+        completed = float(served_hist.sum())
+        offered = float(arrivals.sum())
+        p50, p99 = self._latency_percentiles(admitted_hist, served_hist, dt)
+        sim_seconds = T * dt
+        return SimResult(
+            ticks=T, dt=dt, offered=offered, completed=completed,
+            dropped=dropped, residual=float(queue.sum()),
+            throughput_rps=completed / sim_seconds if sim_seconds else 0.0,
+            p50_latency_s=p50, p99_latency_s=p99,
+            energy_j=energy,
+            energy_per_request_j=energy / max(completed, 1e-9),
+            mean_power_w=energy / sim_seconds if sim_seconds else 0.0,
+            swaps=(self.controller.actuator.swaps - swaps0
+                   if self.controller is not None else 0),
+            elapsed_wall_s=elapsed, telemetry=telem)
+
+    @staticmethod
+    def _latency_percentiles(admitted: np.ndarray, served: np.ndarray,
+                             dt: float) -> Tuple[float, float]:
+        """Request-weighted p50/p99 sojourn time from the cumulative
+        arrival/service curves (FIFO fluid queues, tick granularity)."""
+        T, A = admitted.shape
+        if T == 0:
+            return float("nan"), float("nan")
+        ticks = np.arange(T, dtype=np.float64)
+        vals: List[np.ndarray] = []
+        wts: List[np.ndarray] = []
+        for a in range(A):
+            ca = np.cumsum(admitted[:, a])
+            cs = np.cumsum(served[:, a])
+            n = admitted[:, a]
+            mid = ca - 0.5 * n          # mid-rank of each tick's batch
+            depart = np.searchsorted(cs, mid, side="left")
+            done = (depart < T) & (n > 0)
+            lat = (depart - ticks + 0.5) * dt
+            vals.append(lat[done])
+            wts.append(n[done])
+        if not vals:
+            return float("nan"), float("nan")
+        v = np.concatenate(vals)
+        w = np.concatenate(wts)
+        if v.size == 0 or w.sum() <= 0:
+            return float("nan"), float("nan")
+        p50, p99 = weighted_percentiles(v, w, (50.0, 99.0))
+        return float(p50), float(p99)

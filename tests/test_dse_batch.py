@@ -243,6 +243,29 @@ def test_grid_sweep_joint_masks_collisions():
     assert dp.throughput == pytest.approx(expect, rel=1e-6)
 
 
+def test_grid_sweep_mem_traffic_matches_scalar():
+    """SweepResult.mem_traffic reproduces the scalar Fig.-4 model at the
+    axis values of each flat point."""
+    m = SoCPerfModel()
+    wls = [AccelWorkload("dfsin", 0.33, 60.0),
+           AccelWorkload("gsm", 4.61, 12.0)]
+    res = grid_sweep(m, wls, ks=(1, 2), acc_rates=(0.2, 1.0),
+                     noc_rates=(0.5, 1.0), tg_rates=(0.5, 1.0),
+                     positions=((1, 1), (3, 3)), n_tg=6)
+    assert res.mem_traffic is not None
+    assert res.mem_traffic.shape == res.throughput.shape
+    rng = np.random.default_rng(11)
+    for i in rng.integers(0, len(res), 40):
+        av = res.axis_values(int(i))
+        want = m.memory_traffic_mpkts(
+            {"acc": av["f_acc"], "noc_mem": av["f_noc"], "tg": av["f_tg"]},
+            res.n_tg, [(0, 0)] * len(wls))
+        assert res.mem_traffic[int(i)] == pytest.approx(want, rel=1e-12)
+    # usable as a topk objective like any other array
+    low = res.topk_indices(3, objective="mem_traffic", maximize=False)
+    assert res.mem_traffic[low][0] == res.mem_traffic[res.valid].min()
+
+
 def test_grid_sweep_topk_sorted_and_valid():
     m = SoCPerfModel()
     res = grid_sweep(m, AccelWorkload("gsm", 4.61, 12.0),

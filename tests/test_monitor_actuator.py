@@ -1,0 +1,177 @@
+"""C3 monitor counter semantics + C2 actuator commit/swap atomicity.
+
+The paper-verbatim contracts that nothing else in the suite pins down:
+
+* ``exec_time`` auto-resets (holds the latest per-step value) while
+  ``pkts_in``/``pkts_out``/``rtt`` accumulate until *manually* reset;
+* disabled counters never materialize;
+* ``manual_reset`` touches only the requested tiles/kinds;
+* the dual-buffer actuator never exposes a half-written config — readers
+  racing a reconfigure/commit storm only ever observe fully-formed
+  versions, monotonic swaps, and a bounded history.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (DFSActuator, charge, charge_boundary, default_islands,
+                        default_plan, init_counters, manual_reset)
+from repro.core.dfs import DEFAULT_HISTORY_MAXLEN
+from repro.core.monitor import PKT_BYTES
+from repro.core.tiles import TilePlan, TileSpec
+
+
+def make_plan():
+    return TilePlan(arch="t", tiles=(
+        TileSpec("attn", "attn", monitors=("exec_time", "pkts_in",
+                                           "pkts_out", "rtt")),
+        TileSpec("mem", "mem", monitors=("pkts_in", "pkts_out")),
+        TileSpec("noc", "noc", monitors=()),
+    ))
+
+
+# ------------------------------------------------------------ C3 counters
+def test_exec_time_replaces_value():
+    c = init_counters(make_plan())
+    c = charge(c, "attn", exec_time=3.0)
+    c = charge(c, "attn", exec_time=5.0)
+    # latest value, NOT 8.0: exec_time auto-resets at each start/stop
+    assert float(c["attn"]["exec_time"]) == 5.0
+
+
+def test_pkts_and_rtt_accumulate():
+    c = init_counters(make_plan())
+    c = charge(c, "attn", pkts_in=2.0, pkts_out=1.0, rtt=0.5)
+    c = charge(c, "attn", pkts_in=3.0, pkts_out=4.0, rtt=0.25)
+    assert float(c["attn"]["pkts_in"]) == 5.0
+    assert float(c["attn"]["pkts_out"]) == 5.0
+    assert float(c["attn"]["rtt"]) == 0.75
+
+
+def test_disabled_counters_never_materialize():
+    c = init_counters(make_plan())
+    assert set(c["mem"]) == {"pkts_in", "pkts_out"}
+    assert c["noc"] == {}
+    c = charge(c, "mem", exec_time=9.0, rtt=1.0, pkts_in=1.0)
+    assert "exec_time" not in c["mem"] and "rtt" not in c["mem"]
+    assert float(c["mem"]["pkts_in"]) == 1.0
+    # charging an unknown tile is a silent no-op (no register, no trap)
+    assert charge(c, "nope", pkts_in=1.0) == c
+
+
+def test_manual_reset_scopes_to_tiles_and_kinds():
+    c = init_counters(make_plan())
+    c = charge(c, "attn", exec_time=2.0, pkts_in=4.0, rtt=1.0)
+    c = charge(c, "mem", pkts_in=6.0)
+    r = manual_reset(c, tiles=["attn"])
+    # accumulating counters of attn cleared; exec_time survives by default
+    assert float(r["attn"]["pkts_in"]) == 0.0
+    assert float(r["attn"]["rtt"]) == 0.0
+    assert float(r["attn"]["exec_time"]) == 2.0
+    # other tiles untouched
+    assert float(r["mem"]["pkts_in"]) == 6.0
+    # explicit kinds override the default exclusion of exec_time
+    r2 = manual_reset(c, kinds=("exec_time",))
+    assert float(r2["attn"]["exec_time"]) == 0.0
+    assert float(r2["attn"]["pkts_in"]) == 4.0
+
+
+def test_charge_boundary_conserves_packets():
+    c = init_counters(make_plan())
+    payload = np.zeros((4, PKT_BYTES // 4), dtype=np.float32)  # 4 pkts
+    c = charge_boundary(c, "attn", "mem", payload)
+    assert float(c["attn"]["pkts_out"]) == pytest.approx(4.0)
+    assert float(c["mem"]["pkts_in"]) == pytest.approx(4.0)
+
+
+# ------------------------------------------------------- C2 actuator swap
+def islands():
+    return default_islands(default_plan(get_config("granite-8b")))
+
+
+def test_commit_without_reconfigure_is_noop():
+    act = DFSActuator(islands())
+    v0 = act.live().version
+    assert act.commit().version == v0
+    assert act.swaps == 0
+
+
+def test_abort_drops_shadow_without_exposure():
+    act = DFSActuator(islands())
+    v0 = act.live().version
+    act.reconfigure({"noc_mem": 0.5})
+    act.abort()
+    assert act.commit().version == v0          # nothing to swap anymore
+    assert act.live().rate_of("mem") == 1.0
+
+
+def test_history_is_bounded_with_custom_maxlen():
+    act = DFSActuator(islands(), history_maxlen=5)
+    assert act.history_maxlen == 5
+    for i in range(50):
+        act.reconfigure({"noc_mem": 0.5 if i % 2 else 1.0})
+        act.commit()
+    h = act.history()
+    assert act.swaps == 50
+    assert len(h) == 5
+    # the kept window is the most recent commits, in order
+    versions = [v for v, _ in h]
+    assert versions == sorted(versions)
+    assert versions[-1] == act.live().version
+
+
+def test_history_default_maxlen_bounds_growth():
+    act = DFSActuator(islands())
+    for i in range(DEFAULT_HISTORY_MAXLEN + 37):
+        act.reconfigure({"noc_mem": 0.5 if i % 2 else 1.0})
+        act.commit()
+    assert len(act.history()) == DEFAULT_HISTORY_MAXLEN
+
+
+def test_concurrent_commit_swap_atomicity():
+    """Readers racing a reconfigure/commit storm must only ever observe
+    fully-formed configs: every island present, version monotonic per
+    reader, rates always on the ladder."""
+    act = DFSActuator(islands())
+    names = set(act.live().names())
+    stop = threading.Event()
+    errors = []
+
+    def reader():
+        last_version = -1
+        while not stop.is_set():
+            cfg = act.live()
+            try:
+                assert set(cfg.names()) == names
+                assert cfg.version >= last_version
+                for isl in cfg.islands:
+                    if not isl.fixed:
+                        assert isl.rate in isl.ladder.levels()
+                last_version = cfg.version
+            except AssertionError as e:        # pragma: no cover
+                errors.append(e)
+                return
+
+    def writer(seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(300):
+            act.reconfigure({"noc_mem": float(rng.uniform(0.1, 1.0))})
+            if rng.random() < 0.1:
+                act.abort()
+            else:
+                act.commit()
+
+    readers = [threading.Thread(target=reader) for _ in range(3)]
+    writers = [threading.Thread(target=writer, args=(s,)) for s in range(3)]
+    for t in readers + writers:
+        t.start()
+    for t in writers:
+        t.join()
+    stop.set()
+    for t in readers:
+        t.join()
+    assert not errors
+    assert act.swaps <= 900
+    assert len(act.history()) <= DEFAULT_HISTORY_MAXLEN
