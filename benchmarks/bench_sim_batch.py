@@ -1,0 +1,131 @@
+"""Batched multi-design co-simulation benchmark: survivors/second.
+
+Scores grid_sweep survivors by closed-loop replay three ways — the
+sequential per-point engine (the reference), the batched NumPy engine at
+B in {1, 64, 512}, and the batched jax.lax.scan backend — reporting
+design-replays per second of wall clock.  Emits ``BENCH_sim_batch.json``
+so the runtime-validation throughput trajectory is tracked across PRs
+next to ``BENCH_dse.json`` (static sweep) and ``BENCH_sim.json``
+(single-design closed loop).
+
+Asserted here (the ISSUE acceptance): batched B=512 beats the sequential
+path by >= 10x on CPU at identical ranking output.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.dfs import BatchPIDRatePolicy
+from repro.core.dse import closed_loop_score, grid_sweep
+from repro.core.perfmodel import AccelWorkload, SoCPerfModel
+from repro.sim import (BatchControllerHarness, BatchSimEngine,
+                       BatchSimPlatform, SimConfig, diurnal_trace)
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_sim_batch.json")
+
+TICKS = 400
+DT = 1e-3
+REQ_MB = 0.002
+SEQ_SAMPLE = 64             # sequential reference measured on this many
+
+
+def _sweep():
+    m = SoCPerfModel()
+    wls = [AccelWorkload("dfadd", 9.22, 0.9),
+           AccelWorkload("dfmul", 8.70, 1.1)]
+    res = grid_sweep(m, wls, ks=(1, 2, 4, 8), acc_rates=(0.2, 0.6, 1.0),
+                     noc_rates=(0.5, 1.0), n_tg=2)
+    return m, res
+
+
+def bench_sim_batch():
+    m, res = _sweep()
+    survivors = res.topk_indices(512)
+    survivors = np.resize(survivors, 512)       # pad if the sweep is small
+    trace = diurnal_trace(2000.0, TICKS, 2, dt=DT, depth=0.4, seed=5)
+
+    rows = []
+    stats = {}
+
+    # sequential reference (per-point SimEngine loop)
+    idx = survivors[:SEQ_SAMPLE]
+    t0 = time.perf_counter()
+    seq = closed_loop_score(res, trace, model=m, indices=idx,
+                            req_mb=REQ_MB, batch=False)
+    seq_wall = time.perf_counter() - t0
+    seq_rate = SEQ_SAMPLE / seq_wall
+    stats["sequential"] = {"designs": SEQ_SAMPLE, "wall_seconds": seq_wall,
+                           "survivors_per_sec": seq_rate}
+    rows.append(("sim_batch_sequential", seq_wall / SEQ_SAMPLE * 1e6,
+                 f"B={SEQ_SAMPLE} {seq_rate:,.1f} survivors/s"))
+
+    for B in (1, 64, 512):
+        idx = survivors[:B]
+        t0 = time.perf_counter()
+        bat = closed_loop_score(res, trace, model=m, indices=idx,
+                                req_mb=REQ_MB)
+        wall = time.perf_counter() - t0
+        rate = B / wall
+        stats[f"batch_numpy_{B}"] = {
+            "designs": B, "wall_seconds": wall, "survivors_per_sec": rate,
+            "speedup_vs_sequential": rate / seq_rate}
+        rows.append((f"sim_batch_numpy_B{B}", wall / B * 1e6,
+                     f"{rate:,.1f} survivors/s "
+                     f"({rate / seq_rate:.1f}x sequential)"))
+        if B == SEQ_SAMPLE:
+            assert np.array_equal(bat.ranked_indices(),
+                                  seq.ranked_indices()), \
+                "batched ranking diverged from sequential"
+
+    # acceptance: batched B=512 >= 10x the sequential path on CPU
+    speedup = stats["batch_numpy_512"]["survivors_per_sec"] / seq_rate
+    assert speedup >= 10.0, f"batched speedup {speedup:.1f}x < 10x"
+    stats["acceptance_b512_speedup"] = speedup
+
+    # jax.lax.scan backend (compile once, report steady-state)
+    try:
+        idx = survivors[:512]
+        bplat = BatchSimPlatform.from_design_points(m, res, idx,
+                                                    req_mb=REQ_MB)
+        ctl = BatchControllerHarness(bplat.islands, bplat.rates,
+                                     BatchPIDRatePolicy(target=0.7),
+                                     tile_names=bplat.names,
+                                     queue_guard_ticks=3.0)
+        eng = BatchSimEngine(bplat, config=SimConfig(control_interval=25),
+                             controller=ctl, backend="jax")
+        t0 = time.perf_counter()
+        eng.run(trace)
+        compile_wall = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        eng.run(trace)
+        wall = time.perf_counter() - t0
+        rate = 512 / wall
+        stats["batch_jax_512"] = {
+            "designs": 512, "wall_seconds": wall,
+            "compile_plus_run_seconds": compile_wall,
+            "survivors_per_sec": rate,
+            "speedup_vs_sequential": rate / seq_rate}
+        rows.append(("sim_batch_jax_B512", wall / 512 * 1e6,
+                     f"{rate:,.1f} survivors/s "
+                     f"({rate / seq_rate:.1f}x sequential, "
+                     f"compile {compile_wall:.1f}s)"))
+    except Exception as e:  # pragma: no cover - jax optional at bench time
+        stats["batch_jax_512"] = {"error": repr(e)}
+        rows.append(("sim_batch_jax_B512", 0.0, f"SKIPPED:{e!r}"))
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump({
+            "ticks": TICKS, "dt": DT, "req_mb": REQ_MB,
+            "n_requests_per_design": float(trace.n_requests),
+            "runs": stats,
+        }, f, indent=2)
+    return rows
+
+
+def run():
+    return bench_sim_batch()

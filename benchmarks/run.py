@@ -9,7 +9,15 @@ measured value.
 """
 import argparse
 import json
+import os
 import sys
+
+# `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
+# sys.path; add the root so `from benchmarks import ...` resolves both
+# there and under `python -m benchmarks.run`.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _ROOT not in sys.path:
+    sys.path.insert(0, _ROOT)
 
 
 def main(argv=None) -> None:
@@ -21,12 +29,14 @@ def main(argv=None) -> None:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_contention, bench_dfs_traffic, bench_dse,
-                            bench_kernels, bench_replication, bench_sim)
+                            bench_kernels, bench_replication, bench_sim,
+                            bench_sim_batch)
     mods = [("replication(TableI)", bench_replication),
             ("contention(Fig3)", bench_contention),
             ("dfs_traffic(Fig4)", bench_dfs_traffic),
             ("dse", bench_dse),
             ("sim(closed-loop)", bench_sim),
+            ("sim_batch(multi-design)", bench_sim_batch),
             ("kernels", bench_kernels)]
     rows = []
     failures = 0

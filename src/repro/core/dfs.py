@@ -223,6 +223,84 @@ class PIDRatePolicy:
         return out
 
 
+# ---------------------------------------------------------------------------
+# Vectorized (multi-design) policies — the batched co-sim counterparts
+# ---------------------------------------------------------------------------
+#
+# The scalar policies above consume {tile: TileTelemetry} dicts for ONE
+# platform; the batched simulation engine (sim/batch.py) runs B design
+# points at once, so its controller harness hands policies a *sample*
+# object exposing per-tile (B, A) counter windows plus island aggregation
+# helpers (sim/control.py:BatchSample).  A batch policy returns a (B, I)
+# array of requested island rates, with NaN meaning "no request for this
+# island" — the array analogue of a scalar policy omitting a dict key.
+# The math is element-for-element the scalar policies' math, so a B=1
+# batch run reproduces the scalar controller bit-for-bit (tested).
+
+
+class BatchMemoryBoundPolicy:
+    """Vectorized :func:`policy_memory_bound`: islands whose mean tile
+    stream-boundness exceeds ``threshold`` drop to ``low_rate``, everyone
+    else returns to full rate; fixed islands, ``noc_mem`` and islands with
+    no sampled tiles are never requested (NaN).  Stateless."""
+
+    def __init__(self, *, threshold: float = 0.7, low_rate: float = 0.2):
+        self.threshold = threshold
+        self.low_rate = low_rate
+
+    def __call__(self, rates: np.ndarray, sample) -> np.ndarray:
+        b = sample.island_mean(sample.boundness)            # (B, I)
+        out = np.where(b >= self.threshold, self.low_rate, 1.0)
+        skip = (sample.fixed | (sample.counts == 0)
+                | (np.asarray(sample.island_names) == "noc_mem"))
+        out[:, skip] = np.nan
+        return out
+
+
+class BatchPIDRatePolicy:
+    """Vectorized :class:`PIDRatePolicy`: per-(design, island) integral and
+    previous-error state as (B, I) arrays, elementwise the scalar PID's
+    update.  Stateful — construct one instance per controlled batch."""
+
+    def __init__(self, *, target: float = 0.7, kp: float = 0.8,
+                 ki: float = 0.25, kd: float = 0.0, min_rate: float = 0.2,
+                 integral_clamp: float = 2.0,
+                 skip: Tuple[str, ...] = ("noc_mem",)):
+        assert 0.0 < target <= 1.0
+        self.target = target
+        self.kp, self.ki, self.kd = kp, ki, kd
+        self.min_rate = min_rate
+        self.integral_clamp = integral_clamp
+        self.skip = tuple(skip)
+        self._integral: Optional[np.ndarray] = None          # (B, I)
+        self._prev_err: Optional[np.ndarray] = None          # (B, I)
+
+    def reset(self) -> None:
+        self._integral = None
+        self._prev_err = None
+
+    def __call__(self, rates: np.ndarray, sample) -> np.ndarray:
+        rates = np.asarray(rates, dtype=np.float64)
+        util = sample.island_mean(sample.busy)               # (B, I)
+        skip = (sample.fixed | (sample.counts == 0)
+                | np.isin(np.asarray(sample.island_names), self.skip))
+        err = np.where(skip, 0.0, util - self.target)
+        if self._integral is None:
+            self._integral = np.zeros_like(err)
+        if self._prev_err is None:
+            d_term = np.zeros_like(err)        # scalar: first sample d=0
+        else:
+            d_term = err - self._prev_err
+        i_term = np.clip(self._integral + err,
+                         -self.integral_clamp, self.integral_clamp)
+        self._integral = i_term
+        self._prev_err = err
+        new = rates + self.kp * err + self.ki * i_term + self.kd * d_term
+        out = np.clip(new, self.min_rate, 1.0)
+        out[:, skip] = np.nan
+        return out
+
+
 def policy_energy_per_token_sweep(
         islands: IslandConfig,
         perf_eval_batch: Callable[[Dict[str, np.ndarray]],

@@ -375,17 +375,29 @@ class ClosedLoopScore:
     sustained throughput under the replayed trace.  ``order`` re-ranks
     ``indices`` best-first: points meeting the p99 SLA sorted by energy
     per request, then SLA violators by how badly they miss it.
+
+    ``results`` holds per-point ``sim.SimResult`` objects on the
+    sequential path; on the batched path it holds the single
+    ``sim.BatchSimResult`` of the one stacked replay.
     """
     indices: np.ndarray                 # (M,) int64
     p99_latency_s: np.ndarray           # (M,) float64
     energy_per_request_j: np.ndarray    # (M,) float64
     throughput_rps: np.ndarray          # (M,) float64
     order: np.ndarray                   # (M,) int64 positions into indices
-    results: List[object]               # per-point sim.SimResult
+    results: List[object]               # SimResults, or one BatchSimResult
 
     def ranked_indices(self) -> np.ndarray:
         """Flat SweepResult indices, best-first."""
         return self.indices[self.order]
+
+
+def _rank_scores(p99: np.ndarray, ept: np.ndarray,
+                 p99_sla_s: Optional[float]) -> np.ndarray:
+    if p99_sla_s is not None:
+        miss = np.maximum(0.0, p99 / p99_sla_s - 1.0)
+        return np.lexsort((ept, miss))      # SLA first, then energy
+    return np.lexsort((p99, ept))           # energy first, p99 tie-break
 
 
 def closed_loop_score(result: SweepResult, trace, *,
@@ -394,8 +406,12 @@ def closed_loop_score(result: SweepResult, trace, *,
                       top: int = 8,
                       p99_sla_s: Optional[float] = None,
                       controller_factory=None,
+                      batch_controller_factory=None,
                       req_mb: float = 0.1,
-                      sim_config=None) -> ClosedLoopScore:
+                      sim_config=None,
+                      batch: Optional[bool] = None,
+                      backend: str = "numpy",
+                      trace_seed: int = 0) -> ClosedLoopScore:
     """Re-rank static-sweep survivors by *simulated* runtime behaviour.
 
     The static objectives of :func:`grid_sweep` assume steady saturated
@@ -413,13 +429,29 @@ def closed_loop_score(result: SweepResult, trace, *,
                                   p99_sla_s=0.05)
         best  = res.design_point(int(score.ranked_indices()[0]))
 
-    ``controller_factory`` is called per point with the materialized
-    :class:`~repro.sim.SimPlatform` and must return a
-    ``repro.sim.ControllerHarness`` (or None for open-loop replay).
-    Imports ``repro.sim`` lazily — the core DSE layer stays importable
-    without the simulation subsystem.
+    **Batched by default**: the survivors are stacked into one
+    ``repro.sim.BatchSimPlatform`` and replayed as a single array program
+    (``backend="numpy"`` or ``"jax"`` for the ``lax.scan`` tick loop) —
+    re-ranking ~1k survivors is one batched run, not ~1k sequential sims.
+    ``batch_controller_factory`` receives the stacked platform and must
+    return a ``repro.sim.BatchControllerHarness`` (or None).  Passing the
+    legacy per-point ``controller_factory`` (a
+    ``repro.sim.ControllerHarness`` per materialized ``SimPlatform``)
+    selects the sequential path, as does ``batch=False``; the sequential
+    path is the differential-test reference and produces identical
+    rankings (tested).
+
+    Determinism: ``trace`` may be a callable ``trace(seed) -> Trace``; it
+    is invoked with the explicit ``trace_seed``, so repeated scoring of
+    the same survivors replays an identical trace instead of relying on
+    whatever generator state the caller happened to have.  Imports
+    ``repro.sim`` lazily — the core DSE layer stays importable without
+    the simulation subsystem.
     """
     from repro.sim import SimConfig, SimEngine, SimPlatform
+
+    if callable(trace):
+        trace = trace(trace_seed)
 
     if indices is None:
         pf = result.pareto_indices()
@@ -427,30 +459,45 @@ def closed_loop_score(result: SweepResult, trace, *,
         indices = pf[ordr][:top]
     indices = np.asarray(indices, dtype=np.int64)
 
-    p99 = np.empty(indices.shape[0])
-    ept = np.empty(indices.shape[0])
-    thr = np.empty(indices.shape[0])
-    results: List[object] = []
-    for j, i in enumerate(indices):
-        dp = result.design_point(int(i))
-        platform = SimPlatform.from_design_point(
-            model, dp, result.workloads, req_mb=req_mb, n_tg=result.n_tg)
-        controller = (controller_factory(platform)
-                      if controller_factory is not None else None)
-        engine = SimEngine(platform,
-                           config=sim_config or SimConfig(),
-                           controller=controller)
-        r = engine.run(trace)
-        results.append(r)
-        p99[j] = r.p99_latency_s
-        ept[j] = r.energy_per_request_j
-        thr[j] = r.throughput_rps
+    if batch is None:
+        batch = controller_factory is None
+    assert not (batch and controller_factory is not None), \
+        "per-point controller_factory requires batch=False"
 
-    if p99_sla_s is not None:
-        miss = np.maximum(0.0, p99 / p99_sla_s - 1.0)
-        order = np.lexsort((ept, miss))     # SLA first, then energy
+    if batch:
+        from repro.sim import BatchSimEngine, BatchSimPlatform
+        platform = BatchSimPlatform.from_design_points(
+            model, result, indices, req_mb=req_mb, n_tg=result.n_tg)
+        controller = (batch_controller_factory(platform)
+                      if batch_controller_factory is not None else None)
+        engine = BatchSimEngine(platform, config=sim_config or SimConfig(),
+                                controller=controller, backend=backend)
+        r = engine.run(trace)
+        p99 = r.p99_latency_s
+        ept = r.energy_per_request_j
+        thr = r.throughput_rps
+        results: List[object] = [r]
     else:
-        order = np.lexsort((p99, ept))      # energy first, p99 tie-break
+        p99 = np.empty(indices.shape[0])
+        ept = np.empty(indices.shape[0])
+        thr = np.empty(indices.shape[0])
+        results = []
+        for j, i in enumerate(indices):
+            dp = result.design_point(int(i))
+            platform = SimPlatform.from_design_point(
+                model, dp, result.workloads, req_mb=req_mb, n_tg=result.n_tg)
+            controller = (controller_factory(platform)
+                          if controller_factory is not None else None)
+            engine = SimEngine(platform,
+                               config=sim_config or SimConfig(),
+                               controller=controller)
+            r = engine.run(trace)
+            results.append(r)
+            p99[j] = r.p99_latency_s
+            ept[j] = r.energy_per_request_j
+            thr[j] = r.throughput_rps
+
+    order = _rank_scores(p99, ept, p99_sla_s)
     return ClosedLoopScore(indices=indices, p99_latency_s=p99,
                            energy_per_request_j=ept, throughput_rps=thr,
                            order=np.asarray(order, dtype=np.int64),

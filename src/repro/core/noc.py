@@ -208,6 +208,37 @@ def _route_segments(t: RoutingTables, src, dst):
     return t.link_ids[flat], counts
 
 
+def stacked_incidence(cfg: NocConfig, src, dst) -> np.ndarray:
+    """Dense route->link incidence for a batch of (src, dst) pairs.
+
+    Returns a ``(..., n_links)`` float64 0/1 array where entry
+    ``[..., l]`` is 1 iff the XY route of the corresponding (src, dst)
+    pair traverses link ``l`` (RoutingTables link order).  ``src``/``dst``
+    broadcast like :func:`hops_batch`.
+
+    This is the *stacked/padded* export the batched co-simulation engine
+    consumes: every route, whatever its hop count, is padded out to the
+    full ``n_links``-wide row (zeros on unused links), so per-design
+    per-tile routes stack into one rectangular ``(B, A, L)`` table and
+    per-tick link loads become a single einsum instead of B ragged
+    gathers.  Dense rows cost ``n_links`` floats each — fine for SoC-size
+    fabrics (a 4x4 mesh has 48 directed links); pod-size grids should
+    keep using the ragged ``link_ids``/``route_offsets`` tables.
+    """
+    t = routing_tables(cfg)
+    s = _as_indices(cfg, src)
+    d = _as_indices(cfg, dst)
+    s, d = np.broadcast_arrays(s, d)
+    shape = s.shape
+    sflat = s.ravel()
+    ids, counts = _route_segments(t, sflat, d.ravel())
+    inc = np.zeros((sflat.shape[0], t.n_links), dtype=np.float64)
+    if ids.size:
+        rows = np.repeat(np.arange(counts.shape[0]), counts)
+        inc[rows, ids] = 1.0
+    return inc.reshape(shape + (t.n_links,))
+
+
 def link_loads_batch(cfg: NocConfig, src, dst, demand) -> np.ndarray:
     """Per-link offered load (bytes/cycle) of B flows: one bincount.
 

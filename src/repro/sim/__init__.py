@@ -6,23 +6,35 @@ retune island rates in the loop:
 
 engine.py    — tick-based batched event loop (flat arrays, no per-request
                Python objects; service rates from the perfmodel kernel,
-               contention from the NoC routing tables)
+               contention from the NoC routing tables); the shared
+               tick_step/TickState numeric core every engine runs
+batch.py     — B design points co-simulated as ONE array program
+               ((B, A) state, stacked incidence, vectorized DFS commits;
+               numpy reference + jax.lax.scan backend)
 traffic.py   — composable arrival-trace generators (constant, Poisson,
                diurnal, MMPP-bursty, replay) scaling to millions of
                requests
 control.py   — controller harness: windowed C3 counter samples -> dfs
-               policies -> dual-buffer actuator commits
-telemetry.py — ring-buffer time series + JSON export
+               policies -> dual-buffer actuator commits (scalar + the
+               vectorized multi-design BatchControllerHarness)
+telemetry.py — ring-buffer time series + JSON export (per-design rings
+               for the batched engine)
 
 DSE bridge: ``core/dse.py:closed_loop_score`` re-ranks ``grid_sweep``
 Pareto survivors by simulated tail latency and energy under dynamic
-traffic.
+traffic — one batched replay for all survivors.
 """
 from repro.sim.engine import (  # noqa: F401
-    SimConfig, SimEngine, SimPlatform, SimResult)
-from repro.sim.control import ControlAction, ControllerHarness  # noqa: F401
+    SimConfig, SimEngine, SimPlatform, SimResult, StepConsts, TickState,
+    latency_percentiles, tick_step)
+from repro.sim.batch import (  # noqa: F401
+    BatchSimEngine, BatchSimPlatform, BatchSimResult)
+from repro.sim.control import (  # noqa: F401
+    BatchControllerHarness, BatchSample, ControlAction, ControllerHarness,
+    IslandTopology)
 from repro.sim.telemetry import (  # noqa: F401
-    RingBuffer, Telemetry, TelemetrySchema, weighted_percentiles)
+    BatchTelemetry, RingBuffer, Telemetry, TelemetrySchema,
+    weighted_percentiles)
 from repro.sim.traffic import (  # noqa: F401
     Trace, constant_trace, diurnal_trace, mmpp_trace, poisson_trace,
     replay_trace, superpose, with_total)

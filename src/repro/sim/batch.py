@@ -1,0 +1,653 @@
+"""Batched multi-design closed-loop co-simulation: B SoCs as one array
+program.
+
+``core/dse.py:grid_sweep`` evaluates millions of *static* design points
+per second, but runtime validation (``closed_loop_score``) used to
+re-simulate Pareto survivors one at a time — the static sweep scaled, the
+closed loop didn't.  This module stacks B concrete designs (replication
+counts, placements, island rates) into one platform whose tick loop
+advances ``(B, A)`` arrays:
+
+* per-tile queue/busy/counter state gains a leading design axis and is
+  advanced by the SAME :func:`~repro.sim.engine.tick_step` the sequential
+  engine runs — elementwise ops and trailing-axis reductions are
+  shape-independent, so a B=1 batch run reproduces the sequential engine
+  bit-for-bit (differential-tested);
+* service rates come from ``service_time_terms_batch`` broadcast over the
+  design axis (per-design ``f_acc``/``f_noc``/``f_tg``/K/placement);
+* NoC contention uses per-design route->link incidence stacked into one
+  dense ``(B, A, L)`` table (:func:`~repro.core.noc.stacked_incidence`:
+  every route padded out to the full link-vector width, so per-tick link
+  loads are a single einsum — the memory cost is ``B*A*L`` floats, fine
+  for SoC-size fabrics);
+* DFS controllers run vectorized: policy decisions on ``(B, I)`` counter
+  windows, dual-buffer commits as masked array swaps
+  (:class:`~repro.sim.control.BatchControllerHarness`).
+
+Two backends: ``"numpy"`` (float64, the ground-truth reference) and
+``"jax"`` — the tick loop as one ``jax.lax.scan`` (jit-compiled; float32
+unless ``jax_enable_x64``), so the whole grid_sweep -> Pareto -> batched
+co-sim pipeline can run jitted end to end.  The jax backend supports
+open-loop replay and the vectorized membound/PID policies (+ queue
+guard); it records no telemetry rings (latency percentiles are still
+reconstructed exactly from the returned histories).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.islands import IslandConfig
+from repro.core.noc import pos_index, stacked_incidence
+from repro.core.perfmodel import SoCPerfModel
+from repro.sim.control import BatchControllerHarness
+from repro.sim.engine import (PKT_BYTES, SimConfig, SimPlatform, StepConsts,
+                              TickState, latency_percentiles, tick_step)
+from repro.sim.telemetry import BatchTelemetry, TelemetrySchema
+from repro.sim.traffic import Trace
+
+
+# ---------------------------------------------------------------------------
+# Platform: B concrete designs, stacked
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BatchSimPlatform:
+    """B simulatable SoC instances sharing one NoC/model and one island
+    *structure* (names, tile partition, ladders); everything that varies
+    across designs — replication, placement, island rates, TG rate — is a
+    leading-``B``-axis array.  ``islands`` is the structural template; the
+    live per-design rates live in ``rates`` (and evolve through a
+    :class:`BatchControllerHarness` at run time).
+    """
+    model: SoCPerfModel
+    islands: IslandConfig               # structure template (rates ignored)
+    names: Tuple[str, ...]
+    base_mbps: np.ndarray               # (B, A)
+    wire_share: np.ndarray              # (B, A)
+    k: np.ndarray                       # (B, A)
+    pos_idx: np.ndarray                 # (B, A)
+    req_mb: np.ndarray                  # (B, A)
+    rates: np.ndarray                   # (B, I) initial island rates
+    f_tg: np.ndarray                    # (B,)
+    n_tg: int = 0
+
+    @property
+    def n_designs(self) -> int:
+        return int(self.k.shape[0])
+
+    @property
+    def n_tiles(self) -> int:
+        return len(self.names)
+
+    @classmethod
+    def stack(cls, platforms: Sequence[SimPlatform]) -> "BatchSimPlatform":
+        """Stack B :class:`SimPlatform` instances (same model, tile names
+        and island structure; per-design arrays may differ)."""
+        assert platforms, "need at least one platform"
+        p0 = platforms[0]
+        isl_names = p0.islands.names()
+        isl_tiles = tuple(i.tiles for i in p0.islands.islands)
+        for p in platforms[1:]:
+            assert p.model is p0.model or p.model == p0.model, \
+                "platforms must share one SoCPerfModel"
+            assert p.names == p0.names, "tile name mismatch"
+            assert p.islands.names() == isl_names, "island structure mismatch"
+            assert tuple(i.tiles for i in p.islands.islands) == isl_tiles
+            assert p.n_tg == p0.n_tg, "n_tg mismatch"
+        return cls(
+            model=p0.model, islands=p0.islands, names=p0.names,
+            base_mbps=np.stack([p.base_mbps for p in platforms]),
+            wire_share=np.stack([p.wire_share for p in platforms]),
+            k=np.stack([p.k for p in platforms]),
+            pos_idx=np.stack([p.pos_idx for p in platforms]),
+            req_mb=np.stack([p.req_mb for p in platforms]),
+            rates=np.asarray([[i.rate for i in p.islands.islands]
+                              for p in platforms], dtype=np.float64),
+            f_tg=np.asarray([p.f_tg for p in platforms], dtype=np.float64),
+            n_tg=p0.n_tg)
+
+    @classmethod
+    def from_design_points(cls, model: SoCPerfModel, result, indices,
+                           *, req_mb: float = 0.1,
+                           n_tg: Optional[int] = None
+                           ) -> "BatchSimPlatform":
+        """Bridge from the DSE layer: stack ``grid_sweep`` survivors
+        (flat :class:`~repro.core.dse.SweepResult` indices) for one
+        batched replay."""
+        n_tg = result.n_tg if n_tg is None else n_tg
+        plats = [SimPlatform.from_design_point(
+                     model, result.design_point(int(i)), result.workloads,
+                     req_mb=req_mb, n_tg=n_tg)
+                 for i in np.asarray(indices, dtype=np.int64)]
+        return cls.stack(plats)
+
+    def design(self, b: int) -> SimPlatform:
+        """Materialize design ``b`` as a sequential :class:`SimPlatform`
+        (the differential-test / drill-down path)."""
+        specs = tuple(dataclasses.replace(spec, rate=float(self.rates[b, i]))
+                      for i, spec in enumerate(self.islands.islands))
+        return SimPlatform(
+            model=self.model,
+            islands=dataclasses.replace(self.islands, islands=specs),
+            names=self.names, base_mbps=self.base_mbps[b].copy(),
+            wire_share=self.wire_share[b].copy(), k=self.k[b].copy(),
+            pos_idx=self.pos_idx[b].copy(), req_mb=self.req_mb[b].copy(),
+            n_tg=self.n_tg, f_tg=float(self.f_tg[b]))
+
+
+# ---------------------------------------------------------------------------
+# Result
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class BatchSimResult:
+    """Per-design outcome arrays of one batched replay (all ``(B,)``)."""
+    n_designs: int
+    ticks: int
+    dt: float
+    offered: float                      # identical trace for every design
+    completed: np.ndarray
+    dropped: np.ndarray
+    residual: np.ndarray
+    throughput_rps: np.ndarray
+    p50_latency_s: np.ndarray
+    p99_latency_s: np.ndarray
+    energy_j: np.ndarray
+    energy_per_request_j: np.ndarray
+    mean_power_w: np.ndarray
+    swaps: np.ndarray                   # (B,) int64 actuator commits
+    elapsed_wall_s: float               # whole batch, one clock
+    backend: str = "numpy"
+    telemetry: Optional[BatchTelemetry] = None   # None on the jax backend
+
+    @property
+    def designs_per_s_wall(self) -> float:
+        return (self.n_designs / self.elapsed_wall_s
+                if self.elapsed_wall_s else 0.0)
+
+    @property
+    def requests_per_s_wall(self) -> float:
+        return (float(self.completed.sum()) / self.elapsed_wall_s
+                if self.elapsed_wall_s else 0.0)
+
+    def summary(self) -> str:
+        return (f"{self.n_designs} designs x {self.ticks} ticks "
+                f"({self.backend}, {self.elapsed_wall_s:.2f}s wall, "
+                f"{self.designs_per_s_wall:,.1f} designs/s): "
+                f"p99 [{self.p99_latency_s.min() * 1e3:.2f}, "
+                f"{self.p99_latency_s.max() * 1e3:.2f}]ms, "
+                f"mJ/req [{self.energy_per_request_j.min() * 1e3:.3f}, "
+                f"{self.energy_per_request_j.max() * 1e3:.3f}], "
+                f"{int(self.swaps.sum())} DFS swaps")
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+
+class BatchSimEngine:
+    """Ticks B stacked designs through one trace, controllers in loop."""
+
+    def __init__(self, platform: BatchSimPlatform, *,
+                 config: SimConfig = SimConfig(),
+                 controller: Optional[BatchControllerHarness] = None,
+                 backend: str = "numpy"):
+        assert backend in ("numpy", "jax"), backend
+        self.platform = platform
+        self.config = config
+        self.controller = controller
+        self.backend = backend
+        self.last_state: Optional[TickState] = None
+        self.last_histories = None      # (admitted, served) (T, B, A)
+        m = platform.model
+        mem_idx = pos_index(m.noc, m.mem_pos)
+        # per-design route->link incidence, stacked dense: (B, A, L)
+        self._inc = stacked_incidence(m.noc, platform.pos_idx, mem_idx)
+        self._hop_counts = m.hop_counts(pos_idx=platform.pos_idx)
+        self._t_comp_ref = (1.0 - platform.wire_share) / platform.k
+        isl_names = platform.islands.names()
+        self._island_of_tile = np.asarray(
+            [isl_names.index(platform.islands.island_of(n).name)
+             for n in platform.names], dtype=np.int64)
+        try:
+            self._noc_island = isl_names.index("noc_mem")
+        except ValueError:
+            self._noc_island = -1
+        self._jax_fn = None             # compiled scan, keyed by (T, ci)
+
+    # ------------------------------------------------------------ service
+    def _service(self, rates: np.ndarray) -> Dict[str, np.ndarray]:
+        """Service-time terms for a (B, I) rate matrix — the stacked
+        analogue of ``SimEngine._service`` (recomputed only on commits)."""
+        p = self.platform
+        B, A = p.n_designs, p.n_tiles
+        f_tile = rates[:, self._island_of_tile]              # (B, A)
+        f_noc = (rates[:, self._noc_island] if self._noc_island >= 0
+                 else np.ones(B))
+        t_comp, t_wire, t_ref = p.model.service_time_terms_batch(
+            wire_share=p.wire_share, k=p.k, f_acc=f_tile,
+            f_noc=f_noc[:, None], f_tg=p.f_tg[:, None], n_tg=p.n_tg,
+            pos_idx=p.pos_idx)
+        return {"t_comp": np.broadcast_to(t_comp, (B, A)),
+                "t_wire": np.broadcast_to(t_wire, (B, A)),
+                "t_ref": np.broadcast_to(np.asarray(t_ref, float), (B, A)),
+                "f_tile": f_tile, "f_noc": f_noc}
+
+    def capacity_rps(self, rates: Optional[np.ndarray] = None) -> np.ndarray:
+        """(B, A) uncontended per-tile service capacity (requests/s)."""
+        svc = self._service(self.platform.rates if rates is None else rates)
+        thr = self.platform.base_mbps * svc["t_ref"] / (
+            svc["t_comp"] + svc["t_wire"])
+        return thr / self.platform.req_mb
+
+    def step_consts(self, dt: float) -> StepConsts:
+        p, cfg = self.platform, self.config
+        return StepConsts(
+            base_mbps=p.base_mbps, req_mb=p.req_mb,
+            hop_counts=self._hop_counts, inc=self._inc,
+            own_demand=p.model.own_demand, link_bw=p.model.noc.link_bw,
+            max_slow=p.model.noc.max_slowdown,
+            hop_latency=p.model.noc.hop_latency,
+            noc_power_share=cfg.noc_power_share, dt=dt,
+            max_queue=cfg.max_queue,
+            dynamic_contention=cfg.dynamic_contention)
+
+    # ---------------------------------------------------------------- run
+    def run(self, trace: Trace) -> BatchSimResult:
+        if self.backend == "jax":
+            return self._run_jax(trace)
+        return self._run_numpy(trace)
+
+    def _run_numpy(self, trace: Trace) -> BatchSimResult:
+        p, cfg = self.platform, self.config
+        B, A, T, dt = p.n_designs, p.n_tiles, trace.ticks, trace.dt
+        assert trace.n_dests == A, (trace.n_dests, A)
+        arrivals = trace.arrivals
+
+        if self.controller is not None:
+            assert self.controller.n_designs == B
+            self.controller.begin_run()
+            rates = self.controller.live_rates()
+            swaps0 = self.controller.swaps.copy()
+        else:
+            rates = p.rates
+            swaps0 = np.zeros(B, dtype=np.int64)
+        svc = self._service(rates)
+
+        st = TickState.zeros((B, A))
+        consts = self.step_consts(dt)
+        admitted_hist = np.zeros((T, B, A))
+        served_hist = np.zeros((T, B, A))
+        win_busy = np.zeros((B, A))
+        win_served = np.zeros(B)
+        win_ticks = 0
+        ctl_busy = np.zeros((B, A))
+        ctl_ticks = 0
+
+        telem = BatchTelemetry(
+            TelemetrySchema(islands=p.islands.names(), tiles=p.names),
+            B, capacity=cfg.telemetry_capacity)
+
+        wall0 = time.perf_counter()
+        for t_i in range(T):
+            out = tick_step(st, arrivals[t_i], svc, consts)
+            admitted_hist[t_i] = out.admitted
+            served_hist[t_i] = out.served
+
+            win_busy += st.busy
+            win_served += out.served.sum(axis=-1)
+            win_ticks += 1
+            ctl_busy += st.busy
+            ctl_ticks += 1
+
+            if cfg.telemetry_interval and (t_i + 1) % cfg.telemetry_interval == 0:
+                cap_rps_now = out.cap_tick / dt
+                telem.record(
+                    tick=t_i, f_noc=svc["f_noc"], island_rates=rates,
+                    queue_depth=st.queue, busy=win_busy / win_ticks,
+                    throughput_rps=win_served / (win_ticks * dt),
+                    power_w=out.tile_power + out.noc_power,
+                    link_util_max=out.rho.max(axis=-1, initial=0.0),
+                    link_util_mean=out.rho.mean(axis=-1),
+                    latency_est_s=(st.queue.sum(axis=-1)
+                                   / np.maximum(cap_rps_now.sum(axis=-1),
+                                                1e-9)))
+                win_busy = np.zeros((B, A))
+                win_served = np.zeros(B)
+                win_ticks = 0
+
+            if (self.controller is not None and cfg.control_interval
+                    and (t_i + 1) % cfg.control_interval == 0):
+                t_wire_now = svc["t_wire"] * out.dyn
+                new_rates = self.controller.step(
+                    tick=t_i,
+                    busy=ctl_busy / max(ctl_ticks, 1),
+                    boundness=t_wire_now / (self._t_comp_ref + t_wire_now),
+                    pkts_in=st.pkts_in, pkts_out=st.pkts_out,
+                    rtt=st.rtt_acc,
+                    queue_ticks=st.queue / np.maximum(out.cap_tick, 1e-12))
+                ctl_busy = np.zeros((B, A))
+                ctl_ticks = 0
+                if new_rates is not None:
+                    rates = new_rates
+                    svc = self._service(rates)
+                    telem.event(
+                        t_i, "dfs_commit",
+                        designs=np.nonzero(
+                            self.controller.last_committed)[0].tolist())
+        elapsed = time.perf_counter() - wall0
+
+        self.last_state = st
+        self.last_histories = (admitted_hist, served_hist)
+        return self._result(trace, admitted_hist, served_hist,
+                            completed=served_hist.sum(axis=(0, 2)),
+                            dropped=np.asarray(st.dropped, dtype=np.float64),
+                            residual=st.queue.sum(axis=-1),
+                            energy=np.asarray(st.energy, dtype=np.float64),
+                            swaps=(self.controller.swaps - swaps0
+                                   if self.controller is not None
+                                   else np.zeros(B, dtype=np.int64)),
+                            elapsed=elapsed, backend="numpy", telem=telem)
+
+    def _result(self, trace, admitted_hist, served_hist, *, completed,
+                dropped, residual, energy, swaps, elapsed, backend,
+                telem) -> BatchSimResult:
+        B, T, dt = self.platform.n_designs, trace.ticks, trace.dt
+        p50 = np.empty(B)
+        p99 = np.empty(B)
+        for b in range(B):
+            p50[b], p99[b] = latency_percentiles(
+                admitted_hist[:, b], served_hist[:, b], dt)
+        sim_seconds = T * dt
+        return BatchSimResult(
+            n_designs=B, ticks=T, dt=dt,
+            offered=float(trace.arrivals.sum()),
+            completed=completed, dropped=dropped, residual=residual,
+            throughput_rps=(completed / sim_seconds if sim_seconds
+                            else np.zeros(B)),
+            p50_latency_s=p50, p99_latency_s=p99, energy_j=energy,
+            energy_per_request_j=energy / np.maximum(completed, 1e-9),
+            mean_power_w=(energy / sim_seconds if sim_seconds
+                          else np.zeros(B)),
+            swaps=np.asarray(swaps, dtype=np.int64),
+            elapsed_wall_s=elapsed, backend=backend, telemetry=telem)
+
+    # ------------------------------------------------------------- jax
+    def _control_plan(self):
+        """Digest the (optional) controller into static arrays/params the
+        traced scan can close over.  Supported in the jax backend: no
+        controller, guard-only, and the vectorized membound/PID policies."""
+        ctl = self.controller
+        if ctl is None:
+            return {"kind": "none"}
+        from repro.core.dfs import BatchMemoryBoundPolicy, BatchPIDRatePolicy
+        topo = ctl.topo
+        names = np.asarray(topo.names)
+        plan = {
+            "topo": topo,
+            "guard": ctl.queue_guard_ticks,
+            "guard_release": ctl.guard_release_ticks,
+            "guard_rate": ctl.guard_rate,
+        }
+        if ctl.policy is None:
+            plan["kind"] = "guard"
+        elif isinstance(ctl.policy, BatchMemoryBoundPolicy):
+            plan["kind"] = "membound"
+            plan["threshold"] = ctl.policy.threshold
+            plan["low_rate"] = ctl.policy.low_rate
+            plan["skip"] = (topo.fixed | (topo.counts == 0)
+                            | (names == "noc_mem"))
+        elif isinstance(ctl.policy, BatchPIDRatePolicy):
+            pol = ctl.policy
+            plan["kind"] = "pid"
+            plan.update(target=pol.target, kp=pol.kp, ki=pol.ki, kd=pol.kd,
+                        min_rate=pol.min_rate,
+                        integral_clamp=pol.integral_clamp)
+            plan["skip"] = (topo.fixed | (topo.counts == 0)
+                            | np.isin(names, pol.skip))
+        else:
+            raise NotImplementedError(
+                "jax backend supports controller=None, guard-only, "
+                "BatchMemoryBoundPolicy or BatchPIDRatePolicy; got "
+                f"{type(ctl.policy).__name__}")
+        return plan
+
+    def _run_jax(self, trace: Trace) -> BatchSimResult:
+        import jax
+        import jax.numpy as jnp
+        from jax import lax
+        from repro.core.perfmodel import P_DYN_W, P_STATIC_W
+
+        p, cfg = self.platform, self.config
+        B, A, T, dt = p.n_designs, p.n_tiles, trace.ticks, trace.dt
+        assert trace.n_dests == A, (trace.n_dests, A)
+        m = p.model
+        plan = self._control_plan()
+        kind = plan["kind"]
+        ctl = self.controller
+        ci = cfg.control_interval if (ctl is not None
+                                      and cfg.control_interval) else 0
+        is_ctl = np.zeros(T, dtype=bool)
+        if ci:
+            is_ctl[ci - 1::ci] = True
+
+        # ----- static closures (float dtype follows jax's x64 setting)
+        inc = jnp.asarray(self._inc)
+        hop_counts = jnp.asarray(np.asarray(self._hop_counts, float))
+        base_mbps = jnp.asarray(p.base_mbps)
+        req_mb = jnp.asarray(p.req_mb)
+        w = jnp.asarray(p.wire_share)
+        k = jnp.asarray(p.k)
+        t_comp_ref = jnp.asarray(self._t_comp_ref)
+        f_tg = jnp.asarray(p.f_tg)
+        island_of_tile = jnp.asarray(self._island_of_tile)
+        noc_idx = self._noc_island
+        own = m.own_demand
+        tgd = m.tg_demand
+        link_bw = m.noc.link_bw
+        max_slow = m.noc.max_slowdown
+        hop_lat = m.noc.hop_latency
+        hopf = 1.0 + m.hop_latency_share * hop_counts
+        hopf0 = 1.0 + m.hop_latency_share * m._ref_hops()
+        t_ref = (1.0 - w) + w * max(1.0, own) * hopf0
+        n_tg = p.n_tg
+        dyn_on = cfg.dynamic_contention
+        max_q = cfg.max_queue
+
+        if kind != "none":
+            topo = plan["topo"]
+            membership = jnp.asarray(topo.membership)           # (I, A)
+            counts_safe = jnp.asarray(
+                np.where(topo.counts > 0, topo.counts, 1.0))
+            fixed = jnp.asarray(topo.fixed)
+            levels = jnp.asarray(topo.ladder_levels)            # (I, Lmax)
+            skip = jnp.asarray(plan.get(
+                "skip", np.ones(len(topo.names), dtype=bool)))
+
+        def voltage2(f):
+            v = 0.7 + 0.3 * f
+            return v * v
+
+        def service(rates):
+            f_tile = rates[:, island_of_tile]                   # (B, A)
+            f_noc = (rates[:, noc_idx] if noc_idx >= 0
+                     else jnp.ones(rates.shape[0]))
+            fa = jnp.maximum(f_tile, 1e-3)
+            fn = jnp.maximum(f_noc, 1e-3)[:, None]
+            load = own + tgd * f_tg[:, None] * n_tg
+            slow = jnp.maximum(1.0, load / (link_bw * fn))
+            t_comp = (1.0 - w) / (k * fa)
+            t_wire = w * slow * hopf / fn
+            return t_comp, t_wire, f_tile, f_noc
+
+        def step(carry, xs):
+            arr_t, ctl_flag = xs
+            (queue, busy, rtt, rates, guard, pid_i, pid_prev, pid_has,
+             ctl_busy, dropped, energy, swaps) = carry
+            t_comp, t_wire, f_tile, f_noc = service(rates)
+
+            q = queue + arr_t
+            adm = jnp.broadcast_to(arr_t, q.shape)
+            if max_q != float("inf"):
+                over = jnp.maximum(q - max_q, 0.0)
+                q = q - over
+                adm = adm - over
+                dropped = dropped + over.sum(axis=-1)
+            if dyn_on:
+                loads = jnp.einsum("ba,bal->bl", own * busy, inc)
+                rho = ((inc * loads[:, None, :]).max(axis=-1)
+                       / (link_bw * f_noc[:, None]))
+                r = jnp.minimum(rho, 0.999)
+                dyn = jnp.minimum(1.0 + r / (2.0 * (1.0 - r)), max_slow)
+            else:
+                dyn = jnp.ones_like(q)
+            cap = (base_mbps * t_ref / (t_comp + t_wire * dyn)
+                   / req_mb) * dt
+            served = jnp.minimum(q, cap)
+            queue = q - served
+            busy = served / cap
+            rtt = rtt + hop_counts * dyn * hop_lat
+
+            tile_power = jnp.sum(
+                P_STATIC_W + P_DYN_W * f_tile * voltage2(f_tile) * busy,
+                axis=-1)
+            noc_power = cfg.noc_power_share * (
+                P_STATIC_W + P_DYN_W * f_noc * voltage2(f_noc))
+            energy = energy + (tile_power + noc_power) * dt
+            ctl_busy = ctl_busy + busy
+
+            if kind != "none":
+                util = ctl_busy / max(ci, 1)                    # (B, A)
+                util_i = (util @ membership.T) / counts_safe    # (B, I)
+                t_wire_now = t_wire * dyn
+                bound = t_wire_now / (t_comp_ref + t_wire_now)
+                bound_i = (bound @ membership.T) / counts_safe
+                qt = queue / jnp.maximum(cap, 1e-12)
+                qt_i = jnp.where(membership[None, :, :] > 0,
+                                 qt[:, None, :], -jnp.inf).max(axis=-1)
+                qt_i = jnp.where(jnp.asarray(topo.counts > 0), qt_i, 0.0)
+
+                valid = jnp.zeros(rates.shape, dtype=bool)
+                req = rates
+                if kind == "membound":
+                    req = jnp.where(bound_i >= plan["threshold"],
+                                    plan["low_rate"], 1.0)
+                    valid = ~skip[None, :] & jnp.ones_like(valid)
+                elif kind == "pid":
+                    err = jnp.where(skip[None, :], 0.0,
+                                    util_i - plan["target"])
+                    i_term = jnp.clip(pid_i + err,
+                                      -plan["integral_clamp"],
+                                      plan["integral_clamp"])
+                    d_term = jnp.where(pid_has, err - pid_prev, 0.0)
+                    new = (rates + plan["kp"] * err + plan["ki"] * i_term
+                           + plan["kd"] * d_term)
+                    req = jnp.clip(new, plan["min_rate"], 1.0)
+                    valid = ~skip[None, :] & jnp.ones_like(valid)
+                    pid_i = jnp.where(ctl_flag, i_term, pid_i)
+                    pid_prev = jnp.where(ctl_flag, err, pid_prev)
+                    pid_has = pid_has | ctl_flag
+
+                if plan["guard"] is not None:
+                    latch = jnp.where(
+                        qt_i > plan["guard"], True,
+                        jnp.where(qt_i < plan["guard_release"], False,
+                                  guard))
+                    latch = latch & ~fixed[None, :]
+                    req = jnp.where(latch, plan["guard_rate"], req)
+                    valid = valid | latch
+                    guard = jnp.where(ctl_flag, latch, guard)
+
+                d = jnp.abs(levels[None, :, :] - req[:, :, None])
+                idx = jnp.argmin(d, axis=-1)
+                qz = jnp.take_along_axis(
+                    jnp.broadcast_to(levels, (req.shape[0],) + levels.shape),
+                    idx[:, :, None], axis=-1)[:, :, 0]
+                changed = (valid & ~fixed[None, :] & (qz != rates)
+                           & ctl_flag)
+                rates = jnp.where(changed, qz, rates)
+                swaps = swaps + jnp.where(ctl_flag, changed.any(axis=-1),
+                                          False)
+            ctl_busy = jnp.where(ctl_flag, 0.0, ctl_busy)
+            carry = (queue, busy, rtt, rates, guard, pid_i, pid_prev,
+                     pid_has, ctl_busy, dropped, energy, swaps)
+            return carry, (adm, served)
+
+        def run_scan(arrivals, rates0, guard0, pid_i0, pid_prev0, pid_has0):
+            zBA = jnp.zeros((B, A))
+            carry0 = (zBA, zBA, zBA, rates0, guard0, pid_i0, pid_prev0,
+                      pid_has0, zBA, jnp.zeros(B), jnp.zeros(B),
+                      jnp.zeros(B, dtype=jnp.int32))
+            return lax.scan(step, carry0, (arrivals, jnp.asarray(is_ctl)))
+
+        # cache the jitted scan per (T, ci): repeated runs of one engine
+        # (e.g. repeated closed_loop_score calls) retrace only on a trace
+        # length / control cadence change; XLA reuses the compiled
+        # executable for matching shapes
+        if self._jax_fn is None or self._jax_fn[0] != (T, ci):
+            self._jax_fn = ((T, ci), jax.jit(run_scan))
+        run_scan = self._jax_fn[1]
+
+        if ctl is not None:
+            ctl.begin_run()
+            rates0 = ctl.live_rates()
+            guard0 = ctl._guard_active
+            swaps_before = ctl.swaps.copy()
+        else:
+            rates0 = p.rates
+            guard0 = np.zeros((B, len(p.islands.names())), dtype=bool)
+        I = rates0.shape[1]
+        pid_i0 = np.zeros((B, I))
+        pid_prev0 = np.zeros((B, I))
+        pid_has0 = np.zeros((), dtype=bool)
+        if kind == "pid" and ctl.policy._integral is not None:
+            pid_i0 = np.asarray(ctl.policy._integral)
+            pid_prev0 = np.asarray(ctl.policy._prev_err)
+            pid_has0 = np.ones((), dtype=bool)
+
+        wall0 = time.perf_counter()
+        carryF, (admitted, served) = run_scan(
+            jnp.asarray(trace.arrivals), jnp.asarray(rates0),
+            jnp.asarray(guard0), jnp.asarray(pid_i0),
+            jnp.asarray(pid_prev0), jnp.asarray(pid_has0))
+        (queueF, busyF, rttF, ratesF, guardF, pid_iF, pid_prevF, pid_hasF,
+         _ctlb, droppedF, energyF, swapsF) = [np.asarray(x) for x in carryF]
+        admitted = np.asarray(admitted, dtype=np.float64)
+        served = np.asarray(served, dtype=np.float64)
+        elapsed = time.perf_counter() - wall0
+
+        if ctl is not None:             # write evolved state back
+            ctl.rates = np.asarray(ratesF, dtype=np.float64)
+            ctl._guard_active = np.asarray(guardF, dtype=bool)
+            ctl.swaps = swaps_before + swapsF.astype(np.int64)
+            ctl.versions = ctl.versions + swapsF.astype(np.int64)
+            if kind == "pid":
+                ctl.policy._integral = np.asarray(pid_iF, dtype=np.float64)
+                ctl.policy._prev_err = np.asarray(pid_prevF,
+                                                  dtype=np.float64)
+        self.last_state = TickState(
+            queue=queueF.astype(np.float64), busy=busyF.astype(np.float64),
+            pkts_in=(admitted.sum(axis=0) * np.asarray(p.req_mb)
+                     * 1e6 / PKT_BYTES),
+            pkts_out=(served.sum(axis=0) * np.asarray(p.req_mb)
+                      * 1e6 / PKT_BYTES),
+            rtt_acc=rttF.astype(np.float64),
+            dropped=droppedF.astype(np.float64),
+            energy=energyF.astype(np.float64))
+        self.last_histories = (admitted, served)
+        return self._result(
+            trace, admitted, served,
+            completed=served.sum(axis=(0, 2)),
+            dropped=droppedF.astype(np.float64),
+            residual=queueF.astype(np.float64).sum(axis=-1),
+            energy=energyF.astype(np.float64),
+            swaps=swapsF.astype(np.int64), elapsed=elapsed,
+            backend="jax", telem=None)

@@ -151,6 +151,158 @@ class SimPlatform:
 
 
 # ---------------------------------------------------------------------------
+# The per-tick step, factored out so every engine shares ONE numeric core
+# ---------------------------------------------------------------------------
+#
+# The sequential engine advances (A,)-shaped state; the batched engine
+# (sim/batch.py) advances (B, A)-shaped state — same expressions, same
+# reduction axes (always the trailing ones), so a batch row computes
+# bit-for-bit the floats the sequential engine computes (numpy elementwise
+# ops and last-axis reductions are shape-independent; the link-load
+# contraction uses einsum, whose accumulation order over the contracted
+# axis is sequential for both layouts, unlike BLAS matvec vs matmul).
+
+
+@dataclass
+class TickState:
+    """Mutable fluid-queue + counter state, leading batch axes allowed.
+
+    All per-tile arrays are ``(..., A)``; ``dropped``/``energy`` reduce the
+    tile axis away and are ``(...)`` (0-d for the sequential engine).
+    """
+    queue: np.ndarray
+    busy: np.ndarray
+    pkts_in: np.ndarray         # accumulate (monitor semantics)
+    pkts_out: np.ndarray        # accumulate
+    rtt_acc: np.ndarray         # accumulate
+    dropped: np.ndarray
+    energy: np.ndarray
+
+    @classmethod
+    def zeros(cls, shape: Tuple[int, ...]) -> "TickState":
+        lead = shape[:-1]
+        return cls(queue=np.zeros(shape), busy=np.zeros(shape),
+                   pkts_in=np.zeros(shape), pkts_out=np.zeros(shape),
+                   rtt_acc=np.zeros(shape), dropped=np.zeros(lead),
+                   energy=np.zeros(lead))
+
+
+@dataclass(frozen=True)
+class StepConsts:
+    """Per-run constants of :func:`tick_step` (platform + config digest)."""
+    base_mbps: np.ndarray       # (..., A)
+    req_mb: np.ndarray          # (..., A)
+    hop_counts: np.ndarray      # (..., A)
+    inc: np.ndarray             # (..., A, L) route->link incidence
+    own_demand: float
+    link_bw: float
+    max_slow: float
+    hop_latency: float
+    noc_power_share: float
+    dt: float
+    max_queue: float
+    dynamic_contention: bool
+
+
+@dataclass(frozen=True)
+class TickOut:
+    """Per-tick outputs the surrounding loop needs (histories, telemetry,
+    controller inputs); the persistent state lives in :class:`TickState`."""
+    admitted: np.ndarray        # (..., A)
+    served: np.ndarray          # (..., A)
+    cap_tick: np.ndarray        # (..., A) requests servable this tick
+    rho: np.ndarray             # (..., A) worst-link utilization per route
+    dyn: np.ndarray             # (..., A) contention slowdown on the wire
+    tile_power: np.ndarray      # (...)
+    noc_power: np.ndarray       # (...)
+
+
+def tick_step(st: TickState, arr_t: np.ndarray, svc: Dict[str, np.ndarray],
+              c: StepConsts) -> TickOut:
+    """Advance the fluid queues by one tick (mutates ``st`` in place).
+
+    ``svc`` is the cached service-term dict (``t_comp``/``t_wire``/
+    ``t_ref`` shaped ``(..., A)``, ``f_tile`` ``(..., A)``, ``f_noc``
+    scalar or ``(...)``) — recomputed by the caller only when a DFS commit
+    changes island rates.
+    """
+    q = st.queue + arr_t
+    adm = arr_t
+    if c.max_queue != float("inf"):
+        over = np.maximum(q - c.max_queue, 0.0)
+        q = q - over
+        adm = adm - over
+        st.dropped += over.sum(axis=-1)
+    f_noc = np.asarray(svc["f_noc"], dtype=np.float64)
+    if c.dynamic_contention:
+        # live accel->MEM flows onto links: one contraction + masked max;
+        # link capacity is f_noc-scaled like the static kernel's
+        # saturation term (C2: island rate scales links)
+        loads = np.einsum("...a,...al->...l", c.own_demand * st.busy, c.inc)
+        rho = ((c.inc * loads[..., None, :]).max(axis=-1)
+               / (c.link_bw * f_noc[..., None]))
+        dyn = contention_slowdown(rho, c.max_slow)
+    else:
+        rho = np.zeros_like(q)
+        dyn = np.ones_like(q)
+    cap_tick = (c.base_mbps * svc["t_ref"]
+                / (svc["t_comp"] + svc["t_wire"] * dyn)
+                / c.req_mb) * c.dt
+    served = np.minimum(q, cap_tick)
+    st.queue = q - served
+    st.busy = served / cap_tick
+
+    # counters: pkts accumulate; exec_time (busy) auto-resets
+    st.pkts_in += adm * c.req_mb * 1e6 / PKT_BYTES
+    st.pkts_out += served * c.req_mb * 1e6 / PKT_BYTES
+    st.rtt_acc += c.hop_counts * dyn * c.hop_latency
+
+    tile_power = np.sum(chip_power(svc["f_tile"], st.busy), axis=-1)
+    noc_power = c.noc_power_share * chip_power(f_noc, 1.0)
+    st.energy += (tile_power + noc_power) * c.dt
+    return TickOut(admitted=adm, served=served, cap_tick=cap_tick, rho=rho,
+                   dyn=dyn, tile_power=tile_power, noc_power=noc_power)
+
+
+def percentile_samples(admitted: np.ndarray, served: np.ndarray,
+                       dt: float) -> Tuple[np.ndarray, np.ndarray]:
+    """(latency values, request weights) of one design's run, from the
+    cumulative arrival/service curves of its FIFO fluid queues (tick
+    granularity): the mid-rank of every tick's admitted batch is looked up
+    in the cumulative service curve with one ``searchsorted`` per tile."""
+    T, A = admitted.shape
+    ticks = np.arange(T, dtype=np.float64)
+    vals: List[np.ndarray] = []
+    wts: List[np.ndarray] = []
+    for a in range(A):
+        ca = np.cumsum(admitted[:, a])
+        cs = np.cumsum(served[:, a])
+        n = admitted[:, a]
+        mid = ca - 0.5 * n          # mid-rank of each tick's batch
+        depart = np.searchsorted(cs, mid, side="left")
+        done = (depart < T) & (n > 0)
+        lat = (depart - ticks + 0.5) * dt
+        vals.append(lat[done])
+        wts.append(n[done])
+    if not vals:
+        return np.empty(0), np.empty(0)
+    return np.concatenate(vals), np.concatenate(wts)
+
+
+def latency_percentiles(admitted: np.ndarray, served: np.ndarray,
+                        dt: float) -> Tuple[float, float]:
+    """Request-weighted p50/p99 sojourn time for one design's (T, A)
+    admitted/served histories."""
+    if admitted.shape[0] == 0:
+        return float("nan"), float("nan")
+    v, w = percentile_samples(admitted, served, dt)
+    if v.size == 0 or w.sum() <= 0:
+        return float("nan"), float("nan")
+    p50, p99 = weighted_percentiles(v, w, (50.0, 99.0))
+    return float(p50), float(p99)
+
+
+# ---------------------------------------------------------------------------
 # Engine
 # ---------------------------------------------------------------------------
 
@@ -212,6 +364,8 @@ class SimEngine:
         self.platform = platform
         self.config = config
         self.controller = controller    # a control.ControllerHarness or None
+        self.last_state: Optional[TickState] = None          # set by run()
+        self.last_histories = None      # (admitted, served) (T, A) arrays
         m = platform.model
         A = platform.n_tiles
         # static route->link incidence of each tile's stream to MEM:
@@ -270,6 +424,20 @@ class SimEngine:
             svc["t_comp"] + svc["t_wire"])
         return thr / self.platform.req_mb
 
+    def step_consts(self, dt: float) -> StepConsts:
+        """The :func:`tick_step` constants of this platform + config for a
+        trace with tick length ``dt`` seconds."""
+        p, cfg = self.platform, self.config
+        return StepConsts(
+            base_mbps=p.base_mbps, req_mb=p.req_mb,
+            hop_counts=self._hop_counts, inc=self._inc,
+            own_demand=p.model.own_demand, link_bw=p.model.noc.link_bw,
+            max_slow=p.model.noc.max_slowdown,
+            hop_latency=p.model.noc.hop_latency,
+            noc_power_share=cfg.noc_power_share, dt=dt,
+            max_queue=cfg.max_queue,
+            dynamic_contention=cfg.dynamic_contention)
+
     # ---------------------------------------------------------------- run
     def run(self, trace: Trace) -> SimResult:
         p, cfg = self.platform, self.config
@@ -284,16 +452,10 @@ class SimEngine:
             live = p.islands
         svc = self._service(live)
 
-        queue = np.zeros(A)
-        busy = np.zeros(A)
+        st = TickState.zeros((A,))
+        consts = self.step_consts(dt)
         admitted_hist = np.zeros((T, A))
         served_hist = np.zeros((T, A))
-        dropped = 0.0
-        energy = 0.0
-        # vectorized monitor counters (core/monitor.py semantics)
-        pkts_in = np.zeros(A)           # accumulate
-        pkts_out = np.zeros(A)          # accumulate
-        rtt_acc = np.zeros(A)           # accumulate
         # controller/telemetry window accumulators
         win_busy = np.zeros(A)
         win_served = 0.0
@@ -307,68 +469,30 @@ class SimEngine:
             TelemetrySchema(islands=live.names(), tiles=p.names),
             capacity=cfg.telemetry_capacity)
 
-        own_demand = p.model.own_demand
-        link_bw = p.model.noc.link_bw
-        max_slow = p.model.noc.max_slowdown
-        inc = self._inc
-        dyn = np.ones(A)
-        rho = np.zeros(A)
-
         wall0 = time.perf_counter()
         for t_i in range(T):
-            q = queue + arrivals[t_i]
-            adm = arrivals[t_i]
-            if cfg.max_queue != float("inf"):
-                over = np.maximum(q - cfg.max_queue, 0.0)
-                q -= over
-                adm = adm - over
-                dropped += float(over.sum())
-            admitted_hist[t_i] = adm
+            out = tick_step(st, arrivals[t_i], svc, consts)
+            admitted_hist[t_i] = out.admitted
+            served_hist[t_i] = out.served
 
-            if cfg.dynamic_contention:
-                # live accel->MEM flows onto links: one matvec + masked
-                # max; link capacity is f_noc-scaled like the static
-                # kernel's saturation term (C2: island rate scales links)
-                loads = (own_demand * busy) @ inc
-                rho = (inc * loads).max(axis=1) / (link_bw * svc["f_noc"])
-                dyn = contention_slowdown(rho, max_slow)
-            cap_tick = (p.base_mbps * svc["t_ref"]
-                        / (svc["t_comp"] + svc["t_wire"] * dyn)
-                        / p.req_mb) * dt
-            served = np.minimum(q, cap_tick)
-            queue = q - served
-            busy = served / cap_tick
-            served_hist[t_i] = served
-
-            # counters: pkts accumulate; exec_time (busy) auto-resets
-            pk_in = adm * p.req_mb * 1e6 / PKT_BYTES
-            pk_out = served * p.req_mb * 1e6 / PKT_BYTES
-            pkts_in += pk_in
-            pkts_out += pk_out
-            rtt_acc += self._hop_counts * dyn * p.model.noc.hop_latency
-
-            tile_power = float(np.sum(chip_power(svc["f_tile"], busy)))
-            noc_power = cfg.noc_power_share * chip_power(svc["f_noc"], 1.0)
-            energy += (tile_power + noc_power) * dt
-
-            win_busy += busy
-            win_served += float(served.sum())
+            win_busy += st.busy
+            win_served += float(out.served.sum())
             win_ticks += 1
-            ctl_busy += busy
+            ctl_busy += st.busy
             ctl_ticks += 1
 
             if cfg.telemetry_interval and (t_i + 1) % cfg.telemetry_interval == 0:
-                cap_rps_now = cap_tick / dt
+                cap_rps_now = out.cap_tick / dt
                 telem.record(
                     tick=t_i, f_noc=svc["f_noc"],
                     island_rates=svc["island_rates"],
-                    queue_depth=queue, busy=win_busy / win_ticks,
+                    queue_depth=st.queue, busy=win_busy / win_ticks,
                     throughput_rps=win_served / (win_ticks * dt),
-                    power_w=tile_power + noc_power,
-                    link_util_max=float(rho.max(initial=0.0)),
-                    link_util_mean=float(rho.mean()) if A else 0.0,
+                    power_w=float(out.tile_power + out.noc_power),
+                    link_util_max=float(out.rho.max(initial=0.0)),
+                    link_util_mean=float(out.rho.mean()) if A else 0.0,
                     latency_est_s=float(
-                        np.sum(queue) / max(np.sum(cap_rps_now), 1e-9)))
+                        np.sum(st.queue) / max(np.sum(cap_rps_now), 1e-9)))
                 win_busy = np.zeros(A)
                 win_served = 0.0
                 win_ticks = 0
@@ -380,14 +504,15 @@ class SimEngine:
                 # "is this tile's throughput set by the NoC/MEM path?",
                 # and evaluating it at the currently-derated rate would
                 # make the classification chase the actuator (flapping).
-                t_wire_now = svc["t_wire"] * dyn
+                t_wire_now = svc["t_wire"] * out.dyn
                 new_cfg = self.controller.step(
                     tick=t_i,
                     names=p.names,
                     busy=ctl_busy / max(ctl_ticks, 1),
                     boundness=t_wire_now / (self._t_comp_ref + t_wire_now),
-                    pkts_in=pkts_in, pkts_out=pkts_out, rtt=rtt_acc,
-                    queue_ticks=queue / np.maximum(cap_tick, 1e-12))
+                    pkts_in=st.pkts_in, pkts_out=st.pkts_out,
+                    rtt=st.rtt_acc,
+                    queue_ticks=st.queue / np.maximum(out.cap_tick, 1e-12))
                 ctl_busy = np.zeros(A)
                 ctl_ticks = 0
                 if new_cfg is not None:
@@ -398,18 +523,22 @@ class SimEngine:
                                        for i in new_cfg.islands})
         elapsed = time.perf_counter() - wall0
 
+        # kept for post-run analysis and the differential test suite
+        self.last_state = st
+        self.last_histories = (admitted_hist, served_hist)
+
         completed = float(served_hist.sum())
         offered = float(arrivals.sum())
-        p50, p99 = self._latency_percentiles(admitted_hist, served_hist, dt)
+        p50, p99 = latency_percentiles(admitted_hist, served_hist, dt)
         sim_seconds = T * dt
         return SimResult(
             ticks=T, dt=dt, offered=offered, completed=completed,
-            dropped=dropped, residual=float(queue.sum()),
+            dropped=float(st.dropped), residual=float(st.queue.sum()),
             throughput_rps=completed / sim_seconds if sim_seconds else 0.0,
             p50_latency_s=p50, p99_latency_s=p99,
-            energy_j=energy,
-            energy_per_request_j=energy / max(completed, 1e-9),
-            mean_power_w=energy / sim_seconds if sim_seconds else 0.0,
+            energy_j=float(st.energy),
+            energy_per_request_j=float(st.energy) / max(completed, 1e-9),
+            mean_power_w=float(st.energy) / sim_seconds if sim_seconds else 0.0,
             swaps=(self.controller.actuator.swaps - swaps0
                    if self.controller is not None else 0),
             elapsed_wall_s=elapsed, telemetry=telem)
@@ -417,29 +546,4 @@ class SimEngine:
     @staticmethod
     def _latency_percentiles(admitted: np.ndarray, served: np.ndarray,
                              dt: float) -> Tuple[float, float]:
-        """Request-weighted p50/p99 sojourn time from the cumulative
-        arrival/service curves (FIFO fluid queues, tick granularity)."""
-        T, A = admitted.shape
-        if T == 0:
-            return float("nan"), float("nan")
-        ticks = np.arange(T, dtype=np.float64)
-        vals: List[np.ndarray] = []
-        wts: List[np.ndarray] = []
-        for a in range(A):
-            ca = np.cumsum(admitted[:, a])
-            cs = np.cumsum(served[:, a])
-            n = admitted[:, a]
-            mid = ca - 0.5 * n          # mid-rank of each tick's batch
-            depart = np.searchsorted(cs, mid, side="left")
-            done = (depart < T) & (n > 0)
-            lat = (depart - ticks + 0.5) * dt
-            vals.append(lat[done])
-            wts.append(n[done])
-        if not vals:
-            return float("nan"), float("nan")
-        v = np.concatenate(vals)
-        w = np.concatenate(wts)
-        if v.size == 0 or w.sum() <= 0:
-            return float("nan"), float("nan")
-        p50, p99 = weighted_percentiles(v, w, (50.0, 99.0))
-        return float(p50), float(p99)
+        return latency_percentiles(admitted, served, dt)

@@ -17,15 +17,20 @@ import numpy as np
 
 
 class RingBuffer:
-    """Fixed-capacity append-only buffer of (width,) float rows.
+    """Fixed-capacity append-only buffer of fixed-shape float rows.
 
-    ``array()`` returns rows in chronological order; once more than
-    ``capacity`` rows have been appended the oldest are overwritten.
+    ``width`` is an int for the classic ``(width,)`` rows, or a shape
+    tuple — the batched telemetry stores ``(B, width)`` rows, one slice
+    per design point.  ``array()`` returns rows in chronological order;
+    once more than ``capacity`` rows have been appended the oldest are
+    overwritten.
     """
 
-    def __init__(self, capacity: int, width: int = 1):
-        assert capacity > 0 and width > 0
-        self._buf = np.zeros((capacity, width), dtype=np.float64)
+    def __init__(self, capacity: int, width=1):
+        row_shape = (int(width),) if np.isscalar(width) else tuple(
+            int(w) for w in width)
+        assert capacity > 0 and all(w > 0 for w in row_shape)
+        self._buf = np.zeros((capacity, *row_shape), dtype=np.float64)
         self._n = 0                     # total rows ever appended
 
     @property
@@ -34,7 +39,11 @@ class RingBuffer:
 
     @property
     def width(self) -> int:
-        return self._buf.shape[1]
+        return self._buf.shape[-1]
+
+    @property
+    def row_shape(self) -> Tuple[int, ...]:
+        return self._buf.shape[1:]
 
     @property
     def total_appended(self) -> int:
@@ -138,6 +147,103 @@ class Telemetry:
                 f"(of {self.scalars.total_appended} recorded): "
                 f"thr mean {thr.mean():,.0f} rps, power mean {pw.mean():.0f} W, "
                 f"worst link util p99 {np.percentile(lu, 99):.2f}, "
+                f"{len(self.events)} events")
+
+
+class BatchTelemetry:
+    """Per-design flight recorder for the batched co-sim engine.
+
+    Mirrors :class:`Telemetry`, but every channel carries a leading
+    design axis: one ``record()`` appends a ``(B, ...)`` row per ring, so
+    B design points share one set of fixed-capacity buffers instead of B
+    Python-object recorders.  ``design(b)`` slices out one design's view
+    with the same array layout the sequential :class:`Telemetry` exposes
+    (the B=1 differential tests compare them elementwise).
+    """
+
+    SCALARS = Telemetry.SCALARS
+
+    def __init__(self, schema: TelemetrySchema, n_designs: int, *,
+                 capacity: int = 4096):
+        assert n_designs > 0
+        self.schema = schema
+        self.n_designs = int(n_designs)
+        self.scalars = RingBuffer(capacity, (n_designs, len(self.SCALARS)))
+        self.island_rates = RingBuffer(capacity,
+                                       (n_designs, len(schema.islands)))
+        self.queue_depth = RingBuffer(capacity, (n_designs, len(schema.tiles)))
+        self.busy = RingBuffer(capacity, (n_designs, len(schema.tiles)))
+        self.events: List[Dict[str, object]] = []
+
+    def record(self, *, tick: int, f_noc, island_rates, queue_depth, busy,
+               throughput_rps, power_w, link_util_max, link_util_mean,
+               latency_est_s) -> None:
+        """One telemetry interval: scalar channels are (B,) arrays (or
+        scalars, broadcast), vector channels (B, I)/(B, A)."""
+        B = self.n_designs
+        row = np.empty((B, len(self.SCALARS)))
+        for i, ch in enumerate((tick, f_noc, throughput_rps, power_w,
+                                link_util_max, link_util_mean,
+                                latency_est_s)):
+            row[:, i] = ch
+        self.scalars.append(row)
+        self.island_rates.append(np.broadcast_to(
+            island_rates, self.island_rates.row_shape))
+        self.queue_depth.append(np.broadcast_to(
+            queue_depth, self.queue_depth.row_shape))
+        self.busy.append(np.broadcast_to(busy, self.busy.row_shape))
+
+    def event(self, tick: int, kind: str, **payload) -> None:
+        self.events.append({"tick": int(tick), "kind": kind, **payload})
+
+    # ---------------------------------------------------------- accessors
+    def series(self, name: str) -> np.ndarray:
+        """One scalar channel as a (rows, B) chronological array."""
+        return self.scalars.array()[..., self.SCALARS.index(name)]
+
+    def design(self, b: int) -> Dict[str, np.ndarray]:
+        """One design's recording, keyed like :meth:`Telemetry.to_dict`'s
+        array channels (chronological, design axis sliced away)."""
+        sc = self.scalars.array()[:, b, :]
+        return {
+            "scalars": {n: sc[:, i] for i, n in enumerate(self.SCALARS)},
+            "island_rates": self.island_rates.array()[:, b, :],
+            "queue_depth": self.queue_depth.array()[:, b, :],
+            "busy": self.busy.array()[:, b, :],
+        }
+
+    # ------------------------------------------------------------- export
+    def to_dict(self) -> Dict[str, object]:
+        sc = self.scalars.array()
+        return {
+            "schema": {"islands": list(self.schema.islands),
+                       "tiles": list(self.schema.tiles),
+                       "n_designs": self.n_designs},
+            "scalars": {n: sc[..., i].tolist()
+                        for i, n in enumerate(self.SCALARS)},
+            "island_rates": self.island_rates.array().tolist(),
+            "queue_depth": self.queue_depth.array().tolist(),
+            "busy": self.busy.array().tolist(),
+            "events": self.events,
+            "rows_recorded": self.scalars.total_appended,
+        }
+
+    def to_json(self, path: Optional[str] = None, *, indent: int = 2) -> str:
+        doc = json.dumps(self.to_dict(), indent=indent)
+        if path is not None:
+            with open(path, "w") as f:
+                f.write(doc + "\n")
+        return doc
+
+    def summary(self) -> str:
+        if len(self.scalars) == 0:
+            return "(no telemetry)"
+        thr = self.series("throughput_rps")
+        pw = self.series("power_w")
+        return (f"{len(self.scalars)} samples x {self.n_designs} designs "
+                f"(of {self.scalars.total_appended} recorded): "
+                f"thr mean {thr.mean():,.0f} rps, "
+                f"power mean {pw.mean():.0f} W, "
                 f"{len(self.events)} events")
 
 

@@ -14,6 +14,27 @@ import numpy as np  # noqa: E402
 import pytest  # noqa: E402
 
 
+def pytest_addoption(parser):
+    parser.addoption(
+        "--runslow", action="store_true", default=False,
+        help="run slow soak/scale tests (1M-request replay, B=512 batch)")
+
+
+def pytest_collection_modifyitems(config, items):
+    """`slow` tests are skipped unless opted in; every non-slow test gains
+    the `tier1` marker so `-m tier1` names the default fast suite."""
+    markexpr = config.getoption("-m") or ""
+    run_slow = config.getoption("--runslow") or "slow" in markexpr
+    skip_slow = pytest.mark.skip(
+        reason="slow soak: opt in with --runslow (or -m slow)")
+    for item in items:
+        if "slow" in item.keywords:
+            if not run_slow:
+                item.add_marker(skip_slow)
+        else:
+            item.add_marker(pytest.mark.tier1)
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)
