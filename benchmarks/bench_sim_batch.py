@@ -87,6 +87,61 @@ def bench_sim_batch():
     assert speedup >= 10.0, f"batched speedup {speedup:.1f}x < 10x"
     stats["acceptance_b512_speedup"] = speedup
 
+    # ---- per-island (independent) sweep through the batched engine ----
+    # The heterogeneous (B, I) rate plumbing must not regress the batched
+    # replay: guarded against this run's own shared-rate B=512 rate and
+    # against the previously recorded islands row (if any).
+    try:
+        with open(BENCH_JSON) as f:
+            prev_islands = json.load(f)["runs"][
+                "batch_numpy_islands_512"]["survivors_per_sec"]
+    except Exception:
+        prev_islands = None
+
+    mi = SoCPerfModel()
+    wls3 = [AccelWorkload("dfadd", 9.22, 0.9),
+            AccelWorkload("dfmul", 8.70, 1.1),
+            AccelWorkload("dfsin", 0.33, 60.0)]
+    ires = grid_sweep(mi, wls3, ks=(1, 2), acc_rates=(0.2, 0.6, 1.0),
+                      noc_rates=(0.5, 1.0), n_tg=2,
+                      island_rates="independent", chunk_points=50_000)
+    isurv = np.resize(ires.topk_indices(64), 512)
+    itrace = diurnal_trace(2000.0, TICKS, 3, dt=DT, depth=0.4, seed=5)
+
+    # micro-assert: tile->island lookups on the sim hot path are memoized
+    bplat = BatchSimPlatform.from_design_points(mi, ires, isurv,
+                                                req_mb=REQ_MB)
+    BatchSimEngine(bplat)   # engine assembly resolves tile->island maps
+    assert "_tile_index_cache" in bplat.islands.__dict__, \
+        "island_of memo not built during engine assembly"
+    t0 = time.perf_counter()
+    for _ in range(20_000):
+        for n in bplat.names:
+            bplat.islands.island_of(n)
+    lookup_ns = (time.perf_counter() - t0) / (20_000 * len(bplat.names)) * 1e9
+    assert lookup_ns < 5_000, f"island_of lookup {lookup_ns:.0f}ns"
+
+    t0 = time.perf_counter()
+    closed_loop_score(ires, itrace, model=mi, indices=isurv, req_mb=REQ_MB)
+    iwall = time.perf_counter() - t0
+    irate = 512 / iwall
+    shared_rate = stats["batch_numpy_512"]["survivors_per_sec"]
+    # A=3 tiles vs 2 -> ~1.5x work per design; 0.4x is the regression gate
+    assert irate >= 0.4 * shared_rate, \
+        f"per-island replay {irate:,.0f}/s < 0.4x shared {shared_rate:,.0f}/s"
+    if prev_islands is not None:
+        assert irate >= 0.3 * prev_islands, \
+            f"per-island replay regressed vs BENCH_sim_batch.json: " \
+            f"{irate:,.0f}/s vs {prev_islands:,.0f}/s"
+    stats["batch_numpy_islands_512"] = {
+        "designs": 512, "wall_seconds": iwall, "survivors_per_sec": irate,
+        "island_of_lookup_ns": lookup_ns,
+        "ratio_vs_shared_b512": irate / shared_rate}
+    rows.append(("sim_batch_numpy_islands_B512", iwall / 512 * 1e6,
+                 f"{irate:,.1f} survivors/s (per-island rates, "
+                 f"{irate / shared_rate:.2f}x shared-rate row, "
+                 f"island_of {lookup_ns:.0f}ns)"))
+
     # jax.lax.scan backend (compile once, report steady-state)
     try:
         idx = survivors[:512]

@@ -1,0 +1,68 @@
+"""jax surface-API compatibility shims.
+
+The baked-in toolchain pins jax 0.4.37, while parts of the codebase (and
+its distributed tests) target the newer mesh/shard_map surface.  Every
+version-sensitive call goes through this module so call sites stay on the
+modern spelling and run unchanged on either version:
+
+* :func:`set_mesh` — ambient-mesh context manager.  ``jax.set_mesh`` where
+  it exists; on 0.4.x the :class:`~jax.sharding.Mesh` object itself is the
+  context manager that installs the ambient mesh.
+* :func:`get_abstract_mesh` — the ambient mesh (or ``None``).  New jax
+  exposes ``jax.sharding.get_abstract_mesh``; 0.4.x keeps the ambient
+  physical mesh in ``thread_resources``.
+* :func:`shard_map` — accepts the new ``check_vma`` knob and translates it
+  to 0.4.x's ``check_rep``.
+* :func:`abstract_mesh` — ``AbstractMesh(axis_shapes, axis_names)`` on any
+  version (0.4.x takes a tuple of (name, size) pairs instead).
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+try:  # jax>=0.6 moved shard_map to jax.shard_map
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover - jax<0.6
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SM_PARAMS = inspect.signature(_shard_map).parameters
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh            # Mesh is itself a context manager on 0.4.x
+
+
+def get_abstract_mesh():
+    """The ambient mesh, or ``None`` when no mesh context is active."""
+    if hasattr(jax.sharding, "get_abstract_mesh"):
+        return jax.sharding.get_abstract_mesh()
+    from jax._src import mesh as mesh_lib                # 0.4.x fallback
+    env = getattr(mesh_lib, "thread_resources", None)
+    if env is None:                                      # pragma: no cover
+        return None
+    physical = env.env.physical_mesh
+    return None if physical.empty else physical
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=True, **kw):
+    """``jax.shard_map`` with the modern signature on every version."""
+    if "check_vma" in _SM_PARAMS:
+        kw["check_vma"] = check_vma
+    elif "check_rep" in _SM_PARAMS:
+        kw["check_rep"] = check_vma
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)
+
+
+def abstract_mesh(axis_shapes, axis_names):
+    """``jax.sharding.AbstractMesh`` with the modern two-argument form."""
+    from jax.sharding import AbstractMesh
+    try:
+        return AbstractMesh(tuple(axis_shapes), tuple(axis_names))
+    except TypeError:      # 0.4.x: one tuple of (name, size) pairs
+        return AbstractMesh(tuple(zip(axis_names, axis_shapes)))

@@ -174,8 +174,134 @@ def pareto_front(points: Sequence[DesignPoint]) -> List[DesignPoint]:
 # ---------------------------------------------------------------------------
 
 
+class _SweepIndexing:
+    """Index machinery shared by the one-shot and chunked sweep results.
+
+    Both carry the ordered ``axes`` (name, values) and the grid ``shape``;
+    flat point indices are C-ordered over ``shape``, so any flat index —
+    whether its objectives are stored densely (:class:`SweepResult`) or
+    only for tracked survivors (:class:`ChunkedSweepResult`) — maps back
+    to concrete axis values, per-island rate vectors and
+    :class:`DesignPoint` objects the same way.  Subclasses provide
+    ``axes``/``shape``/``workloads``/``n_tg`` plus
+    :meth:`objective_values`.
+    """
+
+    @property
+    def independent_islands(self) -> bool:
+        """True when each accelerator island swept its own rate axis."""
+        return all(name != "f_acc" for name, _ in self.axes)
+
+    def axis_values(self, i: int) -> Dict[str, object]:
+        """Swept axis values of flat point ``i`` as {axis_name: value}."""
+        coords = np.unravel_index(i, self.shape)
+        return {name: values[c]
+                for (name, values), c in zip(self.axes, coords)}
+
+    def _accel_rate(self, av: Dict[str, object], wl_name: str) -> float:
+        key = f"f_acc:{wl_name}"
+        return float(av[key] if key in av else av["f_acc"])
+
+    def island_rates(self, i: int) -> Dict[str, float]:
+        """Per-island rate vector of flat point ``i``: one entry per
+        accelerator island (keyed by workload/tile name, the island naming
+        ``repro.sim.SimPlatform.build`` uses) plus the shared ``noc_mem``
+        island.  In shared mode every accelerator entry is the one swept
+        ``f_acc``; the TG rate is an axis value (``axis_values``), not an
+        island."""
+        av = self.axis_values(i)
+        out = {wl.name: self._accel_rate(av, wl.name)
+               for wl in self.workloads}
+        out["noc_mem"] = float(av["f_noc"])
+        return out
+
+    def design_point(self, i: int) -> DesignPoint:
+        """Materialize one flat index as a :class:`DesignPoint`."""
+        av = self.axis_values(i)
+        replication = {wl.name: int(av[f"K:{wl.name}"])
+                       for wl in self.workloads}
+        placement = {wl.name: tuple(av[f"pos:{wl.name}"])
+                     for wl in self.workloads}
+        if self.independent_islands:
+            rates = {wl.name: self._accel_rate(av, wl.name)
+                     for wl in self.workloads}
+        else:
+            rates = {"acc": float(av["f_acc"])}
+        rates["noc_mem"] = float(av["f_noc"])
+        rates["tg"] = float(av["f_tg"])
+        thr, area, energy = self._point_objectives(i)
+        return DesignPoint(
+            replication=replication, rates=rates, placement=placement,
+            throughput=thr, area=area, energy_per_unit=energy)
+
+    def _point_objectives(self, i: int) -> Tuple[float, float, float]:
+        return tuple(
+            float(self.objective_values(name, np.asarray([i]))[0])
+            for name in ("throughput", "area", "energy_per_unit"))
+
+    def design_points(self, indices: Iterable[int]) -> List[DesignPoint]:
+        return [self.design_point(int(i)) for i in indices]
+
+    def design_arrays(self, indices) -> Dict[str, np.ndarray]:
+        """Vectorized design decode for B flat indices — the batched-sim
+        bridge (``repro.sim.BatchSimPlatform.from_design_points``).
+
+        Returns ``k`` (B, A) float64 replication, ``pos`` (B, A, 2) int64
+        grid coordinates, ``rates`` (B, A+1) float64 per-island rates in
+        ``[*workload names, "noc_mem"]`` order, and ``f_tg`` (B,) float64
+        — exactly the floats :meth:`design_point` would produce, without
+        materializing B DesignPoints.
+        """
+        idx = np.asarray(indices, dtype=np.int64)
+        coords = dict(zip((n for n, _ in self.axes),
+                          np.unravel_index(idx, self.shape)))
+        vals = {n: np.asarray(v) for n, v in self.axes}
+
+        def axis(name):
+            return vals[name][coords[name]]
+
+        k = np.stack([axis(f"K:{wl.name}").astype(np.float64)
+                      for wl in self.workloads], axis=-1)
+        pos = np.stack([axis(f"pos:{wl.name}") for wl in self.workloads],
+                       axis=-2).astype(np.int64)
+        fa_cols = [axis(f"f_acc:{wl.name}"
+                        if self.independent_islands else "f_acc")
+                   for wl in self.workloads]
+        rates = np.stack(fa_cols + [axis("f_noc")], axis=-1).astype(
+            np.float64)
+        return {"k": k, "pos": pos, "rates": rates,
+                "f_tg": axis("f_tg").astype(np.float64)}
+
+
+# Objectives tracked by the chunked streaming sweep: name -> maximize?
+_TRACKED_OBJECTIVES = (("throughput", True), ("area", False),
+                       ("energy_per_unit", False), ("mem_traffic", False))
+
+
+def _topk_select(key: np.ndarray, indices: np.ndarray, k: int) -> np.ndarray:
+    """Positions of the k smallest ``key`` entries, ordered — and, at the
+    k-th-value boundary, *selected* — by (key, global index).
+
+    argpartition alone picks arbitrarily among boundary ties, which would
+    make one-shot and chunked sweeps disagree on tie-heavy objectives
+    (area has a handful of distinct values); widening the partition to
+    every entry tied with the k-th value and resolving by flat index makes
+    the selection deterministic and chunking-invariant."""
+    n = key.shape[0]
+    k = min(k, n)
+    if k == 0:
+        return np.empty(0, dtype=np.int64)
+    if k < n:
+        part = np.argpartition(key, k - 1)[:k]
+        cand = np.nonzero(key <= key[part].max())[0]
+    else:
+        cand = np.arange(n)
+    order = np.lexsort((indices[cand], key[cand]))[:k]
+    return cand[order]
+
+
 @dataclass(eq=False)
-class SweepResult:
+class SweepResult(_SweepIndexing):
     """Objective arrays for a full cross-product sweep, plus lazy
     :class:`DesignPoint` materialization.
 
@@ -207,6 +333,10 @@ class SweepResult:
     def points_per_second(self) -> float:
         return len(self) / self.elapsed_s if self.elapsed_s > 0 else float("inf")
 
+    def objective_values(self, objective: str, indices) -> np.ndarray:
+        """Objective array values at flat ``indices`` (dense lookup)."""
+        return getattr(self, objective)[np.asarray(indices, dtype=np.int64)]
+
     def pareto_indices(self) -> np.ndarray:
         """Flat indices of the (valid-only) Pareto front, O(N log N)."""
         flat = np.nonzero(self.valid)[0]
@@ -217,41 +347,104 @@ class SweepResult:
     def topk_indices(self, k: int, objective: str = "throughput",
                      maximize: Optional[bool] = None) -> np.ndarray:
         """Flat indices of the k best valid points on one objective,
-        best-first, via argpartition (no full sort, no DesignPoints)."""
+        best-first, via argpartition (no full sort, no DesignPoints).
+        Exact ties order by ascending flat index (the same deterministic
+        tie-break the chunked sweep's running top-k merge uses)."""
         vals = getattr(self, objective)
         if maximize is None:
             maximize = objective == "throughput"
         flat = np.nonzero(self.valid)[0]
         v = vals[flat]
-        k = min(k, v.shape[0])
-        if k == 0:
-            return np.empty(0, dtype=np.int64)
         key = -v if maximize else v
-        part = np.argpartition(key, k - 1)[:k]
-        return flat[part[np.argsort(key[part], kind="stable")]]
+        return flat[_topk_select(key, flat, k)]
 
-    def axis_values(self, i: int) -> Dict[str, object]:
-        """Swept axis values of flat point ``i`` as {axis_name: value}."""
-        coords = np.unravel_index(i, self.shape)
-        return {name: values[c]
-                for (name, values), c in zip(self.axes, coords)}
 
-    def design_point(self, i: int) -> DesignPoint:
-        """Materialize one flat index as a :class:`DesignPoint`."""
-        av = self.axis_values(i)
-        replication = {wl.name: int(av[f"K:{wl.name}"])
-                       for wl in self.workloads}
-        placement = {wl.name: tuple(av[f"pos:{wl.name}"])
-                     for wl in self.workloads}
-        rates = {"acc": float(av["f_acc"]), "noc_mem": float(av["f_noc"]),
-                 "tg": float(av["f_tg"])}
-        return DesignPoint(
-            replication=replication, rates=rates, placement=placement,
-            throughput=float(self.throughput[i]), area=float(self.area[i]),
-            energy_per_unit=float(self.energy_per_unit[i]))
+@dataclass(eq=False)
+class ChunkedSweepResult(_SweepIndexing):
+    """Survivors of a chunked/streaming :func:`grid_sweep`.
 
-    def design_points(self, indices: Iterable[int]) -> List[DesignPoint]:
-        return [self.design_point(int(i)) for i in indices]
+    The full grid (``len(self)`` points, possibly >1e8) was evaluated in
+    fixed-size axis blocks and never materialized whole; only the running
+    Pareto front and the per-objective top-``topk_track`` survivors are
+    retained, with **globally addressable** flat indices — the same
+    C-order over ``shape`` a one-shot :class:`SweepResult` uses, so
+    :meth:`axis_values` / :meth:`design_point` / downstream consumers
+    (``closed_loop_score``, ``BatchSimPlatform.from_design_points``) work
+    unchanged.  Objective *values* are only retained for tracked
+    survivors: :meth:`objective_values` raises ``KeyError`` for other
+    indices, and :meth:`design_point` on an untracked index still decodes
+    replication/placement/rates exactly but carries NaN objectives.
+    """
+    axes: Tuple[Tuple[str, Tuple], ...]
+    shape: Tuple[int, ...]
+    workloads: Tuple[AccelWorkload, ...]
+    n_tg: int
+    n_points: int
+    n_valid: int
+    cand_indices: np.ndarray            # (M,) int64, sorted ascending
+    cand_values: Dict[str, np.ndarray]  # objective -> (M,) float64
+    pareto: np.ndarray                  # (F,) int64 global, ascending
+    topk: Dict[str, np.ndarray]         # objective -> best-first global idx
+    topk_track: int
+    chunk_points: int
+    n_chunks: int
+    peak_chunk_bytes: int
+    elapsed_s: float = 0.0
+    backend: str = "numpy"
+
+    def __len__(self) -> int:
+        return self.n_points
+
+    @property
+    def points_per_second(self) -> float:
+        return len(self) / self.elapsed_s if self.elapsed_s > 0 else float("inf")
+
+    def objective_values(self, objective: str, indices) -> np.ndarray:
+        """Objective values at flat ``indices`` — tracked survivors only."""
+        idx = np.atleast_1d(np.asarray(indices, dtype=np.int64))
+        pos = np.searchsorted(self.cand_indices, idx)
+        ok = (pos < self.cand_indices.shape[0]) \
+            & (self.cand_indices[np.minimum(
+                pos, self.cand_indices.shape[0] - 1)] == idx)
+        if not ok.all():
+            raise KeyError(
+                f"flat indices {idx[~ok][:5].tolist()} are not tracked "
+                "survivors of this chunked sweep (only Pareto/top-k points "
+                "retain objective values)")
+        return self.cand_values[objective][pos]
+
+    def _point_objectives(self, i: int) -> Tuple[float, float, float]:
+        """Tracked survivors report their stored objectives; any other
+        (still decodable) index degrades to NaN objectives rather than
+        refusing to materialize."""
+        try:
+            return _SweepIndexing._point_objectives(self, i)
+        except KeyError:
+            return (float("nan"),) * 3
+
+    def pareto_indices(self) -> np.ndarray:
+        """Global flat indices of the full-grid Pareto front (the running
+        block merge is exact: front(union) == front(union of block
+        fronts)), ascending — identical to the one-shot sweep's."""
+        return self.pareto
+
+    def topk_indices(self, k: int, objective: str = "throughput",
+                     maximize: Optional[bool] = None) -> np.ndarray:
+        """Best-first global indices on one objective, ``k <= topk_track``.
+        Identical to the one-shot sweep's (ties broken by flat index)."""
+        default = dict(_TRACKED_OBJECTIVES)
+        if maximize is None:
+            maximize = objective == "throughput"
+        if objective not in default or maximize != default[objective]:
+            raise KeyError(
+                f"chunked sweeps track top-k only for {sorted(default)} in "
+                "their default directions")
+        if k > self.topk_track:
+            raise ValueError(
+                f"k={k} exceeds topk_track={self.topk_track} retained by "
+                "this chunked sweep; re-run grid_sweep with a larger "
+                "topk_track")
+        return self.topk[objective][:k]
 
 
 def _axis(values, dim: int, ndim: int) -> np.ndarray:
@@ -262,24 +455,209 @@ def _axis(values, dim: int, ndim: int) -> np.ndarray:
     return a.reshape(shape)
 
 
+@dataclass(frozen=True)
+class _AxisLayout:
+    """Dimension layout of one sweep: per-accel K axes, ``f_noc``, the
+    shared or per-accel ``f_acc`` axes, ``f_tg``, per-accel pos axes."""
+    A: int
+    independent: bool
+
+    @property
+    def R(self) -> int:
+        return self.A if self.independent else 1
+
+    @property
+    def ndim(self) -> int:
+        return 2 * self.A + self.R + 2
+
+    def k(self, a: int) -> int:
+        return a
+
+    @property
+    def fnoc(self) -> int:
+        return self.A
+
+    def fa(self, a: int) -> int:
+        return self.A + 1 + (a if self.independent else 0)
+
+    @property
+    def ftg(self) -> int:
+        return self.A + 1 + self.R
+
+    def pos(self, a: int) -> int:
+        return self.A + 2 + self.R + a
+
+
+def _eval_grid(model: SoCPerfModel, workloads, n_tg: int, backend: str,
+               lay: _AxisLayout, vals: Dict[str, object], get,
+               shape: Tuple[int, ...]) -> Dict[str, np.ndarray]:
+    """Evaluate every objective over one (sub-)grid.
+
+    ``get(dim, values)`` returns the broadcastable array of an axis for
+    this block; the arithmetic is purely elementwise + fixed-order accel
+    loops, so any blocking of the grid produces bit-identical floats —
+    the chunked sweep's correctness contract.  The energy model routes the
+    shared-rate case through the *same* per-accel op sequence as the
+    independent case (sum over accel islands in order, then /A), which is
+    what makes all-islands-equal independent points reproduce the shared
+    sweep bit for bit.
+    """
+    A = lay.A
+    k_ax = [get(lay.k(a), vals["k"]) for a in range(A)]
+    fn_ax = get(lay.fnoc, vals["noc"])
+    fa_ax = [get(lay.fa(a), vals["acc"][a]) for a in range(A)]
+    ft_ax = get(lay.ftg, vals["tg"])
+    pos_ax = [get(lay.pos(a), vals["pos"]) for a in range(A)]
+
+    total_thr = np.zeros(shape, dtype=np.float64)
+    for a, wl in enumerate(workloads):
+        thr = model.accel_throughput_batch(
+            base_mbps=wl.base_mbps, wire_share=wl.wire_share, k=k_ax[a],
+            f_acc=fa_ax[a], f_noc=fn_ax, f_tg=ft_ax, n_tg=n_tg,
+            pos_idx=pos_ax[a], backend=backend)
+        total_thr = total_thr + np.broadcast_to(thr, shape)
+
+    area = np.zeros(shape, dtype=np.float64)
+    for a in range(A):
+        area = area + get(lay.k(a), vals["area"])
+
+    # mean accelerator-island power (summed in accel order, then /A) +
+    # the NoC share — one op sequence for both island_rates modes
+    pw = chip_power(fa_ax[0], busy=1.0)
+    for f in fa_ax[1:]:
+        pw = pw + chip_power(f, busy=1.0)
+    power = pw / float(A) + 0.3 * chip_power(fn_ax, busy=1.0)
+    energy = np.broadcast_to(power, shape) / np.maximum(total_thr, 1e-9)
+
+    # Fig.-4 memory-pressure objective: offered MEM traffic at each rate
+    # point (placement-independent, so it broadcasts over the K/pos axes)
+    mem_traffic = np.broadcast_to(
+        model.memory_traffic_batch(f_acc_per_accel=fa_ax, f_noc=fn_ax,
+                                   f_tg=ft_ax, n_tg=n_tg), shape)
+
+    valid = np.ones(shape, dtype=bool)
+    for a in range(A):
+        for b in range(a + 1, A):
+            valid &= pos_ax[a] != pos_ax[b]
+
+    return {"throughput": total_thr,
+            "area": np.ascontiguousarray(np.broadcast_to(area, shape)),
+            "energy_per_unit": energy,
+            "mem_traffic": np.ascontiguousarray(mem_traffic),
+            "valid": valid}
+
+
+def _prepare_axes(model, workloads, ks, acc_rates, noc_rates, tg_rates,
+                  positions, island_rates):
+    """Axis bookkeeping shared by the one-shot and chunked paths."""
+    assert island_rates in ("shared", "independent"), island_rates
+    independent = island_rates == "independent"
+    if positions is None:
+        positions = [(r, c) for r in range(model.noc.rows)
+                     for c in range(model.noc.cols)
+                     if (r, c) != model.mem_pos]
+    positions = [tuple(p) for p in positions]
+    pos_idx = np.asarray([pos_index(model.noc, p) for p in positions])
+
+    if isinstance(acc_rates, dict):
+        assert independent, "per-accel acc_rates ladders require " \
+            "island_rates='independent'"
+        acc_by_wl = [tuple(float(f) for f in acc_rates[wl.name])
+                     for wl in workloads]
+    else:
+        acc_by_wl = [tuple(float(f) for f in acc_rates)] * len(workloads)
+
+    A = len(workloads)
+    lay = _AxisLayout(A=A, independent=independent)
+    axes: List[Tuple[str, Tuple]] = []
+    for wl in workloads:
+        axes.append((f"K:{wl.name}", tuple(int(k) for k in ks)))
+    axes.append(("f_noc", tuple(float(f) for f in noc_rates)))
+    if independent:
+        for a, wl in enumerate(workloads):
+            axes.append((f"f_acc:{wl.name}", acc_by_wl[a]))
+    else:
+        axes.append(("f_acc", acc_by_wl[0]))
+    axes.append(("f_tg", tuple(float(f) for f in tg_rates)))
+    for wl in workloads:
+        axes.append((f"pos:{wl.name}", tuple(positions)))
+
+    area_by_k = {int(k): replication_area_model(
+        weight_bytes=1.0, act_bytes=0.5, k=int(k))["total_bytes_per_dev"]
+        for k in ks}
+    vals = {
+        "k": np.asarray([float(k) for k in ks]),
+        "area": np.asarray([area_by_k[int(k)] for k in ks]),
+        "noc": np.asarray([float(f) for f in noc_rates]),
+        "tg": np.asarray([float(f) for f in tg_rates]),
+        "acc": [np.asarray(r) for r in acc_by_wl],
+        "pos": pos_idx,
+    }
+    return lay, tuple(axes), vals
+
+
+def _front_prefilter(thr: np.ndarray, area: np.ndarray, energy: np.ndarray,
+                     max_classes: int = 1024) -> np.ndarray:
+    """Positions of a cheap *superset* of the 3-objective Pareto front.
+
+    Per distinct-area class (area takes one value per K combination — a
+    handful), the 2-objective (max throughput, min energy) staircase via
+    one lexsort + cumulative min; any point dominated there is dominated
+    in 3D by the same point (equal area), so the exact — but per-point
+    Python — :func:`pareto_front_indices` scan afterwards only sees the
+    small candidate set.  This is what keeps the chunked sweep's per-block
+    front extraction vectorized at millions of points per block.  Falls
+    back to the identity when area is effectively continuous."""
+    uniq = np.unique(area)
+    if uniq.shape[0] > max_classes:
+        return np.arange(thr.shape[0])
+    keep: List[np.ndarray] = []
+    for av in uniq:
+        sel = np.nonzero(area == av)[0]
+        o = sel[np.lexsort((energy[sel], -thr[sel]))]
+        cm = np.minimum.accumulate(energy[o])
+        keep.append(o[energy[o] <= cm])     # over-keeps ties; exact scan next
+    return np.concatenate(keep)
+
+
+def _merge_front(cand: Dict[str, np.ndarray],
+                 rows: Dict[str, np.ndarray]) -> Dict[str, np.ndarray]:
+    """Fold one block's Pareto survivors into the running front."""
+    merged = {k: np.concatenate([cand[k], rows[k]]) for k in cand}
+    keep = pareto_front_indices(merged["throughput"], merged["area"],
+                                merged["energy_per_unit"])
+    return {k: v[keep] for k, v in merged.items()}
+
+
 def grid_sweep(model: SoCPerfModel,
                workloads,
                *,
                ks: Sequence[int] = (1, 2, 4),
-               acc_rates: Sequence[float] = (0.2, 0.6, 1.0),
+               acc_rates=(0.2, 0.6, 1.0),
                noc_rates: Sequence[float] = (0.1, 0.5, 1.0),
                tg_rates: Sequence[float] = (1.0,),
                positions: Optional[Sequence[Tuple[int, int]]] = None,
                n_tg: int = 0,
-               backend: str = "numpy") -> SweepResult:
+               backend: str = "numpy",
+               island_rates: str = "shared",
+               chunk_points: Optional[int] = None,
+               topk_track: int = 64):
     """Batched cross-product sweep over the paper's design axes.
 
     ``workloads`` is one :class:`AccelWorkload` or a sequence for a *joint*
     multi-accelerator sweep (each accelerator gets its own K axis and its
-    own placement axis; rates are shared, as in the paper's islands).  The
-    swept dimensions, in axis order, are::
+    own placement axis).  The swept dimensions, in axis order, are::
 
-        K:<wl> (per accel) | f_noc | f_acc | f_tg | pos:<wl> (per accel)
+        island_rates="shared":       K:<wl> | f_noc | f_acc        | f_tg | pos:<wl>
+        island_rates="independent":  K:<wl> | f_noc | f_acc:<wl>.. | f_tg | pos:<wl>
+
+    **Per-island rates** (the paper's C2): with
+    ``island_rates="independent"`` every accelerator island sweeps its own
+    rate ladder — one ``f_acc:<wl>`` axis per accelerator — instead of the
+    one shared ``f_acc`` axis (kept as the parity reference); ``acc_rates``
+    may then also be a ``{workload name: ladder}`` mapping for
+    heterogeneous ladders.  Restricted to all-islands-equal rates the
+    independent sweep reproduces the shared sweep bit for bit (tested).
 
     ``positions`` defaults to every grid node except the MEM tile.  Joint
     placements where two accelerators collide are masked invalid (their
@@ -288,76 +666,126 @@ def grid_sweep(model: SoCPerfModel,
 
     Throughput of a joint point is the sum of the accelerators' modeled
     throughputs; area sums each accelerator's replication cost; energy is
-    chip power at (f_acc, f_noc) per unit of total throughput — identical
-    formulas to :func:`sweep_soc`, evaluated as arrays.  With
+    the mean accelerator-island chip power (each island at its own rate)
+    plus the NoC share, per unit of total throughput; ``mem_traffic`` sums
+    each accelerator's offered MEM stream at its own island rate.  With
     ``backend="jax"`` the throughput kernel runs jit-compiled.
+
+    **Chunked/streaming evaluation**: when ``chunk_points`` is given and
+    the cross-product exceeds it, the grid is evaluated in fixed-size
+    axis blocks (whole trailing-axis panels, so every block is a
+    contiguous range of global flat indices) with a running Pareto/top-k
+    merge, and a :class:`ChunkedSweepResult` is returned — peak memory is
+    ~``41 * chunk_points`` bytes (five float64 objective/temp panels + a
+    bool mask) however large the full grid is, while indices stay globally
+    addressable and Pareto front / top-k are identical to a one-shot
+    sweep (tested).  Otherwise a dense :class:`SweepResult` is returned.
     """
     if isinstance(workloads, AccelWorkload):
         workloads = (workloads,)
     workloads = tuple(workloads)
-    if positions is None:
-        positions = [(r, c) for r in range(model.noc.rows)
-                     for c in range(model.noc.cols)
-                     if (r, c) != model.mem_pos]
-    positions = [tuple(p) for p in positions]
-    pos_idx = np.asarray([pos_index(model.noc, p) for p in positions])
-
-    A = len(workloads)
-    axes: List[Tuple[str, Tuple]] = []
-    for wl in workloads:
-        axes.append((f"K:{wl.name}", tuple(int(k) for k in ks)))
-    axes.append(("f_noc", tuple(float(f) for f in noc_rates)))
-    axes.append(("f_acc", tuple(float(f) for f in acc_rates)))
-    axes.append(("f_tg", tuple(float(f) for f in tg_rates)))
-    for wl in workloads:
-        axes.append((f"pos:{wl.name}", tuple(positions)))
-    ndim = len(axes)
+    lay, axes, vals = _prepare_axes(model, workloads, ks, acc_rates,
+                                    noc_rates, tg_rates, positions,
+                                    island_rates)
+    ndim = lay.ndim
     shape = tuple(len(v) for _, v in axes)
+    n_points = int(np.prod([len(v) for _, v in axes], dtype=np.int64))
 
     t0 = time.perf_counter()
-    k_ax = [_axis([float(k) for k in ks], a, ndim) for a in range(A)]
-    fn_ax = _axis(list(noc_rates), A, ndim)
-    fa_ax = _axis(list(acc_rates), A + 1, ndim)
-    ft_ax = _axis(list(tg_rates), A + 2, ndim)
-    pos_ax = [_axis(pos_idx, A + 3 + a, ndim) for a in range(A)]
+    if chunk_points is None or n_points <= chunk_points:
+        get = lambda dim, v: _axis(v, dim, ndim)        # noqa: E731
+        out = _eval_grid(model, workloads, n_tg, backend, lay, vals, get,
+                         shape)
+        elapsed = time.perf_counter() - t0
+        return SweepResult(
+            axes=axes, shape=shape, workloads=workloads, n_tg=n_tg,
+            throughput=out["throughput"].ravel(),
+            area=out["area"].ravel(),
+            energy_per_unit=out["energy_per_unit"].ravel(),
+            valid=out["valid"].ravel(),
+            mem_traffic=out["mem_traffic"].ravel(),
+            elapsed_s=elapsed, backend=backend)
 
-    total_thr = np.zeros(shape, dtype=np.float64)
-    for a, wl in enumerate(workloads):
-        thr = model.accel_throughput_batch(
-            base_mbps=wl.base_mbps, wire_share=wl.wire_share, k=k_ax[a],
-            f_acc=fa_ax, f_noc=fn_ax, f_tg=ft_ax, n_tg=n_tg,
-            pos_idx=pos_ax[a], backend=backend)
-        total_thr = total_thr + np.broadcast_to(thr, shape)
+    # ---- chunked/streaming path: fixed-size blocks of whole trailing
+    # panels; every block covers the contiguous global flat range
+    # [o0*inner, o1*inner) so survivors carry global indices for free
+    inner = 1
+    s = ndim
+    while s > 0 and inner * shape[s - 1] <= chunk_points:
+        inner *= shape[s - 1]
+        s -= 1
+    outer_shape = shape[:s]
+    outer_n = int(np.prod(outer_shape, dtype=np.int64)) if s else 1
+    o_per_block = max(1, chunk_points // max(inner, 1))
 
-    # area: replication cost per accel, looked up per K level
-    area_by_k = {int(k): replication_area_model(
-        weight_bytes=1.0, act_bytes=0.5, k=int(k))["total_bytes_per_dev"]
-        for k in ks}
-    area = np.zeros(shape, dtype=np.float64)
-    for a in range(A):
-        area = area + _axis([area_by_k[int(k)] for k in ks], a, ndim)
+    objs = [name for name, _ in _TRACKED_OBJECTIVES]
+    empty = {"i": np.empty(0, dtype=np.int64),
+             **{o: np.empty(0, dtype=np.float64) for o in objs}}
+    front = dict(empty)
+    topk = {o: dict(empty) for o in objs}
+    n_valid = 0
+    n_chunks = 0
+    peak_bytes = 0
 
-    power = chip_power(fa_ax, busy=1.0) + 0.3 * chip_power(fn_ax, busy=1.0)
-    energy = np.broadcast_to(power, shape) / np.maximum(total_thr, 1e-9)
+    for o0 in range(0, outer_n, o_per_block):
+        o1 = min(o0 + o_per_block, outer_n)
+        O = o1 - o0
+        coords = np.unravel_index(np.arange(o0, o1), outer_shape)
+        blk_ndim = ndim - s + 1
 
-    # Fig.-4 memory-pressure objective: offered MEM traffic at each rate
-    # point (placement-independent, so it broadcasts over the K/pos axes)
-    mem_traffic = np.broadcast_to(
-        model.memory_traffic_batch(f_acc=fa_ax, f_noc=fn_ax, f_tg=ft_ax,
-                                   n_tg=n_tg, n_accels=A), shape)
+        def get(dim, v, coords=coords, O=O):
+            v = np.asarray(v)
+            if dim < s:
+                return v[coords[dim]].reshape((O,) + (1,) * (ndim - s))
+            bshape = [1] * blk_ndim
+            bshape[dim - s + 1] = v.shape[0]
+            return v.reshape(bshape)
 
-    valid = np.ones(shape, dtype=bool)
-    for a in range(A):
-        for b in range(a + 1, A):
-            valid &= pos_ax[a] != pos_ax[b]
+        blk_shape = (O,) + shape[s:]
+        out = _eval_grid(model, workloads, n_tg, backend, lay, vals, get,
+                         blk_shape)
+        flat = {k: v.ravel() for k, v in out.items()}
+        n_chunks += 1
+        peak_bytes = max(peak_bytes, sum(v.nbytes for v in flat.values())
+                         + flat["throughput"].nbytes)   # + kernel temp
 
+        vpos = np.nonzero(flat["valid"])[0]
+        n_valid += int(vpos.size)
+        if vpos.size == 0:
+            continue
+        rows = {"i": o0 * inner + vpos,
+                **{o: flat[o][vpos] for o in objs}}
+
+        pre = _front_prefilter(rows["throughput"], rows["area"],
+                               rows["energy_per_unit"])
+        bf = pre[pareto_front_indices(rows["throughput"][pre],
+                                      rows["area"][pre],
+                                      rows["energy_per_unit"][pre])]
+        front = _merge_front(front, {k: v[bf] for k, v in rows.items()})
+        for o, maximize in _TRACKED_OBJECTIVES:
+            key = -rows[o] if maximize else rows[o]
+            sel = _topk_select(key, rows["i"], topk_track)
+            cat = {k: np.concatenate([topk[o][k], v[sel]])
+                   for k, v in rows.items()}
+            ckey = -cat[o] if maximize else cat[o]
+            keep = _topk_select(ckey, cat["i"], topk_track)
+            topk[o] = {k: v[keep] for k, v in cat.items()}
+
+    # assemble the tracked-survivor store: pareto ∪ top-k, deduped
+    pools = [front] + [topk[o] for o in objs]
+    all_idx = np.concatenate([p["i"] for p in pools])
+    uniq, upos = np.unique(all_idx, return_index=True)
+    cand_values = {o: np.concatenate([p[o] for p in pools])[upos]
+                   for o in objs}
     elapsed = time.perf_counter() - t0
-    return SweepResult(
-        axes=tuple(axes), shape=shape, workloads=workloads, n_tg=n_tg,
-        throughput=total_thr.ravel(),
-        area=np.ascontiguousarray(np.broadcast_to(area, shape)).ravel(),
-        energy_per_unit=energy.ravel(), valid=valid.ravel(),
-        mem_traffic=np.ascontiguousarray(mem_traffic).ravel(),
+    return ChunkedSweepResult(
+        axes=axes, shape=shape, workloads=workloads, n_tg=n_tg,
+        n_points=n_points, n_valid=n_valid,
+        cand_indices=uniq, cand_values=cand_values,
+        pareto=np.sort(front["i"]),
+        topk={o: topk[o]["i"] for o in objs},
+        topk_track=topk_track, chunk_points=chunk_points,
+        n_chunks=n_chunks, peak_chunk_bytes=int(peak_bytes),
         elapsed_s=elapsed, backend=backend)
 
 
@@ -455,7 +883,8 @@ def closed_loop_score(result: SweepResult, trace, *,
 
     if indices is None:
         pf = result.pareto_indices()
-        ordr = np.argsort(-result.throughput[pf], kind="stable")
+        thr_pf = result.objective_values("throughput", pf)
+        ordr = np.argsort(-thr_pf, kind="stable")
         indices = pf[ordr][:top]
     indices = np.asarray(indices, dtype=np.int64)
 
@@ -561,10 +990,12 @@ def summarize(points: Sequence[DesignPoint], top: int = 10) -> str:
     return "\n".join(lines)
 
 
-def summarize_result(res: SweepResult, top: int = 10) -> str:
-    """Summary of a batched sweep without materializing all points."""
+def summarize_result(res, top: int = 10) -> str:
+    """Summary of a batched sweep (dense or chunked) without materializing
+    all points."""
     front_idx = res.pareto_indices()
-    order = np.argsort(-res.throughput[front_idx], kind="stable")
+    order = np.argsort(-res.objective_values("throughput", front_idx),
+                       kind="stable")
     lines = [f"{len(res)} points ({res.n_valid} valid, "
              f"{res.points_per_second:,.0f} pts/s), "
              f"{front_idx.shape[0]} on Pareto front"]

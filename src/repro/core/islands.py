@@ -65,11 +65,25 @@ class IslandConfig:
     islands: Tuple[IslandSpec, ...]
     version: int = 0
 
+    def _tile_index(self) -> Dict[str, int]:
+        """Memoized tile -> island-position map (the sim hot path calls
+        :meth:`island_of` per tile per engine build; the old linear scan
+        was O(#islands) per lookup).  The cache is per *instance*, so any
+        rate/partition change — ``with_rates``/``replace`` always build a
+        new frozen instance and bump ``version`` — starts from a fresh
+        map; first-wins on (invalid) duplicate assignments, matching the
+        scan."""
+        m = self.__dict__.get("_tile_index_cache")
+        if m is None:
+            m = {}
+            for i, isl in enumerate(self.islands):
+                for t in isl.tiles:
+                    m.setdefault(t, i)
+            object.__setattr__(self, "_tile_index_cache", m)
+        return m
+
     def island_of(self, tile_name: str) -> IslandSpec:
-        for isl in self.islands:
-            if tile_name in isl.tiles:
-                return isl
-        raise KeyError(tile_name)
+        return self.islands[self._tile_index()[tile_name]]
 
     def rate_of(self, tile_name: str) -> float:
         return self.island_of(tile_name).rate

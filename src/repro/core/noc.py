@@ -44,13 +44,25 @@ class NocConfig:
     max_slowdown: float = 50.0
 
 
-@lru_cache(maxsize=None)
+# Cache bounds: chunked many-config sweeps touch an unbounded stream of
+# NocConfigs (every distinct link_bw/size/torus is a fresh key), so the
+# route/hop/table caches carry explicit maxsize instead of growing for the
+# life of the process.  Sizing: a pod-scale 16x16 grid has 256^2 = 65536
+# (src, dst) pairs, so 1<<17 route/hop entries hold two pod-size configs
+# (or ~500 SoC-size ones) before eviction; routing tables are the big rows
+# (hop matrix + ragged incidence), so only a handful stay resident.
+_ROUTE_CACHE_SIZE = 1 << 17
+_TABLE_CACHE_SIZE = 16
+
+
+@lru_cache(maxsize=_ROUTE_CACHE_SIZE)
 def _xy_route_cached(cfg: NocConfig, src: Pos, dst: Pos) -> Tuple[Link, ...]:
     """Dimension-ordered (X then Y) route; shortest-wrap when torus.
 
     Memoized per ``(cfg, src, dst)`` — NocConfig is a frozen dataclass, so
     the triple is hashable and each route is walked at most once per
-    process.  The cached tuple is immutable; :func:`xy_route` copies it."""
+    cache residency.  The cached tuple is immutable; :func:`xy_route`
+    copies it."""
     links: List[Link] = []
     r, c = src
 
@@ -79,7 +91,7 @@ def xy_route(cfg: NocConfig, src: Pos, dst: Pos) -> List[Link]:
     return list(_xy_route_cached(cfg, src, dst))
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=_ROUTE_CACHE_SIZE)
 def hops(cfg: NocConfig, src: Pos, dst: Pos) -> int:
     return len(_xy_route_cached(cfg, src, dst))
 
@@ -133,9 +145,12 @@ class RoutingTables:
         return inc
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=_TABLE_CACHE_SIZE)
 def routing_tables(cfg: NocConfig) -> RoutingTables:
-    """Build (once per config) the hop matrix + link incidence tables."""
+    """Build (once per resident config) the hop matrix + link incidence
+    tables.  Bounded: a many-config sweep evicts the least-recently-used
+    tables instead of retaining one incidence table per config forever
+    (tested)."""
     n = cfg.rows * cfg.cols
     link_index: Dict[Link, int] = {}
     links: List[Link] = []

@@ -176,12 +176,13 @@ def _throughput_math(xp, base_mbps, wire_share, k, f_acc, f_noc, f_tg,
     return base_mbps * t0 / t
 
 
-@lru_cache(maxsize=None)
+@lru_cache(maxsize=32)
 def _jitted_throughput_kernel(own_demand: float, tg_demand: float,
                               link_bw: float, hop_latency_share: float,
                               ref_hops: float):
     """jax.jit-compiled throughput kernel, cached per model constants
-    (closed over as compile-time constants; built on first use).
+    (closed over as compile-time constants; built on first use; bounded —
+    many-model chunked sweeps must not pin one executable per config).
 
     Note: runs at jax's default precision — enable jax_enable_x64 for
     float64 parity with the numpy path; otherwise expect ~1e-6 relative
@@ -206,6 +207,26 @@ def _memory_traffic_math(xp, f_acc, f_noc, f_tg, n_tg, n_accels, *,
     mem_cap = mem_service * f_noc
     tg_offer = tg_demand_fig4 * f_tg * n_tg
     acc_offer = n_accels * xp.minimum(1.0, 5.0 * f_acc) * xp.minimum(1.0, f_noc)
+    return xp.minimum(mem_cap, tg_offer + acc_offer)
+
+
+def _memory_traffic_math_per_accel(xp, f_acc_terms, f_noc, f_tg, n_tg, *,
+                                   mem_service, tg_demand_fig4):
+    """Per-accelerator-island form of the Fig.-4 model: each accelerator
+    offers ``min(1, 5 f_a)`` at its *own* island rate instead of ``n_accels``
+    copies of one shared rate.  The offers are summed in list order
+    (sequential) — the parity contract the per-island DSE sweep relies on:
+    with every ``f_a`` equal, the arithmetic is the exact op sequence the
+    shared-rate sweep runs, so the two agree bit for bit.
+    """
+    mem_cap = mem_service * f_noc
+    tg_offer = tg_demand_fig4 * f_tg * n_tg
+    if len(f_acc_terms) == 0:
+        return xp.minimum(mem_cap, tg_offer + xp.zeros_like(f_noc))
+    acc = xp.minimum(1.0, 5.0 * f_acc_terms[0])
+    for f in f_acc_terms[1:]:
+        acc = acc + xp.minimum(1.0, 5.0 * f)
+    acc_offer = acc * xp.minimum(1.0, f_noc)
     return xp.minimum(mem_cap, tg_offer + acc_offer)
 
 
@@ -322,13 +343,29 @@ class SoCPerfModel:
         t_ref = (1.0 - w) + w * max(1.0, self.own_demand) * hopf0
         return t_comp, t_wire, t_ref
 
-    def memory_traffic_batch(self, *, f_acc, f_noc, f_tg=1.0, n_tg=0,
-                             n_accels=1) -> np.ndarray:
+    def memory_traffic_batch(self, *, f_acc=None, f_noc, f_tg=1.0, n_tg=0,
+                             n_accels=1,
+                             f_acc_per_accel=None) -> np.ndarray:
         """Batched Fig.-4 memory-traffic model (broadcasting arguments).
 
-        ``n_accels`` is the number of accelerator tiles streaming to MEM
+        Two forms: the shared-rate form takes one ``f_acc`` plus
+        ``n_accels`` — the number of accelerator tiles streaming to MEM
         (the scalar API's ``len(accel_positions)``; the offer is
-        position-independent)."""
+        position-independent).  The per-island form takes
+        ``f_acc_per_accel`` — a sequence of rate arrays, one per
+        accelerator island, each broadcasting over the design axes — and
+        sums each accelerator's offer at its *own* island rate (the
+        per-island DSE sweep's objective; bit-for-bit equal to the shared
+        form when every entry carries equal rates)."""
+        if f_acc_per_accel is not None:
+            assert f_acc is None, "pass f_acc or f_acc_per_accel, not both"
+            terms = [np.asarray(f, dtype=np.float64)
+                     for f in f_acc_per_accel]
+            arrs = [np.asarray(a, dtype=np.float64)
+                    for a in (f_noc, f_tg, n_tg)]
+            return _memory_traffic_math_per_accel(
+                np, terms, *arrs, mem_service=self.mem_service,
+                tg_demand_fig4=self.tg_demand_fig4)
         arrs = [np.asarray(a, dtype=np.float64)
                 for a in (f_acc, f_noc, f_tg, n_tg, n_accels)]
         return _memory_traffic_math(

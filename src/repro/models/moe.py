@@ -24,10 +24,8 @@ from repro.configs.base import ArchConfig
 from repro.models.params import spec, get_batch_axes
 from repro.models.layers import _act, DATA, MODEL
 
-try:  # jax>=0.6 moved shard_map to jax.shard_map
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.compat import get_abstract_mesh as _get_abstract_mesh
+from repro.compat import shard_map as _shard_map
 
 P = jax.sharding.PartitionSpec
 
@@ -166,7 +164,7 @@ def moe_apply(p: Dict, cfg: ArchConfig, x: jax.Array,
 
     if mesh is None:
         try:
-            mesh = jax.sharding.get_abstract_mesh()
+            mesh = _get_abstract_mesh()
         except Exception:  # pragma: no cover
             mesh = None
     names = tuple(getattr(mesh, "axis_names", ()) or ())

@@ -21,10 +21,7 @@ from typing import Any, Tuple
 import jax
 import jax.numpy as jnp
 
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.compat import shard_map as _shard_map
 
 P = jax.sharding.PartitionSpec
 

@@ -32,10 +32,7 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
+from repro.compat import shard_map as _shard_map
 
 P = jax.sharding.PartitionSpec
 
@@ -54,7 +51,7 @@ def pipeline_apply(stage_fn: Callable, stage_params: Any, x: jax.Array,
         # params_local: stage slice (leading dim 1) ; xm_local: full (M, mb, ...)
         params_local = jax.tree_util.tree_map(lambda a: a[0], params_local)
         s = jax.lax.axis_index(axis)
-        S = jax.lax.axis_size(axis)
+        S = n_stages            # static (jax.lax.axis_size is newer jax)
         M = xm_local.shape[0]
         T = M + S - 1
         fwd = [(i, (i + 1) % S) for i in range(S)]   # ring step (wraps; the

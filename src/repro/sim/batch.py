@@ -41,8 +41,10 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.islands import IslandConfig
-from repro.core.noc import pos_index, stacked_incidence
+from repro.core.islands import (IslandConfig, IslandSpec, NOC_LADDER,
+                                TILE_LADDER)
+from repro.core.noc import (pos_index, positions_to_indices,
+                            stacked_incidence)
 from repro.core.perfmodel import SoCPerfModel
 from repro.sim.control import BatchControllerHarness
 from repro.sim.engine import (PKT_BYTES, SimConfig, SimPlatform, StepConsts,
@@ -117,15 +119,46 @@ class BatchSimPlatform:
                            *, req_mb: float = 0.1,
                            n_tg: Optional[int] = None
                            ) -> "BatchSimPlatform":
-        """Bridge from the DSE layer: stack ``grid_sweep`` survivors
-        (flat :class:`~repro.core.dse.SweepResult` indices) for one
-        batched replay."""
+        """Bridge from the DSE layer: stack ``grid_sweep`` survivors (flat
+        :class:`~repro.core.dse.SweepResult` /
+        :class:`~repro.core.dse.ChunkedSweepResult` indices) for one
+        batched replay.
+
+        Vectorized: the per-design ``(B, A)`` replication/placement arrays
+        and the ``(B, I)`` per-island rate matrix come straight from one
+        ``result.design_arrays`` decode of the flat indices — per-island
+        independent rates included — without materializing B DesignPoints
+        or SimPlatforms (bit-identical to stacking
+        ``SimPlatform.from_design_point`` per index, tested)."""
         n_tg = result.n_tg if n_tg is None else n_tg
-        plats = [SimPlatform.from_design_point(
-                     model, result.design_point(int(i)), result.workloads,
-                     req_mb=req_mb, n_tg=n_tg)
-                 for i in np.asarray(indices, dtype=np.int64)]
-        return cls.stack(plats)
+        idx = np.asarray(indices, dtype=np.int64)
+        wls = tuple(result.workloads)
+        names = tuple(w.name for w in wls)
+        assert len(set(names)) == len(names), "duplicate tile names"
+        da = result.design_arrays(idx)
+        B, A = da["k"].shape
+        pos_idx = positions_to_indices(model.noc, da["pos"])
+        mem_idx = pos_index(model.noc, model.mem_pos)
+        assert not np.any(pos_idx == mem_idx), "tile placed on MEM"
+        for a in range(A):
+            for b in range(a + 1, A):
+                assert not np.any(pos_idx[:, a] == pos_idx[:, b]), \
+                    "tile collision (invalid sweep point selected)"
+        specs = tuple(IslandSpec(n, (n,), TILE_LADDER, 1.0)
+                      for n in names)
+        specs += (IslandSpec("noc_mem", ("NOC", "MEM"), NOC_LADDER, 1.0),)
+
+        def tile_const(vals):
+            return np.broadcast_to(
+                np.asarray(vals, dtype=np.float64), (B, A)).copy()
+
+        return cls(
+            model=model, islands=IslandConfig(specs), names=names,
+            base_mbps=tile_const([w.base_mbps for w in wls]),
+            wire_share=tile_const([w.wire_share for w in wls]),
+            k=da["k"], pos_idx=pos_idx.astype(np.int64),
+            req_mb=np.full((B, A), float(req_mb)),
+            rates=da["rates"], f_tg=da["f_tg"], n_tg=int(n_tg))
 
     def design(self, b: int) -> SimPlatform:
         """Materialize design ``b`` as a sequential :class:`SimPlatform`

@@ -136,15 +136,19 @@ class SimPlatform:
                           ) -> "SimPlatform":
         """Bridge from the DSE layer: instantiate a ``grid_sweep``
         survivor (a :class:`~repro.core.dse.DesignPoint`) for replay —
-        replication/placement from the point, island rates from its
-        ``acc``/``noc_mem``/``tg`` rate assignment."""
+        replication/placement from the point, island rates from its rate
+        assignment.  Shared-rate points carry one ``acc`` rate; per-island
+        points (``grid_sweep(island_rates="independent")``) carry one rate
+        per accelerator island keyed by tile name, which maps 1:1 onto the
+        per-tile islands this platform builds."""
         wls = [AccelWorkload(w.name, w.base_mbps, w.ai,
                              replication=int(dp.replication[w.name]))
                for w in workloads]
+        shared = float(dp.rates.get("acc", 1.0))
         return cls.build(
             model, wls, [dp.placement[w.name] for w in workloads],
             names=[w.name for w in workloads],
-            rates={**{w.name: float(dp.rates.get("acc", 1.0))
+            rates={**{w.name: float(dp.rates.get(w.name, shared))
                       for w in workloads},
                    "noc_mem": float(dp.rates.get("noc_mem", 1.0))},
             req_mb=req_mb, n_tg=n_tg, f_tg=float(dp.rates.get("tg", 1.0)))

