@@ -23,7 +23,8 @@ from repro.core.dfs import BatchPIDRatePolicy
 from repro.core.dse import closed_loop_score, grid_sweep
 from repro.core.perfmodel import AccelWorkload, SoCPerfModel
 from repro.sim import (BatchControllerHarness, BatchSimEngine,
-                       BatchSimPlatform, SimConfig, diurnal_trace)
+                       BatchSimPlatform, FlowPattern, LoadBalancer,
+                       diurnal_trace, poisson_trace, SimConfig)
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
                           "BENCH_sim_batch.json")
@@ -141,6 +142,48 @@ def bench_sim_batch():
                  f"{irate:,.1f} survivors/s (per-island rates, "
                  f"{irate / shared_rate:.2f}x shared-rate row, "
                  f"island_of {lookup_ns:.0f}ns)"))
+
+    # ---- pipeline workload (tile-to-tile chain + load balancer) ----
+    # ISSUE 5 acceptance: scoring survivors under a FlowPattern chain
+    # (dfadd completions feed dfmul, balancer in the loop) keeps the
+    # batched path >= 10x the sequential one at B=512.
+    pipe = FlowPattern.chain(("dfadd",), ("dfmul",))
+    ptrace = poisson_trace(np.asarray([2000.0, 0.0]), TICKS, 2, dt=DT,
+                           seed=7)
+    pipe_kw = dict(model=m, req_mb=REQ_MB, flows=pipe,
+                   balancer_factory=lambda p: LoadBalancer(
+                       [("dfadd",), ("dfmul",)], p.names))
+
+    idx = survivors[:SEQ_SAMPLE]
+    t0 = time.perf_counter()
+    pseq = closed_loop_score(res, ptrace, indices=idx, batch=False,
+                             **pipe_kw)
+    pseq_wall = time.perf_counter() - t0
+    pseq_rate = SEQ_SAMPLE / pseq_wall
+    rows.append(("sim_batch_pipeline_sequential",
+                 pseq_wall / SEQ_SAMPLE * 1e6,
+                 f"B={SEQ_SAMPLE} {pseq_rate:,.1f} survivors/s"))
+    stats["pipeline_sequential"] = {
+        "designs": SEQ_SAMPLE, "wall_seconds": pseq_wall,
+        "survivors_per_sec": pseq_rate}
+
+    t0 = time.perf_counter()
+    pbat = closed_loop_score(res, ptrace, indices=survivors[:512],
+                             **pipe_kw)
+    pwall = time.perf_counter() - t0
+    prate = 512 / pwall
+    pspeed = prate / pseq_rate
+    assert pspeed >= 10.0, \
+        f"batched pipeline speedup {pspeed:.1f}x < 10x"
+    # (batch==sequential ranking parity for the pipeline workload is
+    # asserted bit-exactly in tests/test_sim_flows.py)
+    assert pbat.results[0].n_designs == 512
+    stats["batch_numpy_pipeline_512"] = {
+        "designs": 512, "wall_seconds": pwall, "survivors_per_sec": prate,
+        "speedup_vs_sequential": pspeed}
+    rows.append(("sim_batch_numpy_pipeline_B512", pwall / 512 * 1e6,
+                 f"{prate:,.1f} survivors/s ({pspeed:.1f}x sequential, "
+                 f"chain+balancer workload)"))
 
     # jax.lax.scan backend (compile once, report steady-state)
     try:

@@ -6,6 +6,13 @@ Prints ``name,us_per_call,derived`` CSV by default, as required.
 output across PRs; ``--out FILE`` writes it to a file as well.
 Paper-claims benchmarks print the reproduced number next to the paper's
 measured value.
+
+``--out`` refuses to overwrite an existing file whose JSON schema it
+does not recognize (anything that is not a row list) — the trajectory
+files the individual benchmarks own (``BENCH_dse.json``,
+``BENCH_sim.json``, ``BENCH_sim_batch.json``) are keyed documents, and a
+mistyped ``--out BENCH_dse.json`` used to silently clobber them.  Pass
+``--force`` to overwrite anyway.
 """
 import argparse
 import json
@@ -19,6 +26,43 @@ _ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
 
+ROW_KEYS = {"name", "us_per_call", "derived"}
+
+
+def is_row_list(doc) -> bool:
+    """True iff ``doc`` is this harness's own output schema: a list of
+    row dicts each carrying exactly the ``ROW_KEYS`` channels."""
+    return (isinstance(doc, list)
+            and all(isinstance(r, dict) and set(r) == ROW_KEYS
+                    for r in doc))
+
+
+def check_out_target(path, *, force: bool = False) -> None:
+    """Refuse to clobber an existing ``--out`` file we did not write.
+
+    A missing file, an empty file, or a previous row-list emission are
+    fine; any other schema (e.g. the keyed ``BENCH_*.json`` trajectory
+    documents, which individual benchmarks own) raises ``SystemExit``
+    unless ``force``.  Runs BEFORE the benchmarks so a bad target fails
+    in milliseconds, not after minutes of measurement.
+    """
+    if force or path is None or not os.path.exists(path):
+        return
+    with open(path) as f:
+        text = f.read()
+    if not text.strip():
+        return
+    try:
+        doc = json.loads(text)
+    except ValueError:
+        doc = None
+    if not is_row_list(doc):
+        raise SystemExit(
+            f"refusing to overwrite {path}: existing file is not a "
+            f"benchmark row list (keys {sorted(ROW_KEYS)}); it looks like "
+            "a file owned by another writer (e.g. a BENCH_*.json "
+            "trajectory document). Pass --force to overwrite anyway.")
+
 
 def main(argv=None) -> None:
     ap = argparse.ArgumentParser(description=__doc__)
@@ -26,7 +70,10 @@ def main(argv=None) -> None:
                     help="emit a JSON row list instead of CSV")
     ap.add_argument("--out", default=None,
                     help="also write the (JSON) output to this file")
+    ap.add_argument("--force", action="store_true",
+                    help="overwrite --out even if its schema is foreign")
     args = ap.parse_args(argv)
+    check_out_target(args.out, force=args.force)
 
     from benchmarks import (bench_contention, bench_dfs_traffic, bench_dse,
                             bench_kernels, bench_replication, bench_sim,

@@ -839,7 +839,9 @@ def closed_loop_score(result: SweepResult, trace, *,
                       sim_config=None,
                       batch: Optional[bool] = None,
                       backend: str = "numpy",
-                      trace_seed: int = 0) -> ClosedLoopScore:
+                      trace_seed: int = 0,
+                      flows=None,
+                      balancer_factory=None) -> ClosedLoopScore:
     """Re-rank static-sweep survivors by *simulated* runtime behaviour.
 
     The static objectives of :func:`grid_sweep` assume steady saturated
@@ -875,8 +877,18 @@ def closed_loop_score(result: SweepResult, trace, *,
     whatever generator state the caller happened to have.  Imports
     ``repro.sim`` lazily — the core DSE layer stays importable without
     the simulation subsystem.
+
+    Workload shape: ``flows`` (a ``repro.sim.FlowPattern``) scores the
+    survivors under a tile-to-tile / pipeline workload instead of the
+    default accelerator->MEM stream; ``balancer_factory`` (platform ->
+    ``repro.sim.LoadBalancer``) puts a replica-group admission policy in
+    the loop next to the DFS controller.  Both apply to the batched and
+    the sequential path alike, so the differential reference covers them.
+    On the batched path ``trace`` may also be a ``repro.sim.BatchTrace``
+    whose design axis matches the survivor count — each survivor then
+    replays its own arrival tensor.
     """
-    from repro.sim import SimConfig, SimEngine, SimPlatform
+    from repro.sim import BatchTrace, SimConfig, SimEngine, SimPlatform
 
     if callable(trace):
         trace = trace(trace_seed)
@@ -892,15 +904,25 @@ def closed_loop_score(result: SweepResult, trace, *,
         batch = controller_factory is None
     assert not (batch and controller_factory is not None), \
         "per-point controller_factory requires batch=False"
+    if isinstance(trace, BatchTrace):
+        # each survivor replays its own tensor row — a silent mismatch
+        # would pair survivor j with the wrong workload
+        assert trace.n_designs == indices.shape[0], \
+            (trace.n_designs, indices.shape[0])
 
     if batch:
         from repro.sim import BatchSimEngine, BatchSimPlatform
         platform = BatchSimPlatform.from_design_points(
-            model, result, indices, req_mb=req_mb, n_tg=result.n_tg)
+            model, result, indices, req_mb=req_mb, n_tg=result.n_tg,
+            flows=flows)
         controller = (batch_controller_factory(platform)
                       if batch_controller_factory is not None else None)
         engine = BatchSimEngine(platform, config=sim_config or SimConfig(),
-                                controller=controller, backend=backend)
+                                controller=controller,
+                                balancer=(balancer_factory(platform)
+                                          if balancer_factory is not None
+                                          else None),
+                                backend=backend)
         r = engine.run(trace)
         p99 = r.p99_latency_s
         ept = r.energy_per_request_j
@@ -914,13 +936,18 @@ def closed_loop_score(result: SweepResult, trace, *,
         for j, i in enumerate(indices):
             dp = result.design_point(int(i))
             platform = SimPlatform.from_design_point(
-                model, dp, result.workloads, req_mb=req_mb, n_tg=result.n_tg)
+                model, dp, result.workloads, req_mb=req_mb,
+                n_tg=result.n_tg, flows=flows)
             controller = (controller_factory(platform)
                           if controller_factory is not None else None)
             engine = SimEngine(platform,
                                config=sim_config or SimConfig(),
-                               controller=controller)
-            r = engine.run(trace)
+                               controller=controller,
+                               balancer=(balancer_factory(platform)
+                                         if balancer_factory is not None
+                                         else None))
+            r = engine.run(trace.design(j) if isinstance(trace, BatchTrace)
+                           else trace)
             results.append(r)
             p99[j] = r.p99_latency_s
             ept[j] = r.energy_per_request_j

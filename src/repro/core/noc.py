@@ -254,6 +254,23 @@ def stacked_incidence(cfg: NocConfig, src, dst) -> np.ndarray:
     return inc.reshape(shape + (t.n_links,))
 
 
+def flow_incidence(cfg: NocConfig, src, dst) -> Tuple[np.ndarray, np.ndarray]:
+    """(dense incidence, hop counts) for a batch of (src, dst) flows.
+
+    The one-call export the simulator's flow compiler consumes: one
+    broadcast of the (src, dst) pair arrays yields both the padded
+    ``(..., n_links)`` route->link incidence (:func:`stacked_incidence`
+    layout) and the matching ``(...,)`` hop counts gathered from the
+    precomputed hop matrix — so arbitrary tile-to-tile patterns pay the
+    same single table lookup the legacy tile->MEM pattern does.
+    """
+    t = routing_tables(cfg)
+    s = _as_indices(cfg, src)
+    d = _as_indices(cfg, dst)
+    s, d = np.broadcast_arrays(s, d)
+    return (stacked_incidence(cfg, s, d), t.hop_matrix[s, d])
+
+
 def link_loads_batch(cfg: NocConfig, src, dst, demand) -> np.ndarray:
     """Per-link offered load (bytes/cycle) of B flows: one bincount.
 

@@ -314,7 +314,7 @@ class SoCPerfModel:
 
     def service_time_terms_batch(self, *, wire_share, k,
                                  f_acc, f_noc, f_tg=1.0, n_tg=0,
-                                 pos=None, pos_idx=None):
+                                 pos=None, pos_idx=None, hop_counts=None):
         """Decomposed service time of the throughput kernel (numpy only).
 
         Returns ``(t_comp, t_wire, t_ref)`` — the compute term
@@ -326,8 +326,13 @@ class SoCPerfModel:
         stream-boundness signal the Fig.-4 DFS policy keys on, and dynamic
         NoC contention (from live per-tick flows) scales ``t_wire`` alone,
         leaving the compute term untouched.
+
+        ``hop_counts`` overrides the tile->MEM hop lookup with explicit
+        per-stream hop counts — how tile-to-tile flow patterns reuse this
+        kernel with each stream's actual route length.
         """
-        hop_counts = self.hop_counts(pos=pos, pos_idx=pos_idx)
+        if hop_counts is None:
+            hop_counts = self.hop_counts(pos=pos, pos_idx=pos_idx)
         w = np.asarray(wire_share, dtype=np.float64)
         k = np.asarray(k, dtype=np.float64)
         f_acc = np.maximum(np.asarray(f_acc, dtype=np.float64), 1e-3)

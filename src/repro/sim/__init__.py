@@ -10,13 +10,19 @@ engine.py    — tick-based batched event loop (flat arrays, no per-request
                tick_step/TickState numeric core every engine runs
 batch.py     — B design points co-simulated as ONE array program
                ((B, A) state, stacked incidence, vectorized DFS commits;
-               numpy reference + jax.lax.scan backend)
+               numpy reference + jax.lax.scan backend; shared Trace or
+               per-design BatchTrace arrival tensors)
+flows.py     — FlowPattern: tile-to-tile streams + accelerator chains
+               (stage completions feed the next stage), compiled per
+               design into the incidence/hop/forward arrays the tick
+               loop consumes (None == the legacy tile->MEM pattern)
 traffic.py   — composable arrival-trace generators (constant, Poisson,
                diurnal, MMPP-bursty, replay) scaling to millions of
-               requests
+               requests; BatchTrace stacks/broadcasts per-design tensors
 control.py   — controller harness: windowed C3 counter samples -> dfs
                policies -> dual-buffer actuator commits (scalar + the
-               vectorized multi-design BatchControllerHarness)
+               vectorized multi-design BatchControllerHarness) and the
+               LoadBalancer admission policy for replicated islands
 telemetry.py — ring-buffer time series + JSON export (per-design rings
                for the batched engine)
 
@@ -31,10 +37,12 @@ from repro.sim.batch import (  # noqa: F401
     BatchSimEngine, BatchSimPlatform, BatchSimResult)
 from repro.sim.control import (  # noqa: F401
     BatchControllerHarness, BatchSample, ControlAction, ControllerHarness,
-    IslandTopology)
+    IslandTopology, LoadBalancer)
+from repro.sim.flows import (  # noqa: F401
+    CompiledFlows, FlowPattern, compile_flows)
 from repro.sim.telemetry import (  # noqa: F401
     BatchTelemetry, RingBuffer, Telemetry, TelemetrySchema,
     weighted_percentiles)
 from repro.sim.traffic import (  # noqa: F401
-    Trace, constant_trace, diurnal_trace, mmpp_trace, poisson_trace,
-    replay_trace, superpose, with_total)
+    BatchTrace, Trace, constant_trace, diurnal_trace, mmpp_trace,
+    poisson_trace, replay_trace, superpose, with_total)

@@ -22,15 +22,22 @@ advances ``(B, A)`` arrays:
   for SoC-size fabrics);
 * DFS controllers run vectorized: policy decisions on ``(B, I)`` counter
   windows, dual-buffer commits as masked array swaps
-  (:class:`~repro.sim.control.BatchControllerHarness`).
+  (:class:`~repro.sim.control.BatchControllerHarness`);
+* the workload may be a shared :class:`~repro.sim.traffic.Trace` or a
+  per-design ``(T, B, A)`` :class:`~repro.sim.traffic.BatchTrace`
+  (broadcasting a shared trace reproduces it bit-for-bit), shaped by an
+  optional :class:`~repro.sim.flows.FlowPattern` (tile-to-tile streams,
+  chained stages) with a :class:`~repro.sim.control.LoadBalancer`
+  splitting arrivals across replica groups.
 
 Two backends: ``"numpy"`` (float64, the ground-truth reference) and
 ``"jax"`` — the tick loop as one ``jax.lax.scan`` (jit-compiled; float32
 unless ``jax_enable_x64``), so the whole grid_sweep -> Pareto -> batched
 co-sim pipeline can run jitted end to end.  The jax backend supports
-open-loop replay and the vectorized membound/PID policies (+ queue
-guard); it records no telemetry rings (latency percentiles are still
-reconstructed exactly from the returned histories).
+open-loop replay, the vectorized membound/PID policies (+ queue guard),
+flow patterns, per-design traces and the balancer; it records no
+telemetry rings (latency percentiles are still reconstructed exactly
+from the returned histories).
 """
 from __future__ import annotations
 
@@ -43,14 +50,14 @@ import numpy as np
 
 from repro.core.islands import (IslandConfig, IslandSpec, NOC_LADDER,
                                 TILE_LADDER)
-from repro.core.noc import (pos_index, positions_to_indices,
-                            stacked_incidence)
+from repro.core.noc import pos_index, positions_to_indices
 from repro.core.perfmodel import SoCPerfModel
-from repro.sim.control import BatchControllerHarness
+from repro.sim.control import BatchControllerHarness, LoadBalancer
 from repro.sim.engine import (PKT_BYTES, SimConfig, SimPlatform, StepConsts,
                               TickState, latency_percentiles, tick_step)
+from repro.sim.flows import FlowPattern, compile_flows
 from repro.sim.telemetry import BatchTelemetry, TelemetrySchema
-from repro.sim.traffic import Trace
+from repro.sim.traffic import BatchTrace, Trace
 
 
 # ---------------------------------------------------------------------------
@@ -78,6 +85,7 @@ class BatchSimPlatform:
     rates: np.ndarray                   # (B, I) initial island rates
     f_tg: np.ndarray                    # (B,)
     n_tg: int = 0
+    flows: Optional[FlowPattern] = None  # shared tile-to-tile pattern
 
     @property
     def n_designs(self) -> int:
@@ -102,7 +110,9 @@ class BatchSimPlatform:
             assert p.islands.names() == isl_names, "island structure mismatch"
             assert tuple(i.tiles for i in p.islands.islands) == isl_tiles
             assert p.n_tg == p0.n_tg, "n_tg mismatch"
+            assert p.flows == p0.flows, "flow-pattern mismatch"
         return cls(
+            flows=p0.flows,
             model=p0.model, islands=p0.islands, names=p0.names,
             base_mbps=np.stack([p.base_mbps for p in platforms]),
             wire_share=np.stack([p.wire_share for p in platforms]),
@@ -117,7 +127,8 @@ class BatchSimPlatform:
     @classmethod
     def from_design_points(cls, model: SoCPerfModel, result, indices,
                            *, req_mb: float = 0.1,
-                           n_tg: Optional[int] = None
+                           n_tg: Optional[int] = None,
+                           flows: Optional[FlowPattern] = None
                            ) -> "BatchSimPlatform":
         """Bridge from the DSE layer: stack ``grid_sweep`` survivors (flat
         :class:`~repro.core.dse.SweepResult` /
@@ -158,7 +169,8 @@ class BatchSimPlatform:
             wire_share=tile_const([w.wire_share for w in wls]),
             k=da["k"], pos_idx=pos_idx.astype(np.int64),
             req_mb=np.full((B, A), float(req_mb)),
-            rates=da["rates"], f_tg=da["f_tg"], n_tg=int(n_tg))
+            rates=da["rates"], f_tg=da["f_tg"], n_tg=int(n_tg),
+            flows=flows)
 
     def design(self, b: int) -> SimPlatform:
         """Materialize design ``b`` as a sequential :class:`SimPlatform`
@@ -171,7 +183,7 @@ class BatchSimPlatform:
             names=self.names, base_mbps=self.base_mbps[b].copy(),
             wire_share=self.wire_share[b].copy(), k=self.k[b].copy(),
             pos_idx=self.pos_idx[b].copy(), req_mb=self.req_mb[b].copy(),
-            n_tg=self.n_tg, f_tg=float(self.f_tg[b]))
+            n_tg=self.n_tg, f_tg=float(self.f_tg[b]), flows=self.flows)
 
 
 # ---------------------------------------------------------------------------
@@ -185,8 +197,11 @@ class BatchSimResult:
     n_designs: int
     ticks: int
     dt: float
-    offered: float                      # identical trace for every design
-    completed: np.ndarray
+    offered: object                     # float (shared trace) or (B,)
+                                        # per-design totals (BatchTrace)
+    completed: np.ndarray               # exit-stage services under a
+                                        # chained FlowPattern (each
+                                        # external request once)
     dropped: np.ndarray
     residual: np.ndarray
     throughput_rps: np.ndarray
@@ -232,19 +247,27 @@ class BatchSimEngine:
     def __init__(self, platform: BatchSimPlatform, *,
                  config: SimConfig = SimConfig(),
                  controller: Optional[BatchControllerHarness] = None,
+                 balancer: Optional[LoadBalancer] = None,
                  backend: str = "numpy"):
         assert backend in ("numpy", "jax"), backend
         self.platform = platform
         self.config = config
         self.controller = controller
+        self.balancer = balancer
         self.backend = backend
         self.last_state: Optional[TickState] = None
         self.last_histories = None      # (admitted, served) (T, B, A)
         m = platform.model
-        mem_idx = pos_index(m.noc, m.mem_pos)
-        # per-design route->link incidence, stacked dense: (B, A, L)
-        self._inc = stacked_incidence(m.noc, platform.pos_idx, mem_idx)
-        self._hop_counts = m.hop_counts(pos_idx=platform.pos_idx)
+        # per-design route->link incidence, stacked dense: (B, A, L) —
+        # per-design routes of the (shared, name-keyed) flow pattern
+        # against each design's own placement (tile->MEM when flows=None)
+        cf = compile_flows(m, platform.names, platform.pos_idx,
+                           platform.flows)
+        self._compiled_flows = cf
+        self._inc = cf.inc
+        self._hop_counts = cf.hop_counts
+        self._flow_demand = cf.demand
+        self._forward = cf.forward
         self._t_comp_ref = (1.0 - platform.wire_share) / platform.k
         isl_names = platform.islands.names()
         self._island_of_tile = np.asarray(
@@ -268,7 +291,7 @@ class BatchSimEngine:
         t_comp, t_wire, t_ref = p.model.service_time_terms_batch(
             wire_share=p.wire_share, k=p.k, f_acc=f_tile,
             f_noc=f_noc[:, None], f_tg=p.f_tg[:, None], n_tg=p.n_tg,
-            pos_idx=p.pos_idx)
+            hop_counts=self._hop_counts)
         return {"t_comp": np.broadcast_to(t_comp, (B, A)),
                 "t_wire": np.broadcast_to(t_wire, (B, A)),
                 "t_ref": np.broadcast_to(np.asarray(t_ref, float), (B, A)),
@@ -286,23 +309,50 @@ class BatchSimEngine:
         return StepConsts(
             base_mbps=p.base_mbps, req_mb=p.req_mb,
             hop_counts=self._hop_counts, inc=self._inc,
-            own_demand=p.model.own_demand, link_bw=p.model.noc.link_bw,
+            own_demand=self._flow_demand, link_bw=p.model.noc.link_bw,
             max_slow=p.model.noc.max_slowdown,
             hop_latency=p.model.noc.hop_latency,
             noc_power_share=cfg.noc_power_share, dt=dt,
             max_queue=cfg.max_queue,
-            dynamic_contention=cfg.dynamic_contention)
+            dynamic_contention=cfg.dynamic_contention,
+            forward=self._forward)
+
+    def _check_trace(self, trace) -> None:
+        p = self.platform
+        assert trace.n_dests == p.n_tiles, (trace.n_dests, p.n_tiles)
+        if isinstance(trace, BatchTrace):
+            assert trace.n_designs == p.n_designs, \
+                (trace.n_designs, p.n_designs)
+
+    @staticmethod
+    def _offered(trace):
+        """External offered load: one float for a shared trace, per-design
+        (B,) totals for a :class:`BatchTrace`."""
+        if isinstance(trace, BatchTrace):
+            return trace.n_requests
+        return float(trace.arrivals.sum())
+
+    def _completed(self, served_hist: np.ndarray) -> np.ndarray:
+        """(B,) external completions.  Chained patterns count only
+        exit-stage services (each request once); the chain-free
+        expression is kept verbatim (bit-for-bit)."""
+        if self._forward is None:
+            return served_hist.sum(axis=(0, 2))
+        return (served_hist
+                * self._compiled_flows.exit_mask).sum(axis=(0, 2))
 
     # ---------------------------------------------------------------- run
-    def run(self, trace: Trace) -> BatchSimResult:
+    def run(self, trace) -> BatchSimResult:
+        """Replay a shared :class:`Trace` (every design sees the same
+        (T, A) arrivals) or a per-design :class:`BatchTrace` (T, B, A)."""
         if self.backend == "jax":
             return self._run_jax(trace)
         return self._run_numpy(trace)
 
-    def _run_numpy(self, trace: Trace) -> BatchSimResult:
+    def _run_numpy(self, trace) -> BatchSimResult:
         p, cfg = self.platform, self.config
         B, A, T, dt = p.n_designs, p.n_tiles, trace.ticks, trace.dt
-        assert trace.n_dests == A, (trace.n_dests, A)
+        self._check_trace(trace)
         arrivals = trace.arrivals
 
         if self.controller is not None:
@@ -317,6 +367,9 @@ class BatchSimEngine:
 
         st = TickState.zeros((B, A))
         consts = self.step_consts(dt)
+        carry = np.zeros((B, A)) if consts.forward is not None else None
+        prev_cap = (self.capacity_rps(rates) * dt
+                    if self.balancer is not None else None)
         admitted_hist = np.zeros((T, B, A))
         served_hist = np.zeros((T, B, A))
         win_busy = np.zeros((B, A))
@@ -331,7 +384,16 @@ class BatchSimEngine:
 
         wall0 = time.perf_counter()
         for t_i in range(T):
-            out = tick_step(st, arrivals[t_i], svc, consts)
+            arr = arrivals[t_i]
+            if carry is not None:
+                arr = arr + carry
+            if self.balancer is not None:
+                arr = self.balancer.split(arr, st.queue, prev_cap)
+            out = tick_step(st, arr, svc, consts)
+            if carry is not None:
+                carry = out.forwarded
+            if self.balancer is not None:
+                prev_cap = out.cap_tick
             admitted_hist[t_i] = out.admitted
             served_hist[t_i] = out.served
 
@@ -381,7 +443,7 @@ class BatchSimEngine:
         self.last_state = st
         self.last_histories = (admitted_hist, served_hist)
         return self._result(trace, admitted_hist, served_hist,
-                            completed=served_hist.sum(axis=(0, 2)),
+                            completed=self._completed(served_hist),
                             dropped=np.asarray(st.dropped, dtype=np.float64),
                             residual=st.queue.sum(axis=-1),
                             energy=np.asarray(st.energy, dtype=np.float64),
@@ -402,7 +464,7 @@ class BatchSimEngine:
         sim_seconds = T * dt
         return BatchSimResult(
             n_designs=B, ticks=T, dt=dt,
-            offered=float(trace.arrivals.sum()),
+            offered=self._offered(trace),
             completed=completed, dropped=dropped, residual=residual,
             throughput_rps=(completed / sim_seconds if sim_seconds
                             else np.zeros(B)),
@@ -453,7 +515,7 @@ class BatchSimEngine:
                 f"{type(ctl.policy).__name__}")
         return plan
 
-    def _run_jax(self, trace: Trace) -> BatchSimResult:
+    def _run_jax(self, trace) -> BatchSimResult:
         import jax
         import jax.numpy as jnp
         from jax import lax
@@ -461,7 +523,7 @@ class BatchSimEngine:
 
         p, cfg = self.platform, self.config
         B, A, T, dt = p.n_designs, p.n_tiles, trace.ticks, trace.dt
-        assert trace.n_dests == A, (trace.n_dests, A)
+        self._check_trace(trace)
         m = p.model
         plan = self._control_plan()
         kind = plan["kind"]
@@ -483,7 +545,33 @@ class BatchSimEngine:
         f_tg = jnp.asarray(p.f_tg)
         island_of_tile = jnp.asarray(self._island_of_tile)
         noc_idx = self._noc_island
-        own = m.own_demand
+        own = m.own_demand                  # static TG-saturation term
+        demand = jnp.asarray(np.asarray(self._flow_demand,
+                                        dtype=np.float64))  # live link loads
+        has_fwd = self._forward is not None
+        fwdM = jnp.asarray(self._forward) if has_fwd else None
+        lb = self.balancer
+        if lb is not None:
+            lbM = jnp.asarray(lb.membership)
+            lb_gof = jnp.asarray(lb.group_of)
+            lb_cov = jnp.asarray(lb.covered)
+            lb_mode = lb.mode
+
+            def lb_split(arr, queue, cap):
+                if lb_mode == "even":
+                    w = jnp.ones_like(arr)
+                elif lb_mode == "capacity":
+                    w = cap
+                else:
+                    w = cap / (1.0 + queue)
+                tot = jnp.einsum("ba,ga->bg", arr, lbM)
+                wsum = jnp.einsum("ba,ga->bg", w, lbM)
+                # all-zero weight groups fall back to an even split,
+                # mirroring LoadBalancer.split
+                w = jnp.where((wsum <= 0.0)[:, lb_gof], 1.0, w)
+                wsum = jnp.einsum("ba,ga->bg", w, lbM)
+                shared = tot[:, lb_gof] * (w / wsum[:, lb_gof])
+                return jnp.where(lb_cov, shared, arr)
         tgd = m.tg_demand
         link_bw = m.noc.link_bw
         max_slow = m.noc.max_slowdown
@@ -524,18 +612,23 @@ class BatchSimEngine:
         def step(carry, xs):
             arr_t, ctl_flag = xs
             (queue, busy, rtt, rates, guard, pid_i, pid_prev, pid_has,
-             ctl_busy, dropped, energy, swaps) = carry
+             ctl_busy, dropped, energy, swaps, carry_fwd, prev_cap) = carry
             t_comp, t_wire, f_tile, f_noc = service(rates)
 
-            q = queue + arr_t
-            adm = jnp.broadcast_to(arr_t, q.shape)
+            arr_eff = jnp.broadcast_to(arr_t, queue.shape)
+            if has_fwd:
+                arr_eff = arr_eff + carry_fwd
+            if lb is not None:
+                arr_eff = lb_split(arr_eff, queue, prev_cap)
+            q = queue + arr_eff
+            adm = arr_eff
             if max_q != float("inf"):
                 over = jnp.maximum(q - max_q, 0.0)
                 q = q - over
                 adm = adm - over
                 dropped = dropped + over.sum(axis=-1)
             if dyn_on:
-                loads = jnp.einsum("ba,bal->bl", own * busy, inc)
+                loads = jnp.einsum("ba,bal->bl", demand * busy, inc)
                 rho = ((inc * loads[:, None, :]).max(axis=-1)
                        / (link_bw * f_noc[:, None]))
                 r = jnp.minimum(rho, 0.999)
@@ -548,6 +641,10 @@ class BatchSimEngine:
             queue = q - served
             busy = served / cap
             rtt = rtt + hop_counts * dyn * hop_lat
+            if has_fwd:
+                carry_fwd = jnp.einsum("ba,aj->bj", served, fwdM)
+            if lb is not None:
+                prev_cap = cap
 
             tile_power = jnp.sum(
                 P_STATIC_W + P_DYN_W * f_tile * voltage2(f_tile) * busy,
@@ -611,14 +708,16 @@ class BatchSimEngine:
                                           False)
             ctl_busy = jnp.where(ctl_flag, 0.0, ctl_busy)
             carry = (queue, busy, rtt, rates, guard, pid_i, pid_prev,
-                     pid_has, ctl_busy, dropped, energy, swaps)
+                     pid_has, ctl_busy, dropped, energy, swaps, carry_fwd,
+                     prev_cap)
             return carry, (adm, served)
 
-        def run_scan(arrivals, rates0, guard0, pid_i0, pid_prev0, pid_has0):
+        def run_scan(arrivals, rates0, guard0, pid_i0, pid_prev0, pid_has0,
+                     cap0):
             zBA = jnp.zeros((B, A))
             carry0 = (zBA, zBA, zBA, rates0, guard0, pid_i0, pid_prev0,
                       pid_has0, zBA, jnp.zeros(B), jnp.zeros(B),
-                      jnp.zeros(B, dtype=jnp.int32))
+                      jnp.zeros(B, dtype=jnp.int32), zBA, cap0)
             return lax.scan(step, carry0, (arrivals, jnp.asarray(is_ctl)))
 
         # cache the jitted scan per (T, ci): repeated runs of one engine
@@ -645,14 +744,18 @@ class BatchSimEngine:
             pid_i0 = np.asarray(ctl.policy._integral)
             pid_prev0 = np.asarray(ctl.policy._prev_err)
             pid_has0 = np.ones((), dtype=bool)
+        cap0 = (self.capacity_rps(rates0) * dt if lb is not None
+                else np.zeros((B, A)))
 
         wall0 = time.perf_counter()
         carryF, (admitted, served) = run_scan(
             jnp.asarray(trace.arrivals), jnp.asarray(rates0),
             jnp.asarray(guard0), jnp.asarray(pid_i0),
-            jnp.asarray(pid_prev0), jnp.asarray(pid_has0))
+            jnp.asarray(pid_prev0), jnp.asarray(pid_has0),
+            jnp.asarray(cap0))
         (queueF, busyF, rttF, ratesF, guardF, pid_iF, pid_prevF, pid_hasF,
-         _ctlb, droppedF, energyF, swapsF) = [np.asarray(x) for x in carryF]
+         _ctlb, droppedF, energyF, swapsF, _fwdF, _capF) = [
+             np.asarray(x) for x in carryF]
         admitted = np.asarray(admitted, dtype=np.float64)
         served = np.asarray(served, dtype=np.float64)
         elapsed = time.perf_counter() - wall0
@@ -678,7 +781,7 @@ class BatchSimEngine:
         self.last_histories = (admitted, served)
         return self._result(
             trace, admitted, served,
-            completed=served.sum(axis=(0, 2)),
+            completed=self._completed(served),
             dropped=droppedF.astype(np.float64),
             residual=queueF.astype(np.float64).sum(axis=-1),
             energy=energyF.astype(np.float64),

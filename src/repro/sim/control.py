@@ -156,6 +156,94 @@ class ControllerHarness:
 
 
 # ---------------------------------------------------------------------------
+# Admission / load balancing across replicated accelerator groups
+# ---------------------------------------------------------------------------
+
+
+class LoadBalancer:
+    """Vectorized admission policy: redistribute each tick's incoming
+    requests across groups of interchangeable accelerator tiles.
+
+    The trace (and any chained stage's forwarded completions) addresses
+    *logical* destinations; when a destination is replicated across an
+    island group, a front-end balancer decides which replica actually
+    enqueues the request.  Modes:
+
+    * ``"even"``     — uniform split (the static baseline),
+    * ``"capacity"`` — proportional to each replica's current service
+      capacity, so a DFS-derated island automatically sheds load to its
+      faster peers (the co-action the scenario gate measures),
+    * ``"adaptive"`` — capacity divided by (1 + backlog): capacity-aware
+      *and* backlog-draining, the default.
+
+    Shape-agnostic: ``split`` operates on the trailing tile axis with any
+    leading axes, and all contractions are einsum (sequential contracted
+    accumulation), so the sequential engine and a B=1 batch row run the
+    exact same floats — the balancer is part of the differential surface.
+    Requests for tiles outside every group pass through untouched, and
+    each group's split sums to its offered load by construction.
+    """
+
+    MODES = ("even", "capacity", "adaptive")
+
+    def __init__(self, groups, tile_names, *, mode: str = "adaptive"):
+        assert mode in self.MODES, f"mode {mode!r} not in {self.MODES}"
+        self.mode = mode
+        tile_names = tuple(tile_names)
+        A = len(tile_names)
+        if isinstance(groups, dict):
+            groups = list(groups.values())
+        idx: List[np.ndarray] = []
+        taken: set = set()
+        for g in groups:
+            g = tuple(g)
+            assert g, "empty balancer group"
+            for t in g:
+                assert t in tile_names, f"unknown tile {t!r} in group"
+                assert t not in taken, f"tile {t!r} in two balancer groups"
+                taken.add(t)
+            idx.append(np.asarray([tile_names.index(t) for t in g],
+                                  dtype=np.int64))
+        G = len(idx)
+        self.membership = np.zeros((G, A), dtype=np.float64)
+        for gi, ids in enumerate(idx):
+            self.membership[gi, ids] = 1.0
+        self.covered = self.membership.sum(axis=0) > 0          # (A,) bool
+        # tile -> its group (0 where uncovered; masked by ``covered``)
+        self.group_of = np.zeros(A, dtype=np.int64)
+        for gi, ids in enumerate(idx):
+            self.group_of[ids] = gi
+
+    def weights(self, queue: np.ndarray, cap: np.ndarray) -> np.ndarray:
+        """Per-tile split weight (strictly positive for live tiles)."""
+        if self.mode == "even":
+            return np.ones_like(np.asarray(queue, dtype=np.float64))
+        if self.mode == "capacity":
+            return np.asarray(cap, dtype=np.float64)
+        return np.asarray(cap, dtype=np.float64) / (1.0 + queue)
+
+    def split(self, arr: np.ndarray, queue: np.ndarray,
+              cap: np.ndarray) -> np.ndarray:
+        """Redistribute one tick's arrivals within each group.
+
+        ``arr``/``queue``/``cap`` are ``(..., A)``; returns a new
+        ``(..., A)`` array whose per-group sums equal ``arr``'s.
+        """
+        if not self.covered.any():
+            return np.asarray(arr, dtype=np.float64)
+        arr = np.asarray(arr, dtype=np.float64)
+        w = self.weights(queue, cap)
+        tot = np.einsum("...a,ga->...g", arr, self.membership)
+        wsum = np.einsum("...a,ga->...g", w, self.membership)
+        # a group whose every replica weighs 0 (e.g. cap forced to 0)
+        # falls back to an even split — requests are never discarded
+        w = np.where((wsum <= 0.0)[..., self.group_of], 1.0, w)
+        wsum = np.einsum("...a,ga->...g", w, self.membership)
+        shared = tot[..., self.group_of] * (w / wsum[..., self.group_of])
+        return np.where(self.covered, shared, arr)
+
+
+# ---------------------------------------------------------------------------
 # Batched (multi-design) harness — sim/batch.py's controller
 # ---------------------------------------------------------------------------
 

@@ -45,8 +45,9 @@ import numpy as np
 
 from repro.core.islands import (IslandConfig, IslandSpec, NOC_LADDER,
                                 TILE_LADDER)
-from repro.core.noc import contention_slowdown, pos_index, routing_tables
+from repro.core.noc import contention_slowdown, pos_index
 from repro.core.perfmodel import AccelWorkload, SoCPerfModel, chip_power
+from repro.sim.flows import FlowPattern, compile_flows
 from repro.sim.telemetry import (Telemetry, TelemetrySchema,
                                  weighted_percentiles)
 from repro.sim.traffic import Trace
@@ -66,7 +67,9 @@ class SimPlatform:
 
     Tile order is the trace's destination order.  ``islands`` is the
     *initial* island partition/rates; the controller (if any) evolves it
-    through its actuator at run time.
+    through its actuator at run time.  ``flows`` is an optional
+    :class:`~repro.sim.flows.FlowPattern` naming tile-to-tile streams and
+    accelerator chains; ``None`` keeps the legacy tile->MEM workload.
     """
     model: SoCPerfModel
     islands: IslandConfig
@@ -78,6 +81,7 @@ class SimPlatform:
     req_mb: np.ndarray              # (A,) MB of stream payload per request
     n_tg: int = 0
     f_tg: float = 1.0
+    flows: Optional["FlowPattern"] = None
 
     @property
     def n_tiles(self) -> int:
@@ -91,7 +95,8 @@ class SimPlatform:
               island_groups: Optional[Dict[str, Sequence[str]]] = None,
               rates: Optional[Dict[str, float]] = None,
               noc_rate: float = 1.0, req_mb: float = 0.1,
-              n_tg: int = 0, f_tg: float = 1.0) -> "SimPlatform":
+              n_tg: int = 0, f_tg: float = 1.0,
+              flows: Optional["FlowPattern"] = None) -> "SimPlatform":
         """Assemble a platform from parallel workload/position lists.
 
         ``island_groups`` maps island name -> tile names (default: every
@@ -127,12 +132,13 @@ class SimPlatform:
             pos_idx=np.asarray([pos_index(model.noc, tuple(p))
                                 for p in positions], dtype=np.int64),
             req_mb=np.full(len(names), float(req_mb)),
-            n_tg=int(n_tg), f_tg=float(f_tg))
+            n_tg=int(n_tg), f_tg=float(f_tg), flows=flows)
 
     @classmethod
     def from_design_point(cls, model: SoCPerfModel, dp,
                           workloads: Sequence[AccelWorkload],
-                          *, req_mb: float = 0.1, n_tg: int = 0
+                          *, req_mb: float = 0.1, n_tg: int = 0,
+                          flows: Optional["FlowPattern"] = None
                           ) -> "SimPlatform":
         """Bridge from the DSE layer: instantiate a ``grid_sweep``
         survivor (a :class:`~repro.core.dse.DesignPoint`) for replay —
@@ -151,7 +157,8 @@ class SimPlatform:
             rates={**{w.name: float(dp.rates.get(w.name, shared))
                       for w in workloads},
                    "noc_mem": float(dp.rates.get("noc_mem", 1.0))},
-            req_mb=req_mb, n_tg=n_tg, f_tg=float(dp.rates.get("tg", 1.0)))
+            req_mb=req_mb, n_tg=n_tg, f_tg=float(dp.rates.get("tg", 1.0)),
+            flows=flows)
 
 
 # ---------------------------------------------------------------------------
@@ -193,12 +200,20 @@ class TickState:
 
 @dataclass(frozen=True)
 class StepConsts:
-    """Per-run constants of :func:`tick_step` (platform + config digest)."""
+    """Per-run constants of :func:`tick_step` (platform + config digest).
+
+    ``own_demand`` is the bytes/cycle each tile's output stream offers
+    while busy — a scalar for the legacy uniform-demand MEM pattern, an
+    ``(A,)`` vector under a :class:`~repro.sim.flows.FlowPattern` with
+    per-flow demands.  ``forward`` is the optional ``(A, A)`` chain
+    coupling (stage completions -> next stage's queue); ``None`` keeps
+    the tick numerically identical to the chain-free engine.
+    """
     base_mbps: np.ndarray       # (..., A)
     req_mb: np.ndarray          # (..., A)
     hop_counts: np.ndarray      # (..., A)
     inc: np.ndarray             # (..., A, L) route->link incidence
-    own_demand: float
+    own_demand: object          # float or (A,) per-flow bytes/cycle
     link_bw: float
     max_slow: float
     hop_latency: float
@@ -206,6 +221,7 @@ class StepConsts:
     dt: float
     max_queue: float
     dynamic_contention: bool
+    forward: Optional[np.ndarray] = None    # (A, A) chain coupling
 
 
 @dataclass(frozen=True)
@@ -219,6 +235,8 @@ class TickOut:
     dyn: np.ndarray             # (..., A) contention slowdown on the wire
     tile_power: np.ndarray      # (...)
     noc_power: np.ndarray       # (...)
+    forwarded: Optional[np.ndarray] = None  # (..., A) chained completions
+                                            # to enqueue NEXT tick
 
 
 def tick_step(st: TickState, arr_t: np.ndarray, svc: Dict[str, np.ndarray],
@@ -264,8 +282,14 @@ def tick_step(st: TickState, arr_t: np.ndarray, svc: Dict[str, np.ndarray],
     tile_power = np.sum(chip_power(svc["f_tile"], st.busy), axis=-1)
     noc_power = c.noc_power_share * chip_power(f_noc, 1.0)
     st.energy += (tile_power + noc_power) * c.dt
+    # chain coupling: a share of each stage's completions becomes next
+    # tick's arrivals at the following stage (einsum keeps the contracted
+    # accumulation order identical for (A,) and (B, A) layouts)
+    forwarded = (np.einsum("...a,aj->...j", served, c.forward)
+                 if c.forward is not None else None)
     return TickOut(admitted=adm, served=served, cap_tick=cap_tick, rho=rho,
-                   dyn=dyn, tile_power=tile_power, noc_power=noc_power)
+                   dyn=dyn, tile_power=tile_power, noc_power=noc_power,
+                   forwarded=forwarded)
 
 
 def percentile_samples(admitted: np.ndarray, served: np.ndarray,
@@ -325,8 +349,12 @@ class SimConfig:
 class SimResult:
     ticks: int
     dt: float
-    offered: float                      # requests offered by the trace
-    completed: float                    # requests served
+    offered: float                      # external requests from the trace
+    completed: float                    # requests served; under a chained
+                                        # FlowPattern only EXIT-stage
+                                        # services count (each external
+                                        # request completes once, not once
+                                        # per stage)
     dropped: float                      # admission drops (max_queue)
     residual: float                     # still queued when the trace ended
     throughput_rps: float               # completed / simulated seconds
@@ -364,25 +392,25 @@ class SimEngine:
     """Ticks a :class:`SimPlatform` through a trace, controller in loop."""
 
     def __init__(self, platform: SimPlatform, *,
-                 config: SimConfig = SimConfig(), controller=None):
+                 config: SimConfig = SimConfig(), controller=None,
+                 balancer=None):
         self.platform = platform
         self.config = config
         self.controller = controller    # a control.ControllerHarness or None
+        self.balancer = balancer        # a control.LoadBalancer or None
         self.last_state: Optional[TickState] = None          # set by run()
         self.last_histories = None      # (admitted, served) (T, A) arrays
         m = platform.model
-        A = platform.n_tiles
-        # static route->link incidence of each tile's stream to MEM:
-        # inc[a, l] == 1 iff tile a's XY route to the MEM tile uses link l
-        t = routing_tables(m.noc)
-        mem_idx = pos_index(m.noc, m.mem_pos)
-        inc = np.zeros((A, t.n_links), dtype=np.float64)
-        for a, s in enumerate(platform.pos_idx):
-            pair = int(s) * t.n_nodes + mem_idx
-            ids = t.link_ids[t.route_offsets[pair]:t.route_offsets[pair + 1]]
-            inc[a, ids] = 1.0
-        self._inc = inc
-        self._hop_counts = m.hop_counts(pos_idx=platform.pos_idx)
+        # static route->link incidence of each tile's output stream
+        # (tile->MEM unless the platform carries a FlowPattern):
+        # inc[a, l] == 1 iff tile a's XY route to its destination uses l
+        cf = compile_flows(m, platform.names, platform.pos_idx,
+                           platform.flows)
+        self._compiled_flows = cf
+        self._inc = cf.inc
+        self._hop_counts = cf.hop_counts
+        self._flow_demand = cf.demand
+        self._forward = cf.forward
         # compute term at the reference rate f_acc=1 (boundness baseline)
         self._t_comp_ref = (1.0 - platform.wire_share) / platform.k
         # tile -> island index (stable across with_rates: order preserved)
@@ -412,7 +440,7 @@ class SimEngine:
         f_tile, f_noc, island_rates = self._rates(cfg)
         t_comp, t_wire, t_ref = p.model.service_time_terms_batch(
             wire_share=p.wire_share, k=p.k, f_acc=f_tile, f_noc=f_noc,
-            f_tg=p.f_tg, n_tg=p.n_tg, pos_idx=p.pos_idx)
+            f_tg=p.f_tg, n_tg=p.n_tg, hop_counts=self._hop_counts)
         return {"t_comp": np.broadcast_to(t_comp, (p.n_tiles,)),
                 "t_wire": np.broadcast_to(t_wire, (p.n_tiles,)),
                 "t_ref": np.broadcast_to(np.asarray(t_ref, float),
@@ -435,12 +463,13 @@ class SimEngine:
         return StepConsts(
             base_mbps=p.base_mbps, req_mb=p.req_mb,
             hop_counts=self._hop_counts, inc=self._inc,
-            own_demand=p.model.own_demand, link_bw=p.model.noc.link_bw,
+            own_demand=self._flow_demand, link_bw=p.model.noc.link_bw,
             max_slow=p.model.noc.max_slowdown,
             hop_latency=p.model.noc.hop_latency,
             noc_power_share=cfg.noc_power_share, dt=dt,
             max_queue=cfg.max_queue,
-            dynamic_contention=cfg.dynamic_contention)
+            dynamic_contention=cfg.dynamic_contention,
+            forward=self._forward)
 
     # ---------------------------------------------------------------- run
     def run(self, trace: Trace) -> SimResult:
@@ -458,6 +487,12 @@ class SimEngine:
 
         st = TickState.zeros((A,))
         consts = self.step_consts(dt)
+        # chain state: completions forwarded into the NEXT tick's queues
+        carry = np.zeros(A) if consts.forward is not None else None
+        # the balancer redistributes on last tick's capacity (init: the
+        # uncontended capacity of the starting config)
+        prev_cap = (self.capacity_rps(live) * dt
+                    if self.balancer is not None else None)
         admitted_hist = np.zeros((T, A))
         served_hist = np.zeros((T, A))
         # controller/telemetry window accumulators
@@ -475,7 +510,16 @@ class SimEngine:
 
         wall0 = time.perf_counter()
         for t_i in range(T):
-            out = tick_step(st, arrivals[t_i], svc, consts)
+            arr = arrivals[t_i]
+            if carry is not None:
+                arr = arr + carry
+            if self.balancer is not None:
+                arr = self.balancer.split(arr, st.queue, prev_cap)
+            out = tick_step(st, arr, svc, consts)
+            if carry is not None:
+                carry = out.forwarded
+            if self.balancer is not None:
+                prev_cap = out.cap_tick
             admitted_hist[t_i] = out.admitted
             served_hist[t_i] = out.served
 
@@ -531,7 +575,11 @@ class SimEngine:
         self.last_state = st
         self.last_histories = (admitted_hist, served_hist)
 
-        completed = float(served_hist.sum())
+        # chained patterns complete a request ONCE, at its exit stage;
+        # the chain-free expression is kept verbatim (bit-for-bit)
+        completed = (float(served_hist.sum()) if self._forward is None
+                     else float((served_hist
+                                 * self._compiled_flows.exit_mask).sum()))
         offered = float(arrivals.sum())
         p50, p99 = latency_percentiles(admitted_hist, served_hist, dt)
         sim_seconds = T * dt

@@ -60,6 +60,76 @@ class Trace:
         return replace(self, arrivals=self.arrivals[start:stop])
 
 
+@dataclass(frozen=True)
+class BatchTrace:
+    """Per-design arrival tensor for the batched co-sim engine.
+
+    ``arrivals[t, b, a]`` requests arrive at tile ``a`` of design ``b``
+    during tick ``t`` — every stacked design can replay its *own*
+    workload in the one batched run (heterogeneous trace seeds, per-design
+    rate scaling, recorded logs per candidate).  :meth:`broadcast` lifts a
+    shared :class:`Trace` to the batch shape as a zero-copy view; the
+    engine's elementwise tick math makes the broadcast replay bit-for-bit
+    identical to passing the shared trace directly (tested).
+    """
+    arrivals: np.ndarray            # (ticks, n_designs, n_dests) >= 0
+    dt: float
+
+    def __post_init__(self):
+        a = np.asarray(self.arrivals, dtype=np.float64)
+        assert a.ndim == 3, "arrivals must be (ticks, n_designs, n_dests)"
+        object.__setattr__(self, "arrivals", a)
+
+    @property
+    def ticks(self) -> int:
+        return int(self.arrivals.shape[0])
+
+    @property
+    def n_designs(self) -> int:
+        return int(self.arrivals.shape[1])
+
+    @property
+    def n_dests(self) -> int:
+        return int(self.arrivals.shape[2])
+
+    @property
+    def duration_s(self) -> float:
+        return self.ticks * self.dt
+
+    @property
+    def n_requests(self) -> np.ndarray:
+        """Per-design offered totals, shape ``(n_designs,)``."""
+        return self.arrivals.sum(axis=(0, 2))
+
+    @classmethod
+    def broadcast(cls, trace: Trace, n_designs: int) -> "BatchTrace":
+        """Share one (T, A) trace across B designs (no copy)."""
+        a = np.broadcast_to(trace.arrivals[:, None, :],
+                            (trace.ticks, int(n_designs), trace.n_dests))
+        return cls(a, trace.dt)
+
+    @classmethod
+    def stack(cls, traces: Sequence[Trace]) -> "BatchTrace":
+        """One per-design trace each (same dt/ticks/destinations)."""
+        assert traces, "need at least one trace"
+        t0 = traces[0]
+        for t in traces[1:]:
+            assert abs(t.dt - t0.dt) < 1e-12, "dt mismatch"
+            assert t.arrivals.shape == t0.arrivals.shape, "shape mismatch"
+        return cls(np.stack([t.arrivals for t in traces], axis=1), t0.dt)
+
+    def design(self, b: int) -> Trace:
+        """Design ``b``'s own (T, A) trace (the differential-test path)."""
+        return Trace(self.arrivals[:, b, :].copy(), self.dt)
+
+    def scaled(self, factor) -> "BatchTrace":
+        """Scale by a scalar or per-design ``(n_designs,)`` factor."""
+        f = np.asarray(factor, dtype=np.float64)
+        if f.ndim == 1:
+            f = f[None, :, None]
+        return replace(self, arrivals=self.arrivals * f)
+
+
 def _per_dest_rate(rate_rps, n_dests: int) -> np.ndarray:
     """Broadcast a scalar (total, split evenly) or per-dest rate vector."""
     r = np.asarray(rate_rps, dtype=np.float64)

@@ -1,0 +1,72 @@
+"""The benchmark harness's ``--out`` schema guard (BENCH_*.json drift).
+
+``benchmarks/run.py --json --out FILE`` emits a row list; the per-module
+trajectory files (``BENCH_dse.json`` etc.) are keyed documents owned by
+the individual benchmarks.  The guard must refuse to clobber anything
+that is not its own schema — before any benchmark runs — and ``--force``
+must override it.
+"""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+
+from benchmarks.run import check_out_target, is_row_list, main  # noqa: E402
+
+
+ROWS = [{"name": "x", "us_per_call": 1.0, "derived": "d"}]
+
+
+def test_is_row_list_recognizes_own_schema():
+    assert is_row_list(ROWS)
+    assert is_row_list([])
+    assert not is_row_list({"runs": {}})                # BENCH_* shape
+    assert not is_row_list([{"name": "x"}])             # missing keys
+    assert not is_row_list([{**ROWS[0], "extra": 1}])   # foreign keys
+    assert not is_row_list("[]")
+    assert not is_row_list(None)
+
+
+def test_check_out_target_accepts_missing_empty_and_own(tmp_path):
+    check_out_target(None)
+    check_out_target(str(tmp_path / "new.json"))        # missing: fine
+    empty = tmp_path / "empty.json"
+    empty.write_text("")
+    check_out_target(str(empty))                        # empty: fine
+    own = tmp_path / "rows.json"
+    own.write_text(json.dumps(ROWS))
+    check_out_target(str(own))                          # re-emission: fine
+
+
+@pytest.mark.parametrize("content", [
+    json.dumps({"ticks": 400, "runs": {"sequential": {}}}),  # BENCH_* doc
+    json.dumps([{"name": "x"}]),                             # partial rows
+    "not json at all",
+])
+def test_check_out_target_refuses_foreign_schema(tmp_path, content):
+    target = tmp_path / "BENCH_sim_batch.json"
+    target.write_text(content)
+    with pytest.raises(SystemExit, match="refusing to overwrite"):
+        check_out_target(str(target))
+    check_out_target(str(target), force=True)           # --force overrides
+    assert target.read_text() == content                # check never writes
+
+
+def test_main_fails_fast_before_running_benchmarks(tmp_path):
+    """A foreign --out target aborts in the argument phase — no benchmark
+    module is imported, so the failure costs milliseconds."""
+    target = tmp_path / "BENCH_dse.json"
+    doc = json.dumps({"runs": {"soc_dse": {"points_per_sec": 1}}})
+    target.write_text(doc)
+    import benchmarks
+    before = set(sys.modules)
+    with pytest.raises(SystemExit, match="refusing to overwrite"):
+        main(["--json", "--out", str(target)])
+    assert target.read_text() == doc                    # untouched
+    # the guard fired before any bench_* module was pulled in
+    new_bench = [m for m in set(sys.modules) - before
+                 if m.startswith("benchmarks.bench")]
+    assert not new_bench, new_bench

@@ -1,0 +1,597 @@
+"""Tile-to-tile flow patterns, per-design arrival tensors and the
+load-balancer admission policy: differential + property tests.
+
+The load-bearing guarantees of the generalized co-sim surface:
+
+* **differential parity** — the batched engine at B=1 is *bit-for-bit*
+  the sequential engine on tile-to-tile chains (open loop, DFS
+  controllers, the load balancer, and all of them together), and a
+  shared ``(T, A)`` trace broadcast to a ``(T, B, A)`` tensor reproduces
+  the shared-trace replay exactly;
+* **properties** — link-level flow conservation (the dense incidence
+  contraction equals the ragged reference accumulation, and every route
+  covers exactly its hop count of links), chain-stage completion-curve
+  ordering (stage ``i+1`` never completes more than stage ``i``), queue
+  non-negativity / work conservation with the forward coupling in the
+  loop, and the balancer's per-group splits summing to the offered load
+  — hypothesis-fuzzed when available, seeded sweeps otherwise;
+* **the scenario gate** — on a replicated-accelerator pipeline SoC with
+  a hotspot workload, load balancing + DFS achieves lower energy/request
+  than DFS-only and than load-balancer-only without giving up tail
+  latency.
+"""
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core.dfs import (BatchMemoryBoundPolicy, BatchPIDRatePolicy,
+                            PIDRatePolicy, policy_memory_bound)
+from repro.core.dse import closed_loop_score, grid_sweep
+from repro.core.noc import (NocConfig, flow_incidence, link_loads_batch,
+                            pos_index, routing_tables)
+from repro.core.perfmodel import AccelWorkload, SoCPerfModel
+from repro.sim import (BatchControllerHarness, BatchSimEngine,
+                       BatchSimPlatform, BatchTrace, ControllerHarness,
+                       FlowPattern, LoadBalancer, SimConfig, SimEngine,
+                       SimPlatform, Trace, compile_flows, constant_trace,
+                       diurnal_trace, mmpp_trace)
+from functools import partial
+
+
+# --------------------------------------------------------------- fixtures
+STAGE0 = ("fe0", "fe1", "fe2")
+STAGE1 = ("be0", "be1", "be2")
+PIPE = FlowPattern.chain(STAGE0, STAGE1)
+GROUPS = (STAGE0, STAGE1)
+
+
+def pipeline_platform(*, n_tg=2, req_mb=0.005, noc_rate=1.0, k=8,
+                      flows=PIPE):
+    """3 front-end + 3 back-end stream-bound tiles chained front->back."""
+    m = SoCPerfModel()
+    pos = [(r, c) for r in range(4) for c in range(4)
+           if (r, c) not in {(1, 0), (0, 0), (0, 3)}][:6]
+    wls = [AccelWorkload("dfmul", 8.70, 1.1, replication=k) for _ in pos]
+    return SimPlatform.build(m, wls, pos, names=STAGE0 + STAGE1,
+                             noc_rate=noc_rate, n_tg=n_tg, req_mb=req_mb,
+                             flows=flows)
+
+
+def hotspot_trace(rate_per_tick, ticks=900, *, dt=1e-3, seed=3,
+                  spread=False):
+    """External arrivals land on the front-end stage only — all on fe0
+    (the hotspot) or evenly over the stage (``spread``)."""
+    rng = np.random.default_rng(seed)
+    arr = np.zeros((ticks, 6))
+    lam = np.full(3, rate_per_tick / 3.0) if spread else \
+        np.asarray([rate_per_tick, 0.0, 0.0])
+    arr[:, :3] = rng.poisson(np.broadcast_to(lam, (ticks, 3)))
+    return Trace(arr, dt)
+
+
+def batch_controller(bplat, policy, **kw):
+    return BatchControllerHarness(bplat.islands, bplat.rates, policy,
+                                  tile_names=bplat.names, **kw)
+
+
+# -------------------------------------------------- flow compile + tables
+def test_compile_flows_default_is_legacy_mem_pattern():
+    plat = pipeline_platform(flows=None)
+    m = plat.model
+    cf = compile_flows(m, plat.names, plat.pos_idx, None)
+    mem_idx = pos_index(m.noc, m.mem_pos)
+    assert np.all(cf.dst_idx == mem_idx)
+    np.testing.assert_array_equal(cf.hop_counts,
+                                  m.hop_counts(pos_idx=plat.pos_idx))
+    np.testing.assert_array_equal(cf.inc, SimEngine(plat)._inc)
+    assert cf.forward is None and not cf.chained
+    assert cf.demand == m.own_demand and isinstance(cf.demand, float)
+
+
+def test_compile_flows_chain_routes_and_forward():
+    plat = pipeline_platform()
+    m = plat.model
+    cf = compile_flows(m, plat.names, plat.pos_idx, PIPE)
+    # front-end tile j streams to its assigned back-end replica; the
+    # back-end (last stage) streams to MEM
+    for j in range(3):
+        assert cf.dst_idx[j] == plat.pos_idx[3 + j]
+    mem_idx = pos_index(m.noc, m.mem_pos)
+    assert np.all(cf.dst_idx[3:] == mem_idx)
+    # hop counts follow the actual destinations
+    t = routing_tables(m.noc)
+    np.testing.assert_array_equal(
+        cf.hop_counts, t.hop_matrix[plat.pos_idx, cf.dst_idx])
+    # forward: stage-0 rows split uniformly over stage 1; last stage exits
+    F = cf.forward
+    np.testing.assert_allclose(F[:3, 3:], np.full((3, 3), 1.0 / 3.0))
+    assert np.all(F[:3, :3] == 0.0) and np.all(F[3:, :] == 0.0)
+    np.testing.assert_array_equal(cf.stage_of, [0, 0, 0, 1, 1, 1])
+
+
+def test_flow_pattern_validation():
+    with pytest.raises(AssertionError):        # tile in two stages
+        FlowPattern.chain(("a", "b"), ("b",))
+    with pytest.raises(AssertionError):        # empty stage
+        FlowPattern(stages=((),))
+    plat = pipeline_platform()
+    with pytest.raises(AssertionError):        # unknown stage tile
+        compile_flows(plat.model, plat.names, plat.pos_idx,
+                      FlowPattern.chain(("nope",), STAGE1))
+    with pytest.raises(AssertionError):        # self-stream
+        compile_flows(plat.model, plat.names, plat.pos_idx,
+                      FlowPattern(dests={"fe0": "fe0"}))
+    with pytest.raises(AssertionError):        # unknown demand override
+        compile_flows(plat.model, plat.names, plat.pos_idx,
+                      FlowPattern(demand={"nope": 0.3}))
+    with pytest.raises(AssertionError):        # contradictory dests
+        FlowPattern(dests=(("a", "b"), ("a", "c")))
+    with pytest.raises(AssertionError):        # contradictory demand
+        FlowPattern(demand=(("a", 0.1), ("a", 0.2)))
+    # dicts freeze to sorted tuples: structural equality across spellings
+    assert FlowPattern(dests={"a": "b", "c": "MEM"}) == \
+        FlowPattern(dests=(("c", "MEM"), ("a", "b")))
+
+
+def check_link_flow_conservation(cfg, src, dst, busy, demand):
+    """The dense incidence contraction the tick loop runs distributes
+    exactly each flow's demand onto each link of its route: it matches
+    the ragged reference accumulation, and each route covers exactly its
+    hop count of links."""
+    inc, hops = flow_incidence(cfg, src, dst)
+    np.testing.assert_array_equal(inc.sum(axis=-1), hops)
+    loads = np.einsum("a,al->l", demand * busy, inc)
+    ref = link_loads_batch(cfg, src, dst, demand * busy)
+    np.testing.assert_allclose(loads, ref, rtol=1e-12, atol=1e-12)
+    # total offered bytes are conserved onto links: demand x hops each
+    np.testing.assert_allclose(loads.sum(), (demand * busy * hops).sum(),
+                               rtol=1e-12)
+
+
+@pytest.mark.parametrize("seed", range(5))
+def test_link_flow_conservation_seeded(seed):
+    rng = np.random.default_rng(seed)
+    cfg = NocConfig(4, 4, torus=bool(seed % 2))
+    n = cfg.rows * cfg.cols
+    A = int(rng.integers(1, 10))
+    src = rng.integers(0, n, size=A)
+    dst = rng.integers(0, n, size=A)
+    check_link_flow_conservation(cfg, src, dst, rng.random(A),
+                                 rng.random(A) * 0.4)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=10 ** 6),
+       st.booleans(), st.integers(min_value=1, max_value=12))
+def test_link_flow_conservation_fuzzed(seed, torus, n_flows):
+    rng = np.random.default_rng(seed)
+    cfg = NocConfig(4, 4, torus=torus)
+    n = cfg.rows * cfg.cols
+    check_link_flow_conservation(
+        cfg, rng.integers(0, n, size=n_flows),
+        rng.integers(0, n, size=n_flows),
+        rng.random(n_flows), rng.random(n_flows) * 0.4)
+
+
+# ------------------------------------------------------ differential: B=1
+@pytest.mark.parametrize("kind", ["hotspot", "spread", "mmpp"])
+@pytest.mark.parametrize("ctl,lb", [(False, False), (True, False),
+                                    (False, True), (True, True)])
+def test_pipeline_b1_matches_sequential_bitforbit(kind, ctl, lb):
+    """B=1 batched tile-to-tile chain replay == sequential engine,
+    bit-for-bit, with every combination of DFS controller and balancer."""
+    plat = pipeline_platform()
+    bplat = BatchSimPlatform.stack([plat])
+    if kind == "mmpp":
+        cap = SimEngine(plat).capacity_rps()
+        tr = mmpp_trace(cap * 0.1, cap * 1.2, 700, 6, dt=1e-3, seed=4)
+    else:
+        tr = hotspot_trace(14.0, 700, spread=(kind == "spread"))
+    cfg = SimConfig(control_interval=25)
+    s_ctl = (ControllerHarness(
+        plat.islands, partial(policy_memory_bound, threshold=0.55,
+                              low_rate=0.5), queue_guard_ticks=3.0)
+        if ctl else None)
+    b_ctl = (batch_controller(
+        bplat, BatchMemoryBoundPolicy(threshold=0.55, low_rate=0.5),
+        queue_guard_ticks=3.0) if ctl else None)
+    mk_lb = (lambda names: LoadBalancer(GROUPS, names)) if lb else \
+        (lambda names: None)
+
+    seq_eng = SimEngine(plat, config=cfg, controller=s_ctl,
+                        balancer=mk_lb(plat.names))
+    seq = seq_eng.run(tr)
+    bat_eng = BatchSimEngine(bplat, config=cfg, controller=b_ctl,
+                             balancer=mk_lb(bplat.names))
+    bat = bat_eng.run(tr)
+
+    assert bat.completed[0] == seq.completed
+    assert bat.residual[0] == seq.residual
+    assert bat.energy_j[0] == seq.energy_j
+    assert bat.p50_latency_s[0] == seq.p50_latency_s
+    assert bat.p99_latency_s[0] == seq.p99_latency_s
+    for f in ("queue", "busy", "pkts_in", "pkts_out", "rtt_acc"):
+        np.testing.assert_array_equal(
+            getattr(bat_eng.last_state, f)[0],
+            getattr(seq_eng.last_state, f), err_msg=f)
+    adm_b, srv_b = bat_eng.last_histories
+    adm_s, srv_s = seq_eng.last_histories
+    np.testing.assert_array_equal(adm_b[:, 0], adm_s)
+    np.testing.assert_array_equal(srv_b[:, 0], srv_s)
+    if ctl:
+        assert int(bat.swaps[0]) == seq.swaps
+        seq_rates = np.asarray([i.rate for i in s_ctl.live().islands])
+        np.testing.assert_array_equal(b_ctl.rates[0], seq_rates)
+
+
+# ------------------------------------------ per-design arrival tensors
+@pytest.mark.parametrize("controlled", [False, True])
+def test_broadcast_batch_trace_reproduces_shared_trace_exactly(controlled):
+    """(T, A) broadcast to (T, B, A) == the shared-trace replay,
+    bit-for-bit (incl. flows + balancer + controller in the loop)."""
+    plats = [pipeline_platform(noc_rate=r) for r in (1.0, 0.8, 0.6)]
+    bplat = BatchSimPlatform.stack(plats)
+    tr = hotspot_trace(12.0, 600)
+    cfg = SimConfig(control_interval=25)
+
+    def mk():
+        ctl = (batch_controller(bplat, BatchPIDRatePolicy(target=0.7),
+                                queue_guard_ticks=3.0)
+               if controlled else None)
+        return BatchSimEngine(bplat, config=cfg, controller=ctl,
+                              balancer=LoadBalancer(GROUPS, bplat.names))
+
+    e_shared = mk()
+    r_shared = e_shared.run(tr)
+    e_bcast = mk()
+    r_bcast = e_bcast.run(BatchTrace.broadcast(tr, bplat.n_designs))
+
+    for f in ("completed", "residual", "energy_j", "p50_latency_s",
+              "p99_latency_s", "dropped", "swaps"):
+        np.testing.assert_array_equal(getattr(r_bcast, f),
+                                      getattr(r_shared, f), err_msg=f)
+    np.testing.assert_array_equal(e_bcast.last_histories[1],
+                                  e_shared.last_histories[1])
+    np.testing.assert_allclose(r_bcast.offered,
+                               np.full(3, float(tr.arrivals.sum())))
+
+
+def test_stacked_batch_trace_rows_match_per_design_sequential():
+    """Each design of a (T, B, A) tensor replays ITS OWN trace: batch
+    rows are bit-for-bit the sequential runs on the per-design slices."""
+    plat = pipeline_platform()
+    B = 3
+    traces = [hotspot_trace(10.0 + 3 * b, 500, seed=b, spread=(b == 1))
+              for b in range(B)]
+    bt = BatchTrace.stack(traces)
+    assert bt.n_designs == B and bt.ticks == 500
+    bplat = BatchSimPlatform.stack([plat] * B)
+    lb = LoadBalancer(GROUPS, plat.names)
+    bat_eng = BatchSimEngine(bplat, balancer=lb)
+    bat = bat_eng.run(bt)
+    for b in range(B):
+        seq_eng = SimEngine(plat, balancer=LoadBalancer(GROUPS, plat.names))
+        seq = seq_eng.run(bt.design(b))
+        # the tick-by-tick simulation of each row is bit-identical
+        np.testing.assert_array_equal(bat_eng.last_histories[0][:, b],
+                                      seq_eng.last_histories[0], err_msg=b)
+        np.testing.assert_array_equal(bat_eng.last_histories[1][:, b],
+                                      seq_eng.last_histories[1], err_msg=b)
+        assert bat.energy_j[b] == seq.energy_j, b
+        assert bat.p99_latency_s[b] == seq.p99_latency_s, b
+        assert bat.residual[b] == seq.residual, b
+        # summary aggregates reduce (T, B, A) slabs in a different order
+        # than (T, A) ones — float64 roundoff, not bit-for-bit
+        np.testing.assert_allclose(bat.completed[b], seq.completed,
+                                   rtol=1e-12)
+        np.testing.assert_allclose(bat.offered[b], seq.offered, rtol=1e-12)
+
+
+def test_batch_trace_shape_guards():
+    plat = pipeline_platform()
+    bplat = BatchSimPlatform.stack([plat, plat])
+    tr = hotspot_trace(10.0, 50)
+    with pytest.raises(AssertionError):        # design-axis mismatch
+        BatchSimEngine(bplat).run(BatchTrace.broadcast(tr, 3))
+    with pytest.raises(AssertionError):        # dest mismatch
+        BatchSimEngine(bplat).run(Trace(np.zeros((50, 4)), 1e-3))
+    with pytest.raises(AssertionError):        # 2-D tensor is not a batch
+        BatchTrace(np.zeros((50, 6)), 1e-3)
+
+
+# ------------------------------------------------------------- invariants
+def check_pipeline_invariants(ext_arrivals, *, lb_mode=None, control=False,
+                              max_queue=float("inf")) -> None:
+    """Replay a random external trace through the chained platform and
+    assert the fluid/chain invariants at every tick."""
+    ext_arrivals = np.asarray(ext_arrivals, dtype=np.float64)
+    T = ext_arrivals.shape[0]
+    plat = pipeline_platform()
+    bplat = BatchSimPlatform.stack([plat])
+    ctl = (batch_controller(bplat, BatchPIDRatePolicy(target=0.6),
+                            queue_guard_ticks=2.0) if control else None)
+    lb = (LoadBalancer(GROUPS, plat.names, mode=lb_mode)
+          if lb_mode else None)
+    eng = BatchSimEngine(bplat, config=SimConfig(control_interval=10,
+                                                 max_queue=max_queue),
+                         controller=ctl, balancer=lb)
+    r = eng.run(Trace(ext_arrivals, 1e-3))
+    admitted, served = (h[:, 0] for h in eng.last_histories)
+
+    ca = np.cumsum(admitted, axis=0)
+    cs = np.cumsum(served, axis=0)
+    # queue non-negativity + per-tile work conservation (with the chain
+    # coupling, "arrivals" at a tile include forwarded completions)
+    backlog = ca - cs
+    assert np.all(backlog >= -1e-9)
+    assert np.all(served >= -1e-12)
+    np.testing.assert_allclose(backlog[-1].sum(), r.residual[0],
+                               rtol=1e-9, atol=1e-9)
+    # monotone completion curves
+    assert np.all(np.diff(cs, axis=0) >= -1e-12)
+    # chain-stage completion ordering: the back-end can never have
+    # completed more than the front-end has handed it
+    np.testing.assert_array_less(cs[:, 3:].sum(axis=1),
+                                 cs[:, :3].sum(axis=1) + 1e-9)
+    # admitted totals == external + landed forwarded completions, and
+    # each external request completes at most once (exit-stage services):
+    # external = completed + backlog + the final tick's in-flight carry
+    if max_queue == float("inf"):
+        fwd = np.einsum("ta,aj->tj", served, eng._forward)
+        np.testing.assert_allclose(
+            admitted.sum(), ext_arrivals.sum() + fwd[:-1].sum(),
+            rtol=1e-9)
+        np.testing.assert_allclose(
+            r.completed[0] + backlog[-1].sum() + fwd[-1].sum(),
+            ext_arrivals.sum(), rtol=1e-9, atol=1e-9)
+        assert r.completed[0] <= ext_arrivals.sum() + 1e-9
+
+
+def check_balancer_split(arr, queue, cap, groups, names, mode) -> None:
+    lb = LoadBalancer(groups, names, mode=mode)
+    out = lb.split(arr, queue, cap)
+    assert out.shape == np.asarray(arr).shape
+    assert np.all(out >= -1e-12)
+    # per-group sums preserved: the split IS the offered load
+    for g in groups:
+        ids = [names.index(t) for t in g]
+        np.testing.assert_allclose(out[..., ids].sum(axis=-1),
+                                   np.asarray(arr)[..., ids].sum(axis=-1),
+                                   rtol=1e-9, atol=1e-9)
+    # uncovered tiles pass through untouched
+    ungrouped = [i for i, n in enumerate(names)
+                 if not any(n in g for g in groups)]
+    if ungrouped:
+        np.testing.assert_array_equal(out[..., ungrouped],
+                                      np.asarray(arr, dtype=np.float64)
+                                      [..., ungrouped])
+
+
+BAL_SEEDS = [(s, m) for s in range(3)
+             for m in ("even", "capacity", "adaptive")]
+
+
+@pytest.mark.parametrize("seed,mode", BAL_SEEDS)
+def test_balancer_split_sums_seeded(seed, mode):
+    rng = np.random.default_rng(seed)
+    names = tuple(f"t{i}" for i in range(7))
+    groups = (("t0", "t1", "t2"), ("t4", "t5"))
+    lead = () if seed == 0 else (4,)
+    check_balancer_split(rng.gamma(1.0, 20.0, lead + (7,)),
+                         rng.gamma(1.0, 5.0, lead + (7,)),
+                         rng.random(lead + (7,)) * 10 + 0.1,
+                         groups, names, mode)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(min_value=0, max_value=10 ** 6),
+       st.sampled_from(LoadBalancer.MODES), st.booleans())
+def test_balancer_split_sums_fuzzed(seed, mode, batched):
+    rng = np.random.default_rng(seed)
+    names = tuple(f"t{i}" for i in range(6))
+    groups = (("t0", "t3"), ("t1", "t2", "t5"))
+    lead = (int(rng.integers(1, 5)),) if batched else ()
+    check_balancer_split(rng.gamma(1.0, 30.0, lead + (6,)),
+                         rng.gamma(1.0, 8.0, lead + (6,)),
+                         rng.random(lead + (6,)) * 5 + 1e-3,
+                         groups, names, mode)
+
+
+def test_balancer_zero_weight_group_falls_back_to_even_split():
+    """A group whose every replica weighs zero (cap forced to 0) must
+    still conserve its offered load — even split, never discarded."""
+    names = ("a", "b", "c", "d")
+    groups = (("a", "b"), ("c", "d"))
+    arr = np.asarray([10.0, 2.0, 8.0, 0.0])
+    queue = np.zeros(4)
+    cap = np.asarray([0.0, 0.0, 3.0, 1.0])     # group 0 fully gated
+    for mode in ("capacity", "adaptive"):
+        out = LoadBalancer(groups, names, mode=mode).split(arr, queue, cap)
+        np.testing.assert_allclose(out[:2], [6.0, 6.0], err_msg=mode)
+        np.testing.assert_allclose(out[2:].sum(), 8.0, err_msg=mode)
+    # and the generic conservation checker agrees
+    check_balancer_split(arr, queue, cap, groups, names, "capacity")
+
+
+def test_balancer_group_validation():
+    names = ("a", "b", "c")
+    with pytest.raises(AssertionError):
+        LoadBalancer([("a", "zz")], names)
+    with pytest.raises(AssertionError):
+        LoadBalancer([("a",), ("a", "b")], names)      # overlapping
+    with pytest.raises(AssertionError):
+        LoadBalancer([("a", "b")], names, mode="nope")
+
+
+PIPE_SEEDS = [
+    (0, None, False, float("inf")), (1, "adaptive", False, float("inf")),
+    (2, "capacity", True, float("inf")), (3, "even", True, 25.0),
+    (4, "adaptive", True, 10.0),
+]
+
+
+@pytest.mark.parametrize("seed,lb_mode,control,max_queue", PIPE_SEEDS)
+def test_pipeline_invariants_seeded(seed, lb_mode, control, max_queue):
+    rng = np.random.default_rng(seed)
+    T = int(rng.integers(30, 90))
+    ext = np.zeros((T, 6))
+    ext[:, :3] = rng.gamma(1.5, 6.0, size=(T, 3)) * rng.random((T, 1))
+    check_pipeline_invariants(ext, lb_mode=lb_mode, control=control,
+                              max_queue=max_queue)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=0, max_value=10 ** 6),
+       st.integers(min_value=10, max_value=70),
+       st.sampled_from((None,) + LoadBalancer.MODES),
+       st.booleans(), st.booleans())
+def test_pipeline_invariants_fuzzed(seed, ticks, lb_mode, control, bounded):
+    rng = np.random.default_rng(seed)
+    ext = np.zeros((ticks, 6))
+    ext[:, :3] = rng.gamma(1.2, 8.0, size=(ticks, 3)) * rng.random(
+        (ticks, 1))
+    check_pipeline_invariants(
+        ext, lb_mode=lb_mode, control=control,
+        max_queue=(30.0 if bounded else float("inf")))
+
+
+# ------------------------------------------------------- jax scan backend
+def test_jax_backend_matches_numpy_on_pipeline():
+    pytest.importorskip("jax")
+    plats = [pipeline_platform(noc_rate=r) for r in (1.0, 0.8)]
+    bplat = BatchSimPlatform.stack(plats)
+    bt = BatchTrace.stack([hotspot_trace(12.0, 500, seed=1),
+                           hotspot_trace(9.0, 500, seed=2, spread=True)])
+    cfg = SimConfig(control_interval=25)
+
+    def mk(backend):
+        ctl = batch_controller(
+            bplat, BatchMemoryBoundPolicy(threshold=0.55, low_rate=0.5),
+            queue_guard_ticks=3.0)
+        return BatchSimEngine(bplat, config=cfg, controller=ctl,
+                              balancer=LoadBalancer(GROUPS, bplat.names),
+                              backend=backend)
+
+    rn = mk("numpy").run(bt)
+    rj = mk("jax").run(bt)
+    np.testing.assert_allclose(rj.completed, rn.completed, rtol=1e-3)
+    np.testing.assert_allclose(rj.energy_j, rn.energy_j, rtol=1e-3)
+    np.testing.assert_allclose(rj.residual, rn.residual,
+                               rtol=1e-3, atol=1e-2)
+    np.testing.assert_array_equal(rj.swaps, rn.swaps)
+    np.testing.assert_allclose(rj.p99_latency_s, rn.p99_latency_s,
+                               atol=2 * bt.dt, rtol=0.05)
+
+
+# ----------------------------------------------- DSE bridge: flows in loop
+def _pipeline_sweep():
+    m = SoCPerfModel()
+    wls = [AccelWorkload("dfadd", 9.22, 0.9),
+           AccelWorkload("dfmul", 8.70, 1.1)]
+    res = grid_sweep(m, wls, ks=(1, 2, 4, 8), acc_rates=(0.2, 0.6, 1.0),
+                     noc_rates=(0.5, 1.0), n_tg=2)
+    return m, res
+
+
+def test_closed_loop_score_pipeline_batch_matches_sequential():
+    """Scoring survivors under a pipeline workload (flows= + balancer in
+    the loop): the batched replay == the sequential reference, ranking
+    and scores identical."""
+    m, res = _pipeline_sweep()
+    idx = res.topk_indices(12)
+    flows = FlowPattern.chain(("dfadd",), ("dfmul",))
+    ext = np.zeros((400, 2))
+    ext[:, 0] = np.random.default_rng(5).poisson(3.0, 400)
+    tr = Trace(ext, 1e-3)
+    kw = dict(model=m, indices=idx, req_mb=0.002, flows=flows,
+              sim_config=SimConfig(control_interval=25),
+              balancer_factory=lambda p: LoadBalancer(
+                  [("dfadd",), ("dfmul",)], p.names))
+    seq = closed_loop_score(
+        res, tr, batch=False,
+        controller_factory=lambda p: ControllerHarness(
+            p.islands, PIDRatePolicy(target=0.7), queue_guard_ticks=3.0),
+        **kw)
+    bat = closed_loop_score(
+        res, tr,
+        batch_controller_factory=lambda bp: BatchControllerHarness(
+            bp.islands, bp.rates, BatchPIDRatePolicy(target=0.7),
+            tile_names=bp.names, queue_guard_ticks=3.0),
+        **kw)
+    np.testing.assert_array_equal(bat.p99_latency_s, seq.p99_latency_s)
+    np.testing.assert_array_equal(bat.energy_per_request_j,
+                                  seq.energy_per_request_j)
+    np.testing.assert_array_equal(bat.ranked_indices(), seq.ranked_indices())
+
+
+def test_closed_loop_score_accepts_batch_trace_both_paths():
+    """A per-design (T, B, A) tensor scores each survivor on its own
+    trace; the sequential path slices the same tensor per design and
+    produces identical scores."""
+    m, res = _pipeline_sweep()
+    idx = res.topk_indices(6)
+    rng = np.random.default_rng(9)
+    bt = BatchTrace(rng.poisson(2.0, (300, 6, 2)).astype(float), 1e-3)
+    a = closed_loop_score(res, bt, model=m, indices=idx, req_mb=0.002)
+    b = closed_loop_score(res, bt, model=m, indices=idx, req_mb=0.002,
+                          batch=False)
+    np.testing.assert_array_equal(a.p99_latency_s, b.p99_latency_s)
+    np.testing.assert_array_equal(a.energy_per_request_j,
+                                  b.energy_per_request_j)
+    np.testing.assert_array_equal(a.ranked_indices(), b.ranked_indices())
+    # the per-design tensors actually differed
+    assert len(np.unique(a.p99_latency_s)) > 1 or \
+        len(np.unique(a.energy_per_request_j)) > 1
+    # a design-axis / survivor-count mismatch is rejected up front on
+    # BOTH paths (never silently pairs survivor j with the wrong row)
+    for batch in (True, False):
+        with pytest.raises(AssertionError):
+            closed_loop_score(res, bt, model=m, indices=idx[:4],
+                              req_mb=0.002, batch=batch)
+
+
+# ------------------------------------------------------- the scenario gate
+def scenario_runs(ticks=2500, seed=11):
+    """LB+DFS vs DFS-only vs LB-only on the replicated pipeline SoC under
+    a hotspot diurnal workload (all external load on fe0)."""
+    plat = pipeline_platform()
+    rng = np.random.default_rng(seed)
+    t = np.arange(ticks)
+    lam = 13.0 * (1.0 + 0.4 * np.sin(2 * np.pi * t / ticks))
+    ext = np.zeros((ticks, 6))
+    ext[:, 0] = rng.poisson(lam)
+    tr = Trace(ext, 1e-3)
+    cfg = SimConfig(control_interval=25)
+
+    def run(dfs, lb):
+        ctl = (ControllerHarness(
+            plat.islands, partial(policy_memory_bound, threshold=0.55,
+                                  low_rate=0.5), queue_guard_ticks=3.0)
+            if dfs else None)
+        bal = LoadBalancer(GROUPS, plat.names) if lb else None
+        return SimEngine(plat, config=cfg, controller=ctl,
+                         balancer=bal).run(tr)
+
+    return {"dfs_only": run(True, False), "lb_only": run(False, True),
+            "lb_dfs": run(True, True)}
+
+
+def test_scenario_lb_plus_dfs_beats_either_alone():
+    """The acceptance gate: on the replicated-accelerator pipeline SoC,
+    load balancing + DFS achieves lower energy/request than DFS-only and
+    than LB-only, at matched (no worse) tail latency."""
+    runs = scenario_runs()
+    both, dfs, lb = runs["lb_dfs"], runs["dfs_only"], runs["lb_only"]
+    # strictly cheaper per request than either policy alone
+    assert both.energy_per_request_j < 0.97 * dfs.energy_per_request_j, \
+        (both.energy_per_request_j, dfs.energy_per_request_j)
+    assert both.energy_per_request_j < 0.97 * lb.energy_per_request_j, \
+        (both.energy_per_request_j, lb.energy_per_request_j)
+    # at matched p99 (the repo's 2x-or-5ms convention, as in
+    # examples/closed_loop.py): no worse than the DFS-only tail, within
+    # the matched band of the full-rate balanced tail
+    assert both.p99_latency_s <= dfs.p99_latency_s
+    assert both.p99_latency_s <= max(2.0 * lb.p99_latency_s, 5e-3)
+    # and it does not buy this by serving less
+    assert both.completed >= 0.99 * lb.completed
+    assert both.completed >= dfs.completed

@@ -1,0 +1,103 @@
+"""Telemetry JSON export round-trips (ISSUE 5 satellite).
+
+A batched telemetry dump serialized with ``to_json`` must reconstruct,
+through plain ``json.loads``, exactly the arrays the recorder holds —
+and each design's slice of the parsed document must equal the
+``design(b)`` view the differential tests compare against (and, at B=1,
+the sequential recorder's own export).
+"""
+import json
+
+import numpy as np
+
+from repro.sim import (BatchSimEngine, BatchSimPlatform, SimConfig,
+                       SimEngine, SimPlatform, Telemetry, diurnal_trace)
+from repro.core.perfmodel import AccelWorkload, SoCPerfModel
+
+
+def _platforms(n=3):
+    m = SoCPerfModel()
+    pos = [(r, c) for r in range(4) for c in range(4)
+           if (r, c) not in {(1, 0), (0, 0), (0, 3)}][:4]
+    wls = [AccelWorkload("dfmul", 8.70, 1.1, replication=8) for _ in pos]
+    return [SimPlatform.build(m, wls, pos, noc_rate=r, n_tg=2,
+                              req_mb=0.005)
+            for r in np.linspace(1.0, 0.6, n)]
+
+
+def _run_batched(plats, *, capacity=64):
+    bplat = BatchSimPlatform.stack(plats)
+    eng = BatchSimEngine(bplat, config=SimConfig(
+        telemetry_interval=10, telemetry_capacity=capacity))
+    cap = SimEngine(plats[0]).capacity_rps()
+    tr = diurnal_trace(cap * 0.5, 400, 4, dt=1e-3, depth=0.5, seed=2)
+    r = eng.run(tr)
+    return r, tr
+
+
+def test_batch_telemetry_json_roundtrip_per_design_slices():
+    plats = _platforms()
+    r, tr = _run_batched(plats)
+    telem = r.telemetry
+    doc = json.loads(telem.to_json())
+
+    # schema survives
+    assert doc["schema"]["n_designs"] == len(plats)
+    assert tuple(doc["schema"]["tiles"]) == plats[0].names
+    assert doc["rows_recorded"] == telem.scalars.total_appended
+
+    # every channel reconstructs exactly (float64 -> repr -> float64 is
+    # lossless for json.dumps round-trips)
+    for ch in ("island_rates", "queue_depth", "busy"):
+        np.testing.assert_array_equal(
+            np.asarray(doc[ch]), getattr(telem, ch).array(), err_msg=ch)
+    for name, col in doc["scalars"].items():
+        np.testing.assert_array_equal(np.asarray(col),
+                                      telem.series(name), err_msg=name)
+
+    # per-design slices of the parsed doc == the design(b) views
+    for b in range(len(plats)):
+        d = telem.design(b)
+        for ch in ("island_rates", "queue_depth", "busy"):
+            np.testing.assert_array_equal(
+                np.asarray(doc[ch])[:, b, :], d[ch], err_msg=(ch, b))
+        for name in telem.SCALARS:
+            np.testing.assert_array_equal(
+                np.asarray(doc["scalars"][name])[:, b],
+                d["scalars"][name], err_msg=(name, b))
+
+
+def test_batch_telemetry_roundtrip_after_ring_wraparound():
+    """Once the ring overwrites old rows, the export still reconstructs
+    the retained window in chronological order."""
+    plats = _platforms(2)
+    r, _ = _run_batched(plats, capacity=16)      # 40 intervals > 16 rows
+    telem = r.telemetry
+    assert telem.scalars.total_appended > telem.scalars.capacity
+    doc = json.loads(telem.to_json())
+    ticks = np.asarray(doc["scalars"]["tick"])
+    assert ticks.shape[0] == 16
+    assert np.all(np.diff(ticks[:, 0]) > 0)      # oldest-first
+    np.testing.assert_array_equal(np.asarray(doc["queue_depth"]),
+                                  telem.queue_depth.array())
+
+
+def test_batch_b1_export_matches_sequential_export():
+    """The B=1 batched dump is (channel for channel) the sequential
+    recorder's dump — the telemetry leg of the differential contract."""
+    plat = _platforms(1)[0]
+    cfg = SimConfig(telemetry_interval=10, telemetry_capacity=64)
+    cap = SimEngine(plat).capacity_rps()
+    tr = diurnal_trace(cap * 0.5, 300, 4, dt=1e-3, depth=0.5, seed=2)
+    seq = SimEngine(plat, config=cfg).run(tr)
+    bat = BatchSimEngine(BatchSimPlatform.stack([plat]), config=cfg).run(tr)
+    sdoc = json.loads(seq.telemetry.to_json())
+    bdoc = json.loads(bat.telemetry.to_json())
+    for ch in ("island_rates", "queue_depth", "busy"):
+        np.testing.assert_array_equal(np.asarray(bdoc[ch])[:, 0, :],
+                                      np.asarray(sdoc[ch]), err_msg=ch)
+    for name in Telemetry.SCALARS:
+        np.testing.assert_array_equal(
+            np.asarray(bdoc["scalars"][name])[:, 0],
+            np.asarray(sdoc["scalars"][name]), err_msg=name)
+    assert bdoc["rows_recorded"] == sdoc["rows_recorded"]

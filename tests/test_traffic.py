@@ -1,0 +1,152 @@
+"""Trace-generator statistics (ISSUE 5 satellite) + BatchTrace surface.
+
+The generators were only exercised indirectly through simulation runs;
+these tests pin their seeded statistical contracts directly: mean rates,
+total request counts, per-destination splits, determinism per seed, and
+the composition helpers.  Sampled means are checked against law-of-large
+-numbers bounds wide enough to be deterministic for the pinned seeds.
+"""
+import numpy as np
+import pytest
+
+from repro.sim import (BatchTrace, Trace, constant_trace, diurnal_trace,
+                       mmpp_trace, poisson_trace, replay_trace, superpose,
+                       with_total)
+
+
+# ----------------------------------------------------------- constant
+def test_constant_trace_is_exact():
+    tr = constant_trace(1200.0, 500, 4, dt=1e-3)
+    assert tr.arrivals.shape == (500, 4)
+    # a scalar rate is a TOTAL, split evenly over destinations
+    np.testing.assert_allclose(tr.arrivals, 1200.0 / 4 * 1e-3)
+    np.testing.assert_allclose(tr.n_requests, 1200.0 * 0.5)
+    np.testing.assert_allclose(tr.offered_rps, 1200.0)
+    # a vector rate is per-destination
+    tr = constant_trace(np.asarray([100.0, 300.0]), 100, 2, dt=1e-3)
+    np.testing.assert_allclose(tr.arrivals.sum(axis=0), [10.0, 30.0])
+
+
+# ------------------------------------------------------------ poisson
+@pytest.mark.parametrize("seed", [0, 7])
+def test_poisson_trace_mean_rate_and_split(seed):
+    rate, ticks, n, dt = 5000.0, 4000, 4, 1e-3
+    tr = poisson_trace(rate, ticks, n, dt=dt, seed=seed)
+    assert tr.arrivals.shape == (ticks, n)
+    assert np.all(tr.arrivals >= 0)
+    assert np.all(tr.arrivals == np.floor(tr.arrivals))   # integer counts
+    # total-mean: N ~ Poisson(rate * T * dt), sd = sqrt(mean); 6 sigma
+    mean = rate * ticks * dt
+    assert abs(tr.n_requests - mean) < 6.0 * np.sqrt(mean)
+    # even per-destination split, each a Poisson(mean / n)
+    per = tr.arrivals.sum(axis=0)
+    assert np.all(np.abs(per - mean / n) < 6.0 * np.sqrt(mean / n))
+    # determinism per seed; different seed, different sample
+    np.testing.assert_array_equal(
+        tr.arrivals, poisson_trace(rate, ticks, n, dt=dt, seed=seed).arrivals)
+    assert not np.array_equal(
+        tr.arrivals,
+        poisson_trace(rate, ticks, n, dt=dt, seed=seed + 1).arrivals)
+
+
+# ------------------------------------------------------------ diurnal
+@pytest.mark.parametrize("depth", [0.0, 0.6])
+def test_diurnal_trace_mean_rate_and_modulation(depth):
+    mean_rps, ticks, n, dt = 8000.0, 6000, 3, 1e-3
+    tr = diurnal_trace(mean_rps, ticks, n, dt=dt, depth=depth, seed=3)
+    # the sinusoid integrates to zero over a full period: total-mean is
+    # mean_rps * duration (6 sigma of the Poisson total)
+    mean = mean_rps * ticks * dt
+    assert abs(tr.n_requests - mean) < 6.0 * np.sqrt(mean)
+    if depth > 0:
+        # peak/trough halves actually differ (the modulation is real):
+        # first quarter is the rising peak, third quarter the trough
+        q = ticks // 4
+        peak = tr.arrivals[:q].sum()
+        trough = tr.arrivals[2 * q:3 * q].sum()
+        assert peak > trough * 1.5
+    else:
+        # depth=0 degrades to homogeneous Poisson
+        q = ticks // 4
+        assert abs(tr.arrivals[:q].sum()
+                   - tr.arrivals[2 * q:3 * q].sum()) < 6.0 * np.sqrt(mean)
+
+
+def test_diurnal_requires_valid_depth():
+    with pytest.raises(AssertionError):
+        diurnal_trace(100.0, 10, 1, depth=1.0)
+
+
+# --------------------------------------------------------------- mmpp
+def test_mmpp_trace_rate_between_states_and_burstiness():
+    lo, hi, ticks, n, dt = 500.0, 20000.0, 8000, 2, 1e-3
+    tr = mmpp_trace(lo, hi, ticks, n, dt=dt, seed=5,
+                    p_low_to_high=0.01, p_high_to_low=0.05)
+    # long-run state occupancy: pi_high = p_lh / (p_lh + p_hl) = 1/6 ->
+    # expected rate = lo + (hi - lo)/6; allow generous chain noise
+    exp_rate = lo + (hi - lo) * (0.01 / 0.06)
+    got = tr.n_requests / tr.duration_s
+    assert 0.5 * exp_rate < got < 1.8 * exp_rate, (got, exp_rate)
+    # bursty: the per-tick variance far exceeds the Poisson mean
+    per_tick = tr.arrivals.sum(axis=1)
+    assert per_tick.var() > 3.0 * per_tick.mean()
+    # determinism per seed
+    np.testing.assert_array_equal(
+        tr.arrivals,
+        mmpp_trace(lo, hi, ticks, n, dt=dt, seed=5, p_low_to_high=0.01,
+                   p_high_to_low=0.05).arrivals)
+
+
+# ------------------------------------------------------------- replay
+def test_replay_trace_bins_exactly():
+    times = [0.0, 0.0004, 0.0012, 0.0029, 0.005, -1.0, 99.0]
+    dests = [0, 1, 1, 0, 1, 0, 1]          # last two: out of range
+    tr = replay_trace(times, dests, 2, dt=1e-3, ticks=6)
+    assert tr.arrivals.shape == (6, 2)
+    assert tr.n_requests == 5.0            # dropped the out-of-range pair
+    np.testing.assert_array_equal(tr.arrivals[0], [1, 1])
+    np.testing.assert_array_equal(tr.arrivals[1], [0, 1])
+    np.testing.assert_array_equal(tr.arrivals[2], [1, 0])
+    np.testing.assert_array_equal(tr.arrivals[5], [0, 1])
+
+
+# -------------------------------------------------------- composition
+def test_superpose_and_with_total():
+    a = constant_trace(100.0, 50, 2, dt=1e-3)
+    b = constant_trace(300.0, 30, 2, dt=1e-3)
+    s = superpose(a, b)
+    assert s.ticks == 50 and s.n_dests == 2
+    np.testing.assert_allclose(s.n_requests,
+                               a.n_requests + b.n_requests)
+    t = with_total(s, 12345.0)
+    np.testing.assert_allclose(t.n_requests, 12345.0)
+    # shape preserved: scaling is uniform
+    np.testing.assert_allclose(t.arrivals / s.arrivals.clip(min=1e-300),
+                               12345.0 / s.n_requests)
+
+
+# --------------------------------------------------------- BatchTrace
+def test_batch_trace_broadcast_stack_design_scaled():
+    base = poisson_trace(2000.0, 60, 3, dt=1e-3, seed=1)
+    bc = BatchTrace.broadcast(base, 4)
+    assert (bc.ticks, bc.n_designs, bc.n_dests) == (60, 4, 3)
+    np.testing.assert_allclose(bc.n_requests,
+                               np.full(4, base.n_requests))
+    np.testing.assert_array_equal(bc.design(2).arrivals, base.arrivals)
+
+    others = [poisson_trace(2000.0, 60, 3, dt=1e-3, seed=s)
+              for s in (1, 2)]
+    st = BatchTrace.stack(others)
+    assert st.n_designs == 2
+    np.testing.assert_array_equal(st.design(0).arrivals,
+                                  others[0].arrivals)
+    np.testing.assert_array_equal(st.design(1).arrivals,
+                                  others[1].arrivals)
+    assert st.design(0).dt == base.dt
+
+    sc = st.scaled(np.asarray([1.0, 0.5]))
+    np.testing.assert_allclose(sc.n_requests,
+                               st.n_requests * np.asarray([1.0, 0.5]))
+    with pytest.raises(AssertionError):
+        BatchTrace.stack([others[0],
+                          poisson_trace(2000.0, 61, 3, dt=1e-3, seed=3)])
