@@ -1,0 +1,136 @@
+"""Fault-injection benchmark: robustness of the closed-loop co-sim.
+
+Replays the PR's scenario gate at benchmark scale — a 3+3 replicated
+pipeline under a 2x diurnal surge with a back-end replica killed for a
+fifth of the run — three ways (no recovery, respill recovery, recovery
+with the online detector in the loop), reporting soak throughput
+(ticks/sec with the full fault/SLO/balancer machinery engaged vs the
+fault-free loop) plus the recovery-time row: detection latency and
+backlog-clear time after the revive.  Emits ``BENCH_sim_faults.json``
+so robustness overhead and recovery latency are tracked across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.runtime.fault import SimFaultConfig, SimFaultSupervisor
+from repro.sim import (FaultSchedule, FlowPattern, LoadBalancer, SimConfig,
+                       SimEngine, SimPlatform, SLOConfig, diurnal_trace)
+from repro.core.perfmodel import AccelWorkload, SoCPerfModel
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_sim_faults.json")
+
+TICKS = 8_000
+DT = 1e-3
+KILL = (3_600, 5_200)            # a fifth of the run, straddling the peak
+STAGE0 = ("fe0", "fe1", "fe2")
+STAGE1 = ("be0", "be1", "be2")
+
+
+def _platform() -> SimPlatform:
+    m = SoCPerfModel()
+    pos = [(r, c) for r in range(4) for c in range(4)
+           if (r, c) not in {(1, 0), (0, 0), (0, 3)}][:6]
+    wls = [AccelWorkload("dfmul", 8.70, 1.1, replication=8) for _ in pos]
+    return SimPlatform.build(m, wls, pos, names=STAGE0 + STAGE1, n_tg=2,
+                             req_mb=0.005,
+                             flows=FlowPattern.chain(STAGE0, STAGE1))
+
+
+def _trace(plat):
+    cap = SimEngine(plat).capacity_rps()
+    stage_cap = float(cap[:3].sum())
+    mean = np.zeros(6)
+    mean[:3] = 0.45 * stage_cap / 3.0
+    return diurnal_trace(mean, TICKS, 6, dt=DT, depth=1.0 / 3.0, seed=11,
+                         phase=-np.pi / 2.0)
+
+
+def _run(plat, tr, *, faults=None, slo=None, supervisor=None):
+    bal = (LoadBalancer((STAGE0, STAGE1), plat.names, mode="even")
+           if faults is not None else None)
+    eng = SimEngine(plat, config=SimConfig(control_interval=25),
+                    faults=faults, slo=slo, balancer=bal,
+                    supervisor=supervisor)
+    t0 = time.perf_counter()
+    r = eng.run(tr)
+    return eng, r, time.perf_counter() - t0
+
+
+def bench_sim_faults():
+    plat = _platform()
+    tr = _trace(plat)
+    sched = FaultSchedule().kill_tile("be1", start=KILL[0], end=KILL[1])
+    recover = SLOConfig(deadline_s=0.05, on_kill="respill", max_retries=1)
+    norec = SLOConfig(deadline_s=0.05, on_kill="drop", max_retries=0)
+
+    runs = {}
+    rows = []
+    _, r0, w0 = _run(plat, tr)                       # fault-free reference
+    runs["fault_free"] = {"wall_seconds": w0, "ticks_per_sec": TICKS / w0,
+                          "completed": r0.completed, "drop_rate": 0.0,
+                          "p99_latency_s": r0.p99_latency_s}
+
+    cases = [("no_recovery", dict(faults=sched, slo=norec)),
+             ("recovery", dict(faults=sched, slo=recover)),
+             ("recovery_detected",
+              dict(faults=sched, slo=recover,
+                   supervisor=SimFaultSupervisor(
+                       SimFaultConfig(dead_ticks=3))))]
+    for name, kw in cases:
+        eng, r, wall = _run(plat, tr, **kw)
+        runs[name] = {
+            "wall_seconds": wall,
+            "ticks_per_sec": TICKS / wall,
+            "completed": r.completed,
+            "dropped_slo": r.dropped_slo,
+            "dropped_fault": r.dropped_fault,
+            "retried": r.retried,
+            "drop_rate": r.drop_rate,
+            "p99_latency_s": r.p99_latency_s,
+        }
+        rows.append((f"sim_faults_{name}", wall * 1e6,
+                     f"ticks/s={TICKS / wall:,.0f} "
+                     f"drop={r.drop_rate:.2%} "
+                     f"retried={r.retried:,.0f} "
+                     f"p99={r.p99_latency_s * 1e3:.1f}ms"))
+
+    # soak overhead of the fault machinery relative to the plain loop
+    runs["soak_overhead_vs_fault_free"] = (
+        runs["recovery"]["wall_seconds"] / runs["fault_free"]["wall_seconds"]
+        - 1.0)
+
+    # recovery-time row: detection latency (online detector) + ticks for
+    # the total backlog to return to its pre-kill level after the revive
+    sup = SimFaultSupervisor(SimFaultConfig(dead_ticks=3))
+    eng, r, _ = _run(plat, tr, faults=sched, slo=recover, supervisor=sup)
+    dead_evs = [e for e in sup.events if e["kind"] == "detected_dead"]
+    detect_ticks = (dead_evs[0]["tick"] - KILL[0]) if dead_evs else -1
+    qh = np.asarray(eng.last_fault_histories["queue"])
+    pre = float(np.percentile(qh[KILL[0] - 500:KILL[0]], 95))
+    after = np.nonzero(qh[KILL[1]:] <= pre + 1e-9)[0]
+    clear_ticks = int(after[0]) if after.size else -1
+    runs["recovery_time"] = {
+        "detect_latency_ticks": detect_ticks,
+        "detect_latency_s": detect_ticks * DT,
+        "backlog_clear_ticks_after_revive": clear_ticks,
+        "backlog_clear_s_after_revive": clear_ticks * DT,
+    }
+    rows.append(("sim_faults_recovery_time", detect_ticks * DT * 1e6,
+                 f"detect={detect_ticks} ticks "
+                 f"backlog_clear={clear_ticks} ticks after revive"))
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump({"ticks": TICKS, "dt": DT, "kill_window": list(KILL),
+                   "deadline_s": recover.deadline_s, "runs": runs},
+                  f, indent=2)
+    return rows
+
+
+def run():
+    return bench_sim_faults()

@@ -77,13 +77,14 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_contention, bench_dfs_traffic, bench_dse,
                             bench_kernels, bench_replication, bench_sim,
-                            bench_sim_batch)
+                            bench_sim_batch, bench_sim_faults)
     mods = [("replication(TableI)", bench_replication),
             ("contention(Fig3)", bench_contention),
             ("dfs_traffic(Fig4)", bench_dfs_traffic),
             ("dse", bench_dse),
             ("sim(closed-loop)", bench_sim),
             ("sim_batch(multi-design)", bench_sim_batch),
+            ("sim_faults(robustness)", bench_sim_faults),
             ("kernels", bench_kernels)]
     rows = []
     failures = 0

@@ -814,6 +814,7 @@ class ClosedLoopScore:
     throughput_rps: np.ndarray          # (M,) float64
     order: np.ndarray                   # (M,) int64 positions into indices
     results: List[object]               # SimResults, or one BatchSimResult
+    drop_rate: Optional[np.ndarray] = None   # (M,) under a fault schedule
 
     def ranked_indices(self) -> np.ndarray:
         """Flat SweepResult indices, best-first."""
@@ -821,10 +822,23 @@ class ClosedLoopScore:
 
 
 def _rank_scores(p99: np.ndarray, ept: np.ndarray,
-                 p99_sla_s: Optional[float]) -> np.ndarray:
-    if p99_sla_s is not None:
-        miss = np.maximum(0.0, p99 / p99_sla_s - 1.0)
-        return np.lexsort((ept, miss))      # SLA first, then energy
+                 p99_sla_s: Optional[float],
+                 drop_rate: Optional[np.ndarray] = None,
+                 max_drop_rate: Optional[float] = None) -> np.ndarray:
+    """Best-first order: SLO-miss severity (p99 miss + drop-budget miss),
+    then energy.  Without SLO bounds the legacy (energy, p99) order is
+    unchanged; ``drop_rate`` only participates when given (fault-aware
+    scoring), so fault-free rankings are untouched."""
+    if p99_sla_s is not None or max_drop_rate is not None:
+        miss = np.zeros_like(np.asarray(ept, dtype=np.float64))
+        if p99_sla_s is not None:
+            miss = miss + np.maximum(0.0, p99 / p99_sla_s - 1.0)
+        if max_drop_rate is not None and drop_rate is not None:
+            miss = miss + np.maximum(0.0, drop_rate / max_drop_rate - 1.0)
+        return np.lexsort((ept, miss))      # SLO first, then energy
+    if drop_rate is not None:
+        # fault-aware but unbudgeted: robustness outranks energy
+        return np.lexsort((ept, p99, drop_rate))
     return np.lexsort((p99, ept))           # energy first, p99 tie-break
 
 
@@ -841,7 +855,11 @@ def closed_loop_score(result: SweepResult, trace, *,
                       backend: str = "numpy",
                       trace_seed: int = 0,
                       flows=None,
-                      balancer_factory=None) -> ClosedLoopScore:
+                      balancer_factory=None,
+                      fault_schedule=None,
+                      slo=None,
+                      max_drop_rate: Optional[float] = None
+                      ) -> ClosedLoopScore:
     """Re-rank static-sweep survivors by *simulated* runtime behaviour.
 
     The static objectives of :func:`grid_sweep` assume steady saturated
@@ -887,6 +905,15 @@ def closed_loop_score(result: SweepResult, trace, *,
     On the batched path ``trace`` may also be a ``repro.sim.BatchTrace``
     whose design axis matches the survivor count — each survivor then
     replays its own arrival tensor.
+
+    Robustness scoring: ``fault_schedule`` (a ``repro.sim.FaultSchedule``)
+    replays every survivor through the same injected failures (tile
+    kills, link degradation, stuck actuators) with ``slo`` (a
+    ``repro.sim.SLOConfig``) fixing deadline/recovery semantics — the
+    ranking then uses p99-*under-failure* and each survivor's drop rate
+    (hard budget via ``max_drop_rate``, joining the p99 SLA in the miss
+    score; otherwise as the primary sort key ahead of energy).  Fault-free
+    calls rank exactly as before.
     """
     from repro.sim import BatchTrace, SimConfig, SimEngine, SimPlatform
 
@@ -922,16 +949,21 @@ def closed_loop_score(result: SweepResult, trace, *,
                                 balancer=(balancer_factory(platform)
                                           if balancer_factory is not None
                                           else None),
-                                backend=backend)
+                                backend=backend,
+                                faults=fault_schedule, slo=slo)
         r = engine.run(trace)
         p99 = r.p99_latency_s
         ept = r.energy_per_request_j
         thr = r.throughput_rps
+        drops = (np.asarray(r.drop_rate, dtype=np.float64)
+                 if fault_schedule is not None else None)
         results: List[object] = [r]
     else:
         p99 = np.empty(indices.shape[0])
         ept = np.empty(indices.shape[0])
         thr = np.empty(indices.shape[0])
+        drops = (np.empty(indices.shape[0])
+                 if fault_schedule is not None else None)
         results = []
         for j, i in enumerate(indices):
             dp = result.design_point(int(i))
@@ -945,19 +977,23 @@ def closed_loop_score(result: SweepResult, trace, *,
                                controller=controller,
                                balancer=(balancer_factory(platform)
                                          if balancer_factory is not None
-                                         else None))
+                                         else None),
+                               faults=fault_schedule, slo=slo)
             r = engine.run(trace.design(j) if isinstance(trace, BatchTrace)
                            else trace)
             results.append(r)
             p99[j] = r.p99_latency_s
             ept[j] = r.energy_per_request_j
             thr[j] = r.throughput_rps
+            if drops is not None:
+                drops[j] = r.drop_rate
 
-    order = _rank_scores(p99, ept, p99_sla_s)
+    order = _rank_scores(p99, ept, p99_sla_s, drop_rate=drops,
+                         max_drop_rate=max_drop_rate)
     return ClosedLoopScore(indices=indices, p99_latency_s=p99,
                            energy_per_request_j=ept, throughput_rps=thr,
                            order=np.asarray(order, dtype=np.int64),
-                           results=results)
+                           results=results, drop_rate=drops)
 
 
 # ---------------------------------------------------------------------------

@@ -16,6 +16,15 @@ responses, all built on substrate already in this repo:
   (CheckpointStore.restore(shardings=...)); the pipeline's counter-based
   batches repartition with no coordination.  Losing a DP replica is a
   rescale from (pod=2) to (pod=1).
+
+The second half of this module is the *co-sim* side of the same story:
+:class:`SimFaultSupervisor` watches the closed-loop simulator's per-tick
+observables (served work, backlog, masked capacity) through an
+:class:`OnlineFaultDetector` and maintains a **believed** availability
+mask — the sequential ``SimEngine`` routes recovery traffic on the
+supervisor's *detected* state rather than the injected oracle mask, so
+detection latency (a few ticks of mis-routed work) is part of what the
+scenario gates measure.
 """
 from __future__ import annotations
 
@@ -113,3 +122,126 @@ class FaultSupervisor:
                     self.events.append(FaultEvent(s, kind))
                     self.recover()
         return history
+
+
+# ---------------------------------------------------------------------------
+# Online fault detection for the closed-loop co-sim
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SimFaultConfig:
+    """Detector thresholds for :class:`OnlineFaultDetector`.
+
+    ``dead_ticks`` consecutive ticks of (zero capacity + standing backlog
+    + nothing served) declare a tile dead; recovery (capacity observed
+    again) clears the belief immediately.  ``min_backlog`` filters idle
+    tiles — a healthy tile with no work also serves nothing, and must not
+    be declared dead.  ``straggler_slack`` mirrors :class:`FaultConfig`
+    for busy-skew flagging (advisory events, no mask change); a tile must
+    hold the skew for ``straggler_ticks`` consecutive ticks before it is
+    flagged, so per-tick Poisson flicker never reaches the event log."""
+    dead_ticks: int = 3
+    min_backlog: float = 1e-9
+    straggler_slack: float = 1.3
+    straggler_ticks: int = 25
+
+
+class OnlineFaultDetector:
+    """Vectorized dead-tile detection from per-tick sim observables.
+
+    Pure observation: never sees the injected schedule.  A tile is
+    *suspected* while ``cap <= 0`` and ``queue > min_backlog`` and
+    ``served <= 0``; ``dead_ticks`` consecutive suspect ticks latch the
+    dead belief, and any tick with observable capacity clears it (the
+    revive probe — a revived tile's nominal capacity is visible even
+    before traffic is routed back to it)."""
+
+    def __init__(self, n_tiles: int, config: Optional[SimFaultConfig] = None):
+        self.config = config or SimFaultConfig()
+        self._streak = np.zeros(n_tiles, dtype=np.int64)
+        self._dead = np.zeros(n_tiles, dtype=bool)
+
+    @property
+    def believed_dead(self) -> np.ndarray:
+        return self._dead.copy()
+
+    def observe(self, served: np.ndarray, queue: np.ndarray,
+                cap: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """One tick's observables -> (newly_dead, newly_alive) masks."""
+        c = self.config
+        suspect = (np.asarray(cap) <= 0.0) & \
+                  (np.asarray(queue) > c.min_backlog) & \
+                  (np.asarray(served) <= 0.0)
+        self._streak = np.where(suspect, self._streak + 1, 0)
+        has_cap = np.asarray(cap) > 0.0
+        dead_now = (self._dead | (self._streak >= c.dead_ticks)) & ~has_cap
+        newly_dead = dead_now & ~self._dead
+        newly_alive = self._dead & ~dead_now
+        self._dead = dead_now
+        return newly_dead, newly_alive
+
+
+class SimFaultSupervisor:
+    """Online detection/recovery harness for the sequential sim engine.
+
+    Pass as ``SimEngine(..., supervisor=...)``: each tick the engine
+    feeds the detector and routes re-spill/splits on ``believed_alive``
+    instead of the oracle mask — stranded work keeps flowing to a
+    dead replica for the detector's latency window and is only then
+    re-spilled, which is exactly the fidelity gap an offline mask-based
+    recovery model hides.  Also flags busy-skew stragglers (advisory
+    telemetry events, mirroring the trainer-side supervisor's policy)."""
+
+    def __init__(self, config: Optional[SimFaultConfig] = None):
+        self.config = config or SimFaultConfig()
+        self.detector: Optional[OnlineFaultDetector] = None
+        self.events: List[Dict[str, object]] = []
+        self._names: Tuple[str, ...] = ()
+        self._last_skew: frozenset = frozenset()
+        self._skew_streak: Optional[np.ndarray] = None
+
+    def begin_run(self, names) -> None:
+        self._names = tuple(names)
+        self.detector = OnlineFaultDetector(len(self._names), self.config)
+        self.events = []
+        self._last_skew = frozenset()
+        self._skew_streak = np.zeros(len(self._names), dtype=np.int64)
+
+    @property
+    def believed_alive(self) -> np.ndarray:
+        assert self.detector is not None, "begin_run not called"
+        return 1.0 - self.detector.believed_dead.astype(np.float64)
+
+    def observe(self, tick: int, *, served, queue, cap,
+                busy=None) -> List[Dict[str, object]]:
+        """One tick's observables; returns event dicts (also retained on
+        ``self.events``) for the engine to forward into telemetry."""
+        assert self.detector is not None, "begin_run not called"
+        newly_dead, newly_alive = self.detector.observe(served, queue, cap)
+        out: List[Dict[str, object]] = []
+        for mask, kind in ((newly_dead, "detected_dead"),
+                           (newly_alive, "detected_alive")):
+            if mask.any():
+                out.append({
+                    "tick": int(tick), "kind": kind,
+                    "tiles": [self._names[i] for i in np.nonzero(mask)[0]]})
+        if busy is not None:
+            b = np.asarray(busy, dtype=np.float64)
+            live = ~self.detector.believed_dead
+            if live.sum() >= 2:
+                med = float(np.median(b[live]))
+                raw = (med > 0) & live & (b > self.config.straggler_slack
+                                          * max(med, 1e-9))
+                self._skew_streak = np.where(raw, self._skew_streak + 1, 0)
+                persist = self._skew_streak >= self.config.straggler_ticks
+                cur = frozenset(np.nonzero(persist)[0].tolist())
+                # emit only persistent skew, and only on set changes —
+                # per-tick Poisson flicker would flood a long soak's log
+                if cur and cur != self._last_skew:
+                    out.append({
+                        "tick": int(tick), "kind": "straggler_suspect",
+                        "tiles": [self._names[i] for i in sorted(cur)]})
+                self._last_skew = cur
+        self.events.extend(out)
+        return out

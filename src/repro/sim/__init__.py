@@ -23,8 +23,13 @@ control.py   — controller harness: windowed C3 counter samples -> dfs
                policies -> dual-buffer actuator commits (scalar + the
                vectorized multi-design BatchControllerHarness) and the
                LoadBalancer admission policy for replicated islands
+faults.py    — FaultSchedule (tile/island kills, link degradation, stuck
+               actuators) compiled to per-tick availability/scale masks
+               the tick loop consumes, plus SLOConfig (deadline drops,
+               bounded retry of stranded work) — all three backends
+               replay one schedule, bit-for-bit at B=1
 telemetry.py — ring-buffer time series + JSON export (per-design rings
-               for the batched engine)
+               for the batched engine), incl. drop/retry fault counters
 
 DSE bridge: ``core/dse.py:closed_loop_score`` re-ranks ``grid_sweep``
 Pareto survivors by simulated tail latency and energy under dynamic
@@ -38,6 +43,9 @@ from repro.sim.batch import (  # noqa: F401
 from repro.sim.control import (  # noqa: F401
     BatchControllerHarness, BatchSample, ControlAction, ControllerHarness,
     IslandTopology, LoadBalancer)
+from repro.sim.faults import (  # noqa: F401
+    CompiledFaults, FaultSchedule, IslandKill, LinkDegrade, SLOConfig,
+    StuckRate, TileKill, compile_faults, respill_stranded)
 from repro.sim.flows import (  # noqa: F401
     CompiledFlows, FlowPattern, compile_flows)
 from repro.sim.telemetry import (  # noqa: F401

@@ -55,6 +55,8 @@ from repro.core.perfmodel import SoCPerfModel
 from repro.sim.control import BatchControllerHarness, LoadBalancer
 from repro.sim.engine import (PKT_BYTES, SimConfig, SimPlatform, StepConsts,
                               TickState, latency_percentiles, tick_step)
+from repro.sim.faults import (CompiledFaults, FaultSchedule, SLOConfig,
+                              compile_faults, respill_stranded)
 from repro.sim.flows import FlowPattern, compile_flows
 from repro.sim.telemetry import BatchTelemetry, TelemetrySchema
 from repro.sim.traffic import BatchTrace, Trace
@@ -214,6 +216,28 @@ class BatchSimResult:
     elapsed_wall_s: float               # whole batch, one clock
     backend: str = "numpy"
     telemetry: Optional[BatchTelemetry] = None   # None on the jax backend
+    # fault/SLO ledgers, (B,) each (None on legacy constructions)
+    dropped_slo: Optional[np.ndarray] = None
+    dropped_fault: Optional[np.ndarray] = None
+    retried: Optional[np.ndarray] = None
+
+    @property
+    def dropped_total(self) -> np.ndarray:
+        """(B,) admission + SLO + stranded drops."""
+        tot = np.asarray(self.dropped, dtype=np.float64).copy()
+        if self.dropped_slo is not None:
+            tot = tot + self.dropped_slo
+        if self.dropped_fault is not None:
+            tot = tot + self.dropped_fault
+        return tot
+
+    @property
+    def drop_rate(self) -> np.ndarray:
+        """(B,) dropped fraction of offered load (0 when nothing offered).
+        Per-design floats match the sequential ``SimResult.drop_rate``."""
+        off = np.asarray(self.offered, dtype=np.float64)
+        tot = self.dropped_total
+        return np.where(off > 0.0, tot / np.where(off > 0.0, off, 1.0), 0.0)
 
     @property
     def designs_per_s_wall(self) -> float:
@@ -248,15 +272,20 @@ class BatchSimEngine:
                  config: SimConfig = SimConfig(),
                  controller: Optional[BatchControllerHarness] = None,
                  balancer: Optional[LoadBalancer] = None,
-                 backend: str = "numpy"):
+                 backend: str = "numpy",
+                 faults: Optional[FaultSchedule] = None,
+                 slo: Optional[SLOConfig] = None):
         assert backend in ("numpy", "jax"), backend
         self.platform = platform
         self.config = config
         self.controller = controller
         self.balancer = balancer
         self.backend = backend
+        self.faults = faults
+        self.slo = slo
         self.last_state: Optional[TickState] = None
         self.last_histories = None      # (admitted, served) (T, B, A)
+        self.last_fault_histories = None
         m = platform.model
         # per-design route->link incidence, stacked dense: (B, A, L) —
         # per-design routes of the (shared, name-keyed) flow pattern
@@ -280,11 +309,21 @@ class BatchSimEngine:
         self._jax_fn = None             # compiled scan, keyed by (T, ci)
 
     # ------------------------------------------------------------ service
-    def _service(self, rates: np.ndarray) -> Dict[str, np.ndarray]:
+    def _service(self, rates: np.ndarray,
+                 rate_override: Optional[np.ndarray] = None
+                 ) -> Dict[str, np.ndarray]:
         """Service-time terms for a (B, I) rate matrix — the stacked
-        analogue of ``SimEngine._service`` (recomputed only on commits)."""
+        analogue of ``SimEngine._service`` (recomputed only on commits).
+
+        ``rate_override`` is the stuck-actuator hardware view: an (I,)
+        row, NaN = follow the software rate.  It affects only the terms
+        computed here — the caller's ``rates`` matrix (what telemetry
+        records and the controller reasons about) stays the software
+        view, exactly like the sequential engine."""
         p = self.platform
         B, A = p.n_designs, p.n_tiles
+        if rate_override is not None:
+            rates = np.where(np.isnan(rate_override), rates, rate_override)
         f_tile = rates[:, self._island_of_tile]              # (B, A)
         f_noc = (rates[:, self._noc_island] if self._noc_island >= 0
                  else np.ones(B))
@@ -323,6 +362,13 @@ class BatchSimEngine:
         if isinstance(trace, BatchTrace):
             assert trace.n_designs == p.n_designs, \
                 (trace.n_designs, p.n_designs)
+
+    def _compile_faults(self, T: int) -> Optional[CompiledFaults]:
+        if self.faults is None or not self.faults:
+            return None
+        p = self.platform
+        return compile_faults(self.faults, ticks=T, names=p.names,
+                              islands=p.islands, noc=p.model.noc)
 
     @staticmethod
     def _offered(trace):
@@ -363,15 +409,40 @@ class BatchSimEngine:
         else:
             rates = p.rates
             swaps0 = np.zeros(B, dtype=np.int64)
+
+        # ---- fault/SLO compilation: one shared schedule drives all B
+        # designs (faults are a property of the scenario, not the design);
+        # every hook below is None-gated — a fault-free run is the exact
+        # legacy loop, and a B=1 faulted run mirrors the sequential engine
+        # tick for tick (same expressions, trailing-axis reductions).
+        cf = self._compile_faults(T)
+        slo = self.slo
+        if slo is None and cf is not None:
+            slo = SLOConfig()
+        deadline = slo is not None and slo.deadline_s is not None
+        has_tile = cf is not None and cf.has_tile
+        has_link = cf is not None and cf.has_link
+        has_stuck_rate = cf is not None and cf.has_stuck_rate
+        recover = has_tile and slo.recovers and self.balancer is not None
+        track = has_tile or deadline
+        ev_by_tick = cf.events_by_tick() if cf is not None else {}
+        applied_stuck = None
         svc = self._service(rates)
 
         st = TickState.zeros((B, A))
         consts = self.step_consts(dt)
+        if deadline:
+            consts = dataclasses.replace(
+                consts, deadline_ticks=slo.deadline_s / dt)
         carry = np.zeros((B, A)) if consts.forward is not None else None
         prev_cap = (self.capacity_rps(rates) * dt
                     if self.balancer is not None else None)
         admitted_hist = np.zeros((T, B, A))
         served_hist = np.zeros((T, B, A))
+        qdrop_hist = np.zeros((T, B, A)) if track else None
+        fh = ({k: np.zeros((T, B)) for k in
+               ("dropped", "dropped_slo", "dropped_fault", "retried",
+                "queue", "carry")} if track else None)
         win_busy = np.zeros((B, A))
         win_served = np.zeros(B)
         win_ticks = 0
@@ -384,18 +455,62 @@ class BatchSimEngine:
 
         wall0 = time.perf_counter()
         for t_i in range(T):
+            for ev in ev_by_tick.get(t_i, ()):
+                telem.event(t_i, ev["kind"],
+                            **{k: v for k, v in ev.items()
+                               if k not in ("tick", "kind")})
+            alive = cf.tile_alive[t_i] if has_tile else None
+            lscale = cf.link_scale[t_i] if has_link else None
+            if has_stuck_rate:
+                row = cf.stuck_rate[t_i]
+                if applied_stuck is None or not np.array_equal(
+                        row, applied_stuck, equal_nan=True):
+                    applied_stuck = row
+                    svc = self._service(rates, rate_override=applied_stuck)
+
+            respill = stranded_exit = None
+            if has_tile and slo.on_kill != "wait":
+                st.queue, st.retry_q, respill, fdrop = respill_stranded(
+                    st.queue, st.retry_q, alive,
+                    self.balancer if recover else None)
+                st.dropped_fault = st.dropped_fault + fdrop.sum(axis=-1)
+                if recover:
+                    st.retried = st.retried + respill.sum(axis=-1)
+                stranded_exit = respill + fdrop
+
             arr = arrivals[t_i]
             if carry is not None:
                 arr = arr + carry
+            retry_arr = None
             if self.balancer is not None:
-                arr = self.balancer.split(arr, st.queue, prev_cap)
-            out = tick_step(st, arr, svc, consts)
+                arr = self.balancer.split(
+                    arr, st.queue, prev_cap,
+                    alive=alive if recover else None)
+                if recover:
+                    retry_arr = self.balancer.split(respill, st.queue,
+                                                    prev_cap, alive=alive)
+                    arr = arr + retry_arr
+            out = tick_step(st, arr, svc, consts, alive=alive,
+                            link_scale=lscale, retry_in=retry_arr)
             if carry is not None:
                 carry = out.forwarded
             if self.balancer is not None:
                 prev_cap = out.cap_tick
             admitted_hist[t_i] = out.admitted
             served_hist[t_i] = out.served
+            if track:
+                qd = qdrop_hist[t_i]
+                if stranded_exit is not None:
+                    qd += stranded_exit
+                if out.slo_drop is not None:
+                    qd += out.slo_drop
+                fh["dropped"][t_i] = st.dropped
+                fh["dropped_slo"][t_i] = st.dropped_slo
+                fh["dropped_fault"][t_i] = st.dropped_fault
+                fh["retried"][t_i] = st.retried
+                fh["queue"][t_i] = st.queue.sum(axis=-1)
+                fh["carry"][t_i] = (carry.sum(axis=-1)
+                                    if carry is not None else 0.0)
 
             win_busy += st.busy
             win_served += out.served.sum(axis=-1)
@@ -414,7 +529,9 @@ class BatchSimEngine:
                     link_util_mean=out.rho.mean(axis=-1),
                     latency_est_s=(st.queue.sum(axis=-1)
                                    / np.maximum(cap_rps_now.sum(axis=-1),
-                                                1e-9)))
+                                                1e-9)),
+                    dropped=st.dropped, dropped_slo=st.dropped_slo,
+                    dropped_fault=st.dropped_fault, retried=st.retried)
                 win_busy = np.zeros((B, A))
                 win_served = np.zeros(B)
                 win_ticks = 0
@@ -428,12 +545,15 @@ class BatchSimEngine:
                     boundness=t_wire_now / (self._t_comp_ref + t_wire_now),
                     pkts_in=st.pkts_in, pkts_out=st.pkts_out,
                     rtt=st.rtt_acc,
-                    queue_ticks=st.queue / np.maximum(out.cap_tick, 1e-12))
+                    queue_ticks=st.queue / np.maximum(out.cap_tick, 1e-12),
+                    dead=cf.island_dead[t_i] if has_tile else None,
+                    stuck=(cf.stuck[t_i]
+                           if cf is not None and cf.has_stuck else None))
                 ctl_busy = np.zeros((B, A))
                 ctl_ticks = 0
                 if new_rates is not None:
                     rates = new_rates
-                    svc = self._service(rates)
+                    svc = self._service(rates, rate_override=applied_stuck)
                     telem.event(
                         t_i, "dfs_commit",
                         designs=np.nonzero(
@@ -442,6 +562,8 @@ class BatchSimEngine:
 
         self.last_state = st
         self.last_histories = (admitted_hist, served_hist)
+        self.last_fault_histories = (
+            None if fh is None else {**fh, "queue_drops": qdrop_hist})
         return self._result(trace, admitted_hist, served_hist,
                             completed=self._completed(served_hist),
                             dropped=np.asarray(st.dropped, dtype=np.float64),
@@ -450,17 +572,26 @@ class BatchSimEngine:
                             swaps=(self.controller.swaps - swaps0
                                    if self.controller is not None
                                    else np.zeros(B, dtype=np.int64)),
-                            elapsed=elapsed, backend="numpy", telem=telem)
+                            elapsed=elapsed, backend="numpy", telem=telem,
+                            dropped_slo=np.asarray(st.dropped_slo,
+                                                   dtype=np.float64),
+                            dropped_fault=np.asarray(st.dropped_fault,
+                                                     dtype=np.float64),
+                            retried=np.asarray(st.retried,
+                                               dtype=np.float64),
+                            qdrops=qdrop_hist)
 
     def _result(self, trace, admitted_hist, served_hist, *, completed,
                 dropped, residual, energy, swaps, elapsed, backend,
-                telem) -> BatchSimResult:
+                telem, dropped_slo=None, dropped_fault=None, retried=None,
+                qdrops=None) -> BatchSimResult:
         B, T, dt = self.platform.n_designs, trace.ticks, trace.dt
         p50 = np.empty(B)
         p99 = np.empty(B)
         for b in range(B):
             p50[b], p99[b] = latency_percentiles(
-                admitted_hist[:, b], served_hist[:, b], dt)
+                admitted_hist[:, b], served_hist[:, b], dt,
+                queue_drops=None if qdrops is None else qdrops[:, b])
         sim_seconds = T * dt
         return BatchSimResult(
             n_designs=B, ticks=T, dt=dt,
@@ -473,7 +604,9 @@ class BatchSimEngine:
             mean_power_w=(energy / sim_seconds if sim_seconds
                           else np.zeros(B)),
             swaps=np.asarray(swaps, dtype=np.int64),
-            elapsed_wall_s=elapsed, backend=backend, telemetry=telem)
+            elapsed_wall_s=elapsed, backend=backend, telemetry=telem,
+            dropped_slo=dropped_slo, dropped_fault=dropped_fault,
+            retried=retried)
 
     # ------------------------------------------------------------- jax
     def _control_plan(self):
@@ -557,13 +690,17 @@ class BatchSimEngine:
             lb_cov = jnp.asarray(lb.covered)
             lb_mode = lb.mode
 
-            def lb_split(arr, queue, cap):
+            def lb_split(arr, queue, cap, alive=None):
                 if lb_mode == "even":
                     w = jnp.ones_like(arr)
                 elif lb_mode == "capacity":
                     w = cap
                 else:
                     w = cap / (1.0 + queue)
+                # sanitize + dead-replica masking, as LoadBalancer.split
+                w = jnp.where(jnp.isfinite(w) & (w > 0.0), w, 0.0)
+                if alive is not None:
+                    w = w * alive
                 tot = jnp.einsum("ba,ga->bg", arr, lbM)
                 wsum = jnp.einsum("ba,ga->bg", w, lbM)
                 # all-zero weight groups fall back to an even split,
@@ -582,6 +719,24 @@ class BatchSimEngine:
         n_tg = p.n_tg
         dyn_on = cfg.dynamic_contention
         max_q = cfg.max_queue
+
+        # ----- fault/SLO statics: presence flags are Python bools baked
+        # into the trace (part of the jit cache key); the per-tick mask
+        # VALUES ride through the scanned xs pytree, so editing a schedule
+        # of the same shape class never retraces
+        cf = self._compile_faults(T)
+        slo = self.slo
+        if slo is None and cf is not None:
+            slo = SLOConfig()
+        deadline = slo is not None and slo.deadline_s is not None
+        deadline_ticks = slo.deadline_s / dt if deadline else None
+        has_tile = cf is not None and cf.has_tile
+        has_link = cf is not None and cf.has_link
+        has_stuck = cf is not None and cf.has_stuck
+        has_stuck_rate = cf is not None and cf.has_stuck_rate
+        recover = has_tile and slo.recovers and lb is not None
+        drain = has_tile and slo.on_kill != "wait"
+        track = has_tile or deadline
 
         if kind != "none":
             topo = plan["topo"]
@@ -610,18 +765,57 @@ class BatchSimEngine:
             return t_comp, t_wire, f_tile, f_noc
 
         def step(carry, xs):
-            arr_t, ctl_flag = xs
+            arr_t, ctl_flag = xs["arr"], xs["ctl"]
             (queue, busy, rtt, rates, guard, pid_i, pid_prev, pid_has,
-             ctl_busy, dropped, energy, swaps, carry_fwd, prev_cap) = carry
-            t_comp, t_wire, f_tile, f_noc = service(rates)
+             ctl_busy, dropped, energy, swaps, carry_fwd, prev_cap,
+             retry_q, dslo, dfault, retried) = carry
+            alive_t = xs["alive"] if has_tile else None
+            if has_stuck_rate:
+                srate_t = xs["srate"]          # (I,) NaN = follow software
+                rates_eff = jnp.where(jnp.isnan(srate_t)[None, :],
+                                      rates, srate_t[None, :])
+            else:
+                rates_eff = rates
+            t_comp, t_wire, f_tile, f_noc = service(rates_eff)
+
+            # drain work stranded on dead replicas BEFORE the split, so
+            # the re-spill weights see the post-drain queues (as the
+            # numpy engines do)
+            respill = stranded_exit = None
+            if drain:
+                dead_m = 1.0 - alive_t
+                stranded = queue * dead_m
+                s_retry = retry_q * dead_m
+                queue = queue - stranded
+                retry_q = retry_q - s_retry
+                if recover:
+                    surv = jnp.einsum("a,ga->g", alive_t, lbM) > 0.0
+                    can = lb_cov & surv[lb_gof]
+                    respill = jnp.where(can, stranded - s_retry, 0.0)
+                    fdrop = stranded - respill
+                    retried = retried + respill.sum(axis=-1)
+                    stranded_exit = respill + fdrop
+                else:
+                    fdrop = stranded
+                    stranded_exit = stranded
+                dfault = dfault + fdrop.sum(axis=-1)
 
             arr_eff = jnp.broadcast_to(arr_t, queue.shape)
             if has_fwd:
                 arr_eff = arr_eff + carry_fwd
+            retry_arr = None
             if lb is not None:
-                arr_eff = lb_split(arr_eff, queue, prev_cap)
+                arr_eff = lb_split(arr_eff, queue, prev_cap,
+                                   alive=alive_t if recover else None)
+                if recover:
+                    retry_arr = lb_split(respill, queue, prev_cap,
+                                         alive=alive_t)
+                    arr_eff = arr_eff + retry_arr
             q = queue + arr_eff
             adm = arr_eff
+            if recover:
+                q0 = q                  # retry-class mixing denominator
+                retry_q = retry_q + retry_arr
             if max_q != float("inf"):
                 over = jnp.maximum(q - max_q, 0.0)
                 q = q - over
@@ -629,6 +823,8 @@ class BatchSimEngine:
                 dropped = dropped + over.sum(axis=-1)
             if dyn_on:
                 loads = jnp.einsum("ba,bal->bl", demand * busy, inc)
+                if has_link:
+                    loads = loads / xs["lscale"]
                 rho = ((inc * loads[:, None, :]).max(axis=-1)
                        / (link_bw * f_noc[:, None]))
                 r = jnp.minimum(rho, 0.999)
@@ -637,18 +833,38 @@ class BatchSimEngine:
                 dyn = jnp.ones_like(q)
             cap = (base_mbps * t_ref / (t_comp + t_wire * dyn)
                    / req_mb) * dt
-            served = jnp.minimum(q, cap)
-            queue = q - served
-            busy = served / cap
+            if has_tile:
+                cap_nominal = cap
+                cap = cap * alive_t
+                served = jnp.minimum(q, cap)
+                queue = q - served
+                busy = jnp.where(cap > 0.0,
+                                 served / jnp.where(cap > 0.0, cap, 1.0),
+                                 0.0)
+            else:
+                served = jnp.minimum(q, cap)
+                queue = q - served
+                busy = served / cap
+            slo_drop = None
+            if deadline:
+                horizon = ((cap if not has_tile else cap_nominal)
+                           * deadline_ticks)
+                slo_drop = jnp.maximum(queue - horizon, 0.0)
+                queue = queue - slo_drop
+                dslo = dslo + slo_drop.sum(axis=-1)
+            if recover:
+                retry_q = retry_q * jnp.where(
+                    q0 > 0.0, queue / jnp.where(q0 > 0.0, q0, 1.0), 0.0)
             rtt = rtt + hop_counts * dyn * hop_lat
             if has_fwd:
                 carry_fwd = jnp.einsum("ba,aj->bj", served, fwdM)
             if lb is not None:
                 prev_cap = cap
 
-            tile_power = jnp.sum(
-                P_STATIC_W + P_DYN_W * f_tile * voltage2(f_tile) * busy,
-                axis=-1)
+            tp = P_STATIC_W + P_DYN_W * f_tile * voltage2(f_tile) * busy
+            if has_tile:                # dead tiles are power-gated
+                tp = tp * alive_t
+            tile_power = jnp.sum(tp, axis=-1)
             noc_power = cfg.noc_power_share * (
                 P_STATIC_W + P_DYN_W * f_noc * voltage2(f_noc))
             energy = energy + (tile_power + noc_power) * dt
@@ -692,6 +908,8 @@ class BatchSimEngine:
                         jnp.where(qt_i < plan["guard_release"], False,
                                   guard))
                     latch = latch & ~fixed[None, :]
+                    if has_tile:        # dead islands drop out of the latch
+                        latch = latch & ~xs["dead"][None, :]
                     req = jnp.where(latch, plan["guard_rate"], req)
                     valid = valid | latch
                     guard = jnp.where(ctl_flag, latch, guard)
@@ -703,29 +921,46 @@ class BatchSimEngine:
                     idx[:, :, None], axis=-1)[:, :, 0]
                 changed = (valid & ~fixed[None, :] & (qz != rates)
                            & ctl_flag)
+                if has_tile:            # no hardware to commit to
+                    changed = changed & ~xs["dead"][None, :]
+                if has_stuck:           # actuator write never lands
+                    changed = changed & ~xs["stuck_m"][None, :]
                 rates = jnp.where(changed, qz, rates)
                 swaps = swaps + jnp.where(ctl_flag, changed.any(axis=-1),
                                           False)
             ctl_busy = jnp.where(ctl_flag, 0.0, ctl_busy)
             carry = (queue, busy, rtt, rates, guard, pid_i, pid_prev,
                      pid_has, ctl_busy, dropped, energy, swaps, carry_fwd,
-                     prev_cap)
+                     prev_cap, retry_q, dslo, dfault, retried)
+            if track:
+                qdrop_t = jnp.zeros_like(queue)
+                if stranded_exit is not None:
+                    qdrop_t = qdrop_t + stranded_exit
+                if slo_drop is not None:
+                    qdrop_t = qdrop_t + slo_drop
+                return carry, (adm, served, qdrop_t)
             return carry, (adm, served)
 
-        def run_scan(arrivals, rates0, guard0, pid_i0, pid_prev0, pid_has0,
+        def run_scan(xs0, rates0, guard0, pid_i0, pid_prev0, pid_has0,
                      cap0):
             zBA = jnp.zeros((B, A))
+            zB = jnp.zeros(B)
             carry0 = (zBA, zBA, zBA, rates0, guard0, pid_i0, pid_prev0,
-                      pid_has0, zBA, jnp.zeros(B), jnp.zeros(B),
-                      jnp.zeros(B, dtype=jnp.int32), zBA, cap0)
-            return lax.scan(step, carry0, (arrivals, jnp.asarray(is_ctl)))
+                      pid_has0, zBA, zB, zB,
+                      jnp.zeros(B, dtype=jnp.int32), zBA, cap0,
+                      zBA, zB, zB, zB)
+            return lax.scan(step, carry0, xs0)
 
-        # cache the jitted scan per (T, ci): repeated runs of one engine
-        # (e.g. repeated closed_loop_score calls) retrace only on a trace
-        # length / control cadence change; XLA reuses the compiled
-        # executable for matching shapes
-        if self._jax_fn is None or self._jax_fn[0] != (T, ci):
-            self._jax_fn = ((T, ci), jax.jit(run_scan))
+        # cache the jitted scan per (T, ci, fault signature): repeated
+        # runs of one engine (e.g. repeated closed_loop_score calls)
+        # retrace only on a trace length / control cadence / fault-shape
+        # change; XLA reuses the compiled executable for matching shapes
+        # (mask values travel through xs, so same-shape schedules share
+        # one trace)
+        fault_key = (has_tile, has_link, has_stuck, has_stuck_rate,
+                     recover, drain, track, deadline_ticks)
+        if self._jax_fn is None or self._jax_fn[0] != (T, ci, fault_key):
+            self._jax_fn = ((T, ci, fault_key), jax.jit(run_scan))
         run_scan = self._jax_fn[1]
 
         if ctl is not None:
@@ -747,14 +982,33 @@ class BatchSimEngine:
         cap0 = (self.capacity_rps(rates0) * dt if lb is not None
                 else np.zeros((B, A)))
 
+        xs0 = {"arr": jnp.asarray(trace.arrivals),
+               "ctl": jnp.asarray(is_ctl)}
+        if has_tile:
+            xs0["alive"] = jnp.asarray(cf.tile_alive)
+            xs0["dead"] = jnp.asarray(cf.island_dead)
+        if has_link:
+            xs0["lscale"] = jnp.asarray(cf.link_scale)
+        if has_stuck:
+            xs0["stuck_m"] = jnp.asarray(cf.stuck)
+        if has_stuck_rate:
+            xs0["srate"] = jnp.asarray(cf.stuck_rate)
+
         wall0 = time.perf_counter()
-        carryF, (admitted, served) = run_scan(
-            jnp.asarray(trace.arrivals), jnp.asarray(rates0),
+        carryF, ys = run_scan(
+            xs0, jnp.asarray(rates0),
             jnp.asarray(guard0), jnp.asarray(pid_i0),
             jnp.asarray(pid_prev0), jnp.asarray(pid_has0),
             jnp.asarray(cap0))
+        if track:
+            admitted, served, qdropT = ys
+            qdrops = np.asarray(qdropT, dtype=np.float64)
+        else:
+            admitted, served = ys
+            qdrops = None
         (queueF, busyF, rttF, ratesF, guardF, pid_iF, pid_prevF, pid_hasF,
-         _ctlb, droppedF, energyF, swapsF, _fwdF, _capF) = [
+         _ctlb, droppedF, energyF, swapsF, _fwdF, _capF,
+         retryqF, dsloF, dfaultF, retriedF) = [
              np.asarray(x) for x in carryF]
         admitted = np.asarray(admitted, dtype=np.float64)
         served = np.asarray(served, dtype=np.float64)
@@ -777,8 +1031,14 @@ class BatchSimEngine:
                       * 1e6 / PKT_BYTES),
             rtt_acc=rttF.astype(np.float64),
             dropped=droppedF.astype(np.float64),
-            energy=energyF.astype(np.float64))
+            energy=energyF.astype(np.float64),
+            retry_q=retryqF.astype(np.float64),
+            dropped_slo=dsloF.astype(np.float64),
+            dropped_fault=dfaultF.astype(np.float64),
+            retried=retriedF.astype(np.float64))
         self.last_histories = (admitted, served)
+        self.last_fault_histories = (
+            None if qdrops is None else {"queue_drops": qdrops})
         return self._result(
             trace, admitted, served,
             completed=self._completed(served),
@@ -786,4 +1046,8 @@ class BatchSimEngine:
             residual=queueF.astype(np.float64).sum(axis=-1),
             energy=energyF.astype(np.float64),
             swaps=swapsF.astype(np.int64), elapsed=elapsed,
-            backend="jax", telem=None)
+            backend="jax", telem=None,
+            dropped_slo=dsloF.astype(np.float64),
+            dropped_fault=dfaultF.astype(np.float64),
+            retried=retriedF.astype(np.float64),
+            qdrops=qdrops)

@@ -108,8 +108,15 @@ class ControllerHarness:
 
     # ---------------------------------------------------------------- step
     def step(self, *, tick: int, names, busy, boundness, pkts_in, pkts_out,
-             rtt, queue_ticks) -> Optional[IslandConfig]:
+             rtt, queue_ticks, dead=None,
+             stuck=None) -> Optional[IslandConfig]:
         """One control interval: sample -> policy -> guard -> commit.
+
+        ``dead``/``stuck`` are optional ``(I,)`` boolean masks in island
+        order: a dead island has no hardware to actuate (its guard latch
+        is cleared so it re-arms cleanly on revival, and any requested
+        change is dropped); a stuck island keeps sampling and latching
+        but its commit is blocked — the actuator write never lands.
 
         Returns the new live :class:`IslandConfig` if a swap happened,
         else ``None`` (the engine keeps its cached service rates)."""
@@ -123,8 +130,11 @@ class ControllerHarness:
         guarded: List[str] = []
         if self.queue_guard_ticks is not None:
             backlog = {n: float(queue_ticks[i]) for i, n in enumerate(names)}
-            for isl in live.islands:
+            for ii, isl in enumerate(live.islands):
                 if isl.fixed:
+                    continue
+                if dead is not None and dead[ii]:
+                    self._guard_active.discard(isl.name)
                     continue
                 worst = max((backlog.get(t, 0.0) for t in isl.tiles),
                             default=0.0)
@@ -139,8 +149,12 @@ class ControllerHarness:
         # drop no-op rate changes so the config version only bumps on a
         # real swap (ladder-quantized comparison, as with_rates would do)
         changes: Dict[str, float] = {}
-        for isl in live.islands:
+        for ii, isl in enumerate(live.islands):
             if isl.name not in requested or isl.fixed:
+                continue
+            if dead is not None and dead[ii]:
+                continue
+            if stuck is not None and stuck[ii]:
                 continue
             if isl.ladder.quantize(requested[isl.name]) != isl.rate:
                 changes[isl.name] = requested[isl.name]
@@ -222,17 +236,26 @@ class LoadBalancer:
             return np.asarray(cap, dtype=np.float64)
         return np.asarray(cap, dtype=np.float64) / (1.0 + queue)
 
-    def split(self, arr: np.ndarray, queue: np.ndarray,
-              cap: np.ndarray) -> np.ndarray:
+    def split(self, arr: np.ndarray, queue: np.ndarray, cap: np.ndarray,
+              alive: Optional[np.ndarray] = None) -> np.ndarray:
         """Redistribute one tick's arrivals within each group.
 
         ``arr``/``queue``/``cap`` are ``(..., A)``; returns a new
         ``(..., A)`` array whose per-group sums equal ``arr``'s.
+        ``alive`` (optional ``(..., A)`` 0/1 mask) zeroes dead replicas'
+        weights so their share re-spills to surviving peers; a group with
+        no survivors still falls back to an even split (work is never
+        silently discarded here — the fault ledger accounts for it).
         """
         if not self.covered.any():
             return np.asarray(arr, dtype=np.float64)
         arr = np.asarray(arr, dtype=np.float64)
         w = self.weights(queue, cap)
+        # a NaN or negative weight (0/0 capacity ratios from zero-capacity
+        # replicas) must weigh *nothing*, not poison its group's einsum
+        w = np.where(np.isfinite(w) & (w > 0.0), w, 0.0)
+        if alive is not None:
+            w = w * alive
         tot = np.einsum("...a,ga->...g", arr, self.membership)
         wsum = np.einsum("...a,ga->...g", w, self.membership)
         # a group whose every replica weighs 0 (e.g. cap forced to 0)
@@ -399,8 +422,14 @@ class BatchControllerHarness:
 
     # ---------------------------------------------------------------- step
     def step(self, *, tick: int, busy, boundness, pkts_in, pkts_out, rtt,
-             queue_ticks) -> Optional[np.ndarray]:
+             queue_ticks, dead=None, stuck=None) -> Optional[np.ndarray]:
         """One control interval over all designs.
+
+        ``dead``/``stuck`` are optional ``(I,)`` boolean masks shared by
+        every design (faults are a property of the schedule, not the
+        design): dead islands drop out of the guard latch and never
+        commit, stuck islands keep latching but their commits are
+        blocked — mirroring the scalar harness bit-for-bit at B=1.
 
         Returns the new (B, I) live-rate matrix if ANY design committed
         (``last_committed`` holds the per-design mask), else ``None`` —
@@ -437,6 +466,8 @@ class BatchControllerHarness:
                 np.where(worst < self.guard_release_ticks, False,
                          self._guard_active))
             latch &= ~self.topo.fixed[None, :]      # fixed islands excluded
+            if dead is not None:
+                latch = latch & ~np.asarray(dead, dtype=bool)
             self._guard_active = latch
             requested = np.where(latch, self.guard_rate, requested)
 
@@ -444,6 +475,10 @@ class BatchControllerHarness:
         quantized = self.topo.quantize(requested)
         changed = (~np.isnan(requested) & ~self.topo.fixed[None, :]
                    & (quantized != self.rates))
+        if dead is not None:
+            changed = changed & ~np.asarray(dead, dtype=bool)
+        if stuck is not None:
+            changed = changed & ~np.asarray(stuck, dtype=bool)
         committed = changed.any(axis=1)                          # (B,)
         self.last_committed = committed
         if not committed.any():

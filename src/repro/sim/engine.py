@@ -38,7 +38,7 @@ p50/p99 — no per-request bookkeeping at any point.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
@@ -47,6 +47,8 @@ from repro.core.islands import (IslandConfig, IslandSpec, NOC_LADDER,
                                 TILE_LADDER)
 from repro.core.noc import contention_slowdown, pos_index
 from repro.core.perfmodel import AccelWorkload, SoCPerfModel, chip_power
+from repro.sim.faults import (CompiledFaults, FaultSchedule, SLOConfig,
+                              compile_faults, respill_stranded)
 from repro.sim.flows import FlowPattern, compile_flows
 from repro.sim.telemetry import (Telemetry, TelemetrySchema,
                                  weighted_percentiles)
@@ -188,6 +190,11 @@ class TickState:
     rtt_acc: np.ndarray         # accumulate
     dropped: np.ndarray
     energy: np.ndarray
+    # fault/SLO extensions (zeros and untouched on fault-free runs)
+    retry_q: Optional[np.ndarray] = None        # (..., A) re-queued work
+    dropped_slo: Optional[np.ndarray] = None    # (...) deadline drops
+    dropped_fault: Optional[np.ndarray] = None  # (...) stranded drops
+    retried: Optional[np.ndarray] = None        # (...) re-spilled work
 
     @classmethod
     def zeros(cls, shape: Tuple[int, ...]) -> "TickState":
@@ -195,7 +202,9 @@ class TickState:
         return cls(queue=np.zeros(shape), busy=np.zeros(shape),
                    pkts_in=np.zeros(shape), pkts_out=np.zeros(shape),
                    rtt_acc=np.zeros(shape), dropped=np.zeros(lead),
-                   energy=np.zeros(lead))
+                   energy=np.zeros(lead), retry_q=np.zeros(shape),
+                   dropped_slo=np.zeros(lead), dropped_fault=np.zeros(lead),
+                   retried=np.zeros(lead))
 
 
 @dataclass(frozen=True)
@@ -222,6 +231,7 @@ class StepConsts:
     max_queue: float
     dynamic_contention: bool
     forward: Optional[np.ndarray] = None    # (A, A) chain coupling
+    deadline_ticks: float = float("inf")    # SLO deadline in ticks
 
 
 @dataclass(frozen=True)
@@ -237,19 +247,36 @@ class TickOut:
     noc_power: np.ndarray       # (...)
     forwarded: Optional[np.ndarray] = None  # (..., A) chained completions
                                             # to enqueue NEXT tick
+    slo_drop: Optional[np.ndarray] = None   # (..., A) deadline drops
 
 
 def tick_step(st: TickState, arr_t: np.ndarray, svc: Dict[str, np.ndarray],
-              c: StepConsts) -> TickOut:
+              c: StepConsts, *, alive: Optional[np.ndarray] = None,
+              link_scale: Optional[np.ndarray] = None,
+              retry_in: Optional[np.ndarray] = None) -> TickOut:
     """Advance the fluid queues by one tick (mutates ``st`` in place).
 
     ``svc`` is the cached service-term dict (``t_comp``/``t_wire``/
     ``t_ref`` shaped ``(..., A)``, ``f_tile`` ``(..., A)``, ``f_noc``
     scalar or ``(...)``) — recomputed by the caller only when a DFS commit
     changes island rates.
+
+    Fault hooks (every one ``None``-gated, so fault-free runs execute the
+    exact legacy expressions): ``alive`` is this tick's (A,) availability
+    row (dead tiles have zero capacity and are power-gated), ``link_scale``
+    the (L,) link-bandwidth scale row (degraded links saturate earlier),
+    ``retry_in`` this tick's re-spilled arrivals, tracked as a second
+    fluid class inside the queue so a bounded-retry drop policy needs no
+    per-request bookkeeping.  The SLO deadline (``c.deadline_ticks``)
+    drops backlog exceeding ``nominal capacity x deadline`` explicitly —
+    nominal, not masked, so a dead tile's backlog is re-spilled by the
+    recovery path before the deadline reaper sees it.
     """
     q = st.queue + arr_t
     adm = arr_t
+    if retry_in is not None:
+        q0 = q                      # retry-class mixing denominator
+        st.retry_q = st.retry_q + retry_in
     if c.max_queue != float("inf"):
         over = np.maximum(q - c.max_queue, 0.0)
         q = q - over
@@ -261,6 +288,8 @@ def tick_step(st: TickState, arr_t: np.ndarray, svc: Dict[str, np.ndarray],
         # link capacity is f_noc-scaled like the static kernel's
         # saturation term (C2: island rate scales links)
         loads = np.einsum("...a,...al->...l", c.own_demand * st.busy, c.inc)
+        if link_scale is not None:
+            loads = loads / link_scale
         rho = ((c.inc * loads[..., None, :]).max(axis=-1)
                / (c.link_bw * f_noc[..., None]))
         dyn = contention_slowdown(rho, c.max_slow)
@@ -270,16 +299,41 @@ def tick_step(st: TickState, arr_t: np.ndarray, svc: Dict[str, np.ndarray],
     cap_tick = (c.base_mbps * svc["t_ref"]
                 / (svc["t_comp"] + svc["t_wire"] * dyn)
                 / c.req_mb) * c.dt
-    served = np.minimum(q, cap_tick)
-    st.queue = q - served
-    st.busy = served / cap_tick
+    if alive is None:
+        served = np.minimum(q, cap_tick)
+        st.queue = q - served
+        st.busy = served / cap_tick
+    else:
+        cap_nominal = cap_tick
+        cap_tick = cap_tick * alive
+        served = np.minimum(q, cap_tick)
+        st.queue = q - served
+        st.busy = np.where(cap_tick > 0.0,
+                           served / np.where(cap_tick > 0.0, cap_tick, 1.0),
+                           0.0)
+    slo_drop = None
+    if c.deadline_ticks != float("inf"):
+        horizon = ((cap_tick if alive is None else cap_nominal)
+                   * c.deadline_ticks)
+        slo_drop = np.maximum(st.queue - horizon, 0.0)
+        st.queue = st.queue - slo_drop
+        st.dropped_slo = st.dropped_slo + slo_drop.sum(axis=-1)
+    if retry_in is not None:
+        # proportional class mixing: the retry class shrinks by the same
+        # factor the whole queue did (FIFO fluid — classes are blended)
+        st.retry_q = st.retry_q * np.where(
+            q0 > 0.0, st.queue / np.where(q0 > 0.0, q0, 1.0), 0.0)
 
     # counters: pkts accumulate; exec_time (busy) auto-resets
     st.pkts_in += adm * c.req_mb * 1e6 / PKT_BYTES
     st.pkts_out += served * c.req_mb * 1e6 / PKT_BYTES
     st.rtt_acc += c.hop_counts * dyn * c.hop_latency
 
-    tile_power = np.sum(chip_power(svc["f_tile"], st.busy), axis=-1)
+    if alive is None:
+        tile_power = np.sum(chip_power(svc["f_tile"], st.busy), axis=-1)
+    else:                           # dead tiles are power-gated
+        tile_power = np.sum(chip_power(svc["f_tile"], st.busy) * alive,
+                            axis=-1)
     noc_power = c.noc_power_share * chip_power(f_noc, 1.0)
     st.energy += (tile_power + noc_power) * c.dt
     # chain coupling: a share of each stage's completions becomes next
@@ -289,22 +343,30 @@ def tick_step(st: TickState, arr_t: np.ndarray, svc: Dict[str, np.ndarray],
                  if c.forward is not None else None)
     return TickOut(admitted=adm, served=served, cap_tick=cap_tick, rho=rho,
                    dyn=dyn, tile_power=tile_power, noc_power=noc_power,
-                   forwarded=forwarded)
+                   forwarded=forwarded, slo_drop=slo_drop)
 
 
 def percentile_samples(admitted: np.ndarray, served: np.ndarray,
-                       dt: float) -> Tuple[np.ndarray, np.ndarray]:
+                       dt: float, queue_drops: Optional[np.ndarray] = None
+                       ) -> Tuple[np.ndarray, np.ndarray]:
     """(latency values, request weights) of one design's run, from the
     cumulative arrival/service curves of its FIFO fluid queues (tick
     granularity): the mid-rank of every tick's admitted batch is looked up
-    in the cumulative service curve with one ``searchsorted`` per tile."""
+    in the cumulative service curve with one ``searchsorted`` per tile.
+
+    ``queue_drops`` (T, A), when given, holds work that left the queue
+    *without* being served (SLO deadline drops, stranded-work drains) —
+    it joins the exit curve so later arrivals' ranks still resolve; the
+    reconstruction reduces exactly to the legacy one when it is zero."""
     T, A = admitted.shape
     ticks = np.arange(T, dtype=np.float64)
     vals: List[np.ndarray] = []
     wts: List[np.ndarray] = []
     for a in range(A):
         ca = np.cumsum(admitted[:, a])
-        cs = np.cumsum(served[:, a])
+        exits = (served[:, a] if queue_drops is None
+                 else served[:, a] + queue_drops[:, a])
+        cs = np.cumsum(exits)
         n = admitted[:, a]
         mid = ca - 0.5 * n          # mid-rank of each tick's batch
         depart = np.searchsorted(cs, mid, side="left")
@@ -318,12 +380,13 @@ def percentile_samples(admitted: np.ndarray, served: np.ndarray,
 
 
 def latency_percentiles(admitted: np.ndarray, served: np.ndarray,
-                        dt: float) -> Tuple[float, float]:
+                        dt: float, queue_drops: Optional[np.ndarray] = None
+                        ) -> Tuple[float, float]:
     """Request-weighted p50/p99 sojourn time for one design's (T, A)
     admitted/served histories."""
     if admitted.shape[0] == 0:
         return float("nan"), float("nan")
-    v, w = percentile_samples(admitted, served, dt)
+    v, w = percentile_samples(admitted, served, dt, queue_drops)
     if v.size == 0 or w.sum() <= 0:
         return float("nan"), float("nan")
     p50, p99 = weighted_percentiles(v, w, (50.0, 99.0))
@@ -366,6 +429,9 @@ class SimResult:
     swaps: int                          # actuator commits during the run
     elapsed_wall_s: float
     telemetry: Telemetry
+    dropped_slo: float = 0.0            # explicit SLO-deadline drops
+    dropped_fault: float = 0.0          # stranded on dead replicas
+    retried: float = 0.0                # re-spilled to surviving replicas
 
     @property
     def ticks_per_s_wall(self) -> float:
@@ -376,16 +442,32 @@ class SimResult:
         return (self.completed / self.elapsed_wall_s
                 if self.elapsed_wall_s else 0.0)
 
+    @property
+    def dropped_total(self) -> float:
+        """All explicit drops: admission + SLO deadline + fault-stranded."""
+        return self.dropped + self.dropped_slo + self.dropped_fault
+
+    @property
+    def drop_rate(self) -> float:
+        """Fraction of offered requests explicitly dropped."""
+        return self.dropped_total / self.offered if self.offered > 0 else 0.0
+
     def summary(self) -> str:
-        return (f"{self.ticks} ticks ({self.ticks * self.dt:.1f}s sim, "
-                f"{self.elapsed_wall_s:.2f}s wall, "
-                f"{self.requests_per_s_wall:,.0f} req/s wall): "
-                f"completed {self.completed:,.0f}/{self.offered:,.0f} "
-                f"({self.throughput_rps:,.0f} rps), "
-                f"p50 {self.p50_latency_s * 1e3:.2f}ms "
-                f"p99 {self.p99_latency_s * 1e3:.2f}ms, "
-                f"{self.energy_per_request_j * 1e3:.3f} mJ/req, "
-                f"{self.swaps} DFS swaps")
+        s = (f"{self.ticks} ticks ({self.ticks * self.dt:.1f}s sim, "
+             f"{self.elapsed_wall_s:.2f}s wall, "
+             f"{self.requests_per_s_wall:,.0f} req/s wall): "
+             f"completed {self.completed:,.0f}/{self.offered:,.0f} "
+             f"({self.throughput_rps:,.0f} rps), "
+             f"p50 {self.p50_latency_s * 1e3:.2f}ms "
+             f"p99 {self.p99_latency_s * 1e3:.2f}ms, "
+             f"{self.energy_per_request_j * 1e3:.3f} mJ/req, "
+             f"{self.swaps} DFS swaps")
+        if self.dropped_total > 0:
+            s += (f", dropped {self.dropped_total:,.0f} "
+                  f"({self.drop_rate:.2%}: slo {self.dropped_slo:,.0f} "
+                  f"fault {self.dropped_fault:,.0f}), "
+                  f"retried {self.retried:,.0f}")
+        return s
 
 
 class SimEngine:
@@ -393,13 +475,22 @@ class SimEngine:
 
     def __init__(self, platform: SimPlatform, *,
                  config: SimConfig = SimConfig(), controller=None,
-                 balancer=None):
+                 balancer=None, faults: Optional[FaultSchedule] = None,
+                 slo: Optional[SLOConfig] = None, supervisor=None):
         self.platform = platform
         self.config = config
         self.controller = controller    # a control.ControllerHarness or None
         self.balancer = balancer        # a control.LoadBalancer or None
+        self.faults = faults            # a faults.FaultSchedule or None
+        self.slo = slo                  # a faults.SLOConfig or None
+        # online detection: a runtime.fault.SimFaultSupervisor, which sees
+        # only sim telemetry (served/queue/capacity) — routing and respill
+        # then act on its BELIEVED availability while the true masks gate
+        # what the hardware actually serves
+        self.supervisor = supervisor
         self.last_state: Optional[TickState] = None          # set by run()
         self.last_histories = None      # (admitted, served) (T, A) arrays
+        self.last_fault_histories = None  # per-tick drop/ledger arrays
         m = platform.model
         # static route->link incidence of each tile's output stream
         # (tile->MEM unless the platform carries a FlowPattern):
@@ -424,20 +515,34 @@ class SimEngine:
             self._noc_island = -1
 
     # ------------------------------------------------------------ service
-    def _rates(self, cfg: IslandConfig) -> Tuple[np.ndarray, float, np.ndarray]:
-        """(per-tile f, f_noc, per-island rate vector) for one config."""
+    def _rates(self, cfg: IslandConfig,
+               rate_override: Optional[np.ndarray] = None
+               ) -> Tuple[np.ndarray, float, np.ndarray]:
+        """(per-tile f, f_noc, per-island rate vector) for one config.
+
+        ``rate_override`` is the (I,) stuck-actuator hardware row (NaN =
+        island follows software): it shapes the *effective* frequencies
+        only — the returned ``island_rates`` stay the software view, so
+        telemetry and the controller keep seeing what software committed.
+        """
         island_rates = np.asarray([i.rate for i in cfg.islands])
-        f_tile = island_rates[self._island_of_tile]
-        f_noc = (float(island_rates[self._noc_island])
+        eff = island_rates
+        if rate_override is not None:
+            eff = np.where(np.isnan(rate_override), island_rates,
+                           rate_override)
+        f_tile = eff[self._island_of_tile]
+        f_noc = (float(eff[self._noc_island])
                  if self._noc_island >= 0 else 1.0)
         return f_tile, f_noc, island_rates
 
-    def _service(self, cfg: IslandConfig) -> Dict[str, np.ndarray]:
+    def _service(self, cfg: IslandConfig,
+                 rate_override: Optional[np.ndarray] = None
+                 ) -> Dict[str, np.ndarray]:
         """Static service-time terms for one island config (cached by the
         caller per config version — the analogue of the actuator's cached
         compiled executables)."""
         p = self.platform
-        f_tile, f_noc, island_rates = self._rates(cfg)
+        f_tile, f_noc, island_rates = self._rates(cfg, rate_override)
         t_comp, t_wire, t_ref = p.model.service_time_terms_batch(
             wire_share=p.wire_share, k=p.k, f_acc=f_tile, f_noc=f_noc,
             f_tg=p.f_tg, n_tg=p.n_tg, hop_counts=self._hop_counts)
@@ -472,6 +577,13 @@ class SimEngine:
             forward=self._forward)
 
     # ---------------------------------------------------------------- run
+    def _compile_faults(self, T: int) -> Optional[CompiledFaults]:
+        if self.faults is None or not self.faults:
+            return None
+        p = self.platform
+        return compile_faults(self.faults, ticks=T, names=p.names,
+                              islands=p.islands, noc=p.model.noc)
+
     def run(self, trace: Trace) -> SimResult:
         p, cfg = self.platform, self.config
         A, T, dt = p.n_tiles, trace.ticks, trace.dt
@@ -483,10 +595,32 @@ class SimEngine:
             live = self.controller.live()
         else:
             live = p.islands
-        svc = self._service(live)
+        cur_cfg = live
 
+        # ---- fault/SLO compilation.  Everything below is None-gated so a
+        # fault-free, SLO-free run executes the exact legacy tick loop.
+        cf = self._compile_faults(T)
+        slo = self.slo
+        if slo is None and cf is not None:
+            slo = SLOConfig()               # default kill semantics
+        deadline = slo is not None and slo.deadline_s is not None
+        has_tile = cf is not None and cf.has_tile
+        has_link = cf is not None and cf.has_link
+        has_stuck_rate = cf is not None and cf.has_stuck_rate
+        recover = has_tile and slo.recovers and self.balancer is not None
+        track = has_tile or deadline
+        ev_by_tick = cf.events_by_tick() if cf is not None else {}
+        applied_stuck = None                # last applied hardware row
+        sup = self.supervisor
+        if sup is not None:
+            assert has_tile, "a fault supervisor needs tile faults to watch"
+            sup.begin_run(p.names)
+
+        svc = self._service(cur_cfg)
         st = TickState.zeros((A,))
         consts = self.step_consts(dt)
+        if deadline:
+            consts = replace(consts, deadline_ticks=slo.deadline_s / dt)
         # chain state: completions forwarded into the NEXT tick's queues
         carry = np.zeros(A) if consts.forward is not None else None
         # the balancer redistributes on last tick's capacity (init: the
@@ -495,6 +629,12 @@ class SimEngine:
                     if self.balancer is not None else None)
         admitted_hist = np.zeros((T, A))
         served_hist = np.zeros((T, A))
+        # per-tick work ledger under faults/SLOs (conservation tests,
+        # latency under drops); None on legacy runs
+        qdrop_hist = np.zeros((T, A)) if track else None
+        fh = ({k: np.zeros(T) for k in
+               ("dropped", "dropped_slo", "dropped_fault", "retried",
+                "queue", "carry")} if track else None)
         # controller/telemetry window accumulators
         win_busy = np.zeros(A)
         win_served = 0.0
@@ -510,18 +650,73 @@ class SimEngine:
 
         wall0 = time.perf_counter()
         for t_i in range(T):
+            for ev in ev_by_tick.get(t_i, ()):
+                telem.event(t_i, ev["kind"],
+                            **{k: v for k, v in ev.items()
+                               if k not in ("tick", "kind")})
+            alive = cf.tile_alive[t_i] if has_tile else None
+            lscale = cf.link_scale[t_i] if has_link else None
+            if has_stuck_rate:
+                row = cf.stuck_rate[t_i]
+                if applied_stuck is None or not np.array_equal(
+                        row, applied_stuck, equal_nan=True):
+                    applied_stuck = row     # hardware override (service only)
+                    svc = self._service(cur_cfg, rate_override=applied_stuck)
+            # routing acts on the BELIEVED availability (the supervisor's
+            # detection state when online detection is in the loop, else
+            # the oracle mask); the true mask still gates the hardware
+            route_alive = (sup.believed_alive if sup is not None else alive)
+
+            respill = stranded_exit = None
+            if has_tile and slo.on_kill != "wait":
+                st.queue, st.retry_q, respill, fdrop = respill_stranded(
+                    st.queue, st.retry_q, route_alive,
+                    self.balancer if recover else None)
+                st.dropped_fault = st.dropped_fault + fdrop.sum(axis=-1)
+                if recover:
+                    st.retried = st.retried + respill.sum(axis=-1)
+                stranded_exit = respill + fdrop
+
             arr = arrivals[t_i]
             if carry is not None:
                 arr = arr + carry
+            retry_arr = None
             if self.balancer is not None:
-                arr = self.balancer.split(arr, st.queue, prev_cap)
-            out = tick_step(st, arr, svc, consts)
+                arr = self.balancer.split(
+                    arr, st.queue, prev_cap,
+                    alive=route_alive if recover else None)
+                if recover:
+                    retry_arr = self.balancer.split(respill, st.queue,
+                                                    prev_cap,
+                                                    alive=route_alive)
+                    arr = arr + retry_arr
+            out = tick_step(st, arr, svc, consts, alive=alive,
+                            link_scale=lscale, retry_in=retry_arr)
             if carry is not None:
                 carry = out.forwarded
             if self.balancer is not None:
                 prev_cap = out.cap_tick
             admitted_hist[t_i] = out.admitted
             served_hist[t_i] = out.served
+            if track:
+                qd = qdrop_hist[t_i]
+                if stranded_exit is not None:
+                    qd += stranded_exit
+                if out.slo_drop is not None:
+                    qd += out.slo_drop
+                fh["dropped"][t_i] = st.dropped
+                fh["dropped_slo"][t_i] = st.dropped_slo
+                fh["dropped_fault"][t_i] = st.dropped_fault
+                fh["retried"][t_i] = st.retried
+                fh["queue"][t_i] = st.queue.sum()
+                fh["carry"][t_i] = carry.sum() if carry is not None else 0.0
+
+            if sup is not None:
+                for ev in sup.observe(t_i, served=out.served, queue=st.queue,
+                                      cap=out.cap_tick, busy=st.busy):
+                    telem.event(t_i, ev["kind"],
+                                **{k: v for k, v in ev.items()
+                                   if k not in ("tick", "kind")})
 
             win_busy += st.busy
             win_served += float(out.served.sum())
@@ -540,7 +735,11 @@ class SimEngine:
                     link_util_max=float(out.rho.max(initial=0.0)),
                     link_util_mean=float(out.rho.mean()) if A else 0.0,
                     latency_est_s=float(
-                        np.sum(st.queue) / max(np.sum(cap_rps_now), 1e-9)))
+                        np.sum(st.queue) / max(np.sum(cap_rps_now), 1e-9)),
+                    dropped=float(st.dropped),
+                    dropped_slo=float(st.dropped_slo),
+                    dropped_fault=float(st.dropped_fault),
+                    retried=float(st.retried))
                 win_busy = np.zeros(A)
                 win_served = 0.0
                 win_ticks = 0
@@ -560,11 +759,16 @@ class SimEngine:
                     boundness=t_wire_now / (self._t_comp_ref + t_wire_now),
                     pkts_in=st.pkts_in, pkts_out=st.pkts_out,
                     rtt=st.rtt_acc,
-                    queue_ticks=st.queue / np.maximum(out.cap_tick, 1e-12))
+                    queue_ticks=st.queue / np.maximum(out.cap_tick, 1e-12),
+                    dead=cf.island_dead[t_i] if has_tile else None,
+                    stuck=(cf.stuck[t_i]
+                           if cf is not None and cf.has_stuck else None))
                 ctl_busy = np.zeros(A)
                 ctl_ticks = 0
                 if new_cfg is not None:
-                    svc = self._service(new_cfg)
+                    cur_cfg = new_cfg
+                    svc = self._service(cur_cfg,
+                                        rate_override=applied_stuck)
                     telem.event(t_i, "dfs_commit",
                                 version=new_cfg.version,
                                 rates={i.name: i.rate
@@ -574,6 +778,8 @@ class SimEngine:
         # kept for post-run analysis and the differential test suite
         self.last_state = st
         self.last_histories = (admitted_hist, served_hist)
+        self.last_fault_histories = (
+            None if fh is None else {**fh, "queue_drops": qdrop_hist})
 
         # chained patterns complete a request ONCE, at its exit stage;
         # the chain-free expression is kept verbatim (bit-for-bit)
@@ -581,7 +787,8 @@ class SimEngine:
                      else float((served_hist
                                  * self._compiled_flows.exit_mask).sum()))
         offered = float(arrivals.sum())
-        p50, p99 = latency_percentiles(admitted_hist, served_hist, dt)
+        p50, p99 = latency_percentiles(admitted_hist, served_hist, dt,
+                                       queue_drops=qdrop_hist)
         sim_seconds = T * dt
         return SimResult(
             ticks=T, dt=dt, offered=offered, completed=completed,
@@ -593,7 +800,10 @@ class SimEngine:
             mean_power_w=float(st.energy) / sim_seconds if sim_seconds else 0.0,
             swaps=(self.controller.actuator.swaps - swaps0
                    if self.controller is not None else 0),
-            elapsed_wall_s=elapsed, telemetry=telem)
+            elapsed_wall_s=elapsed, telemetry=telem,
+            dropped_slo=float(st.dropped_slo),
+            dropped_fault=float(st.dropped_fault),
+            retried=float(st.retried))
 
     @staticmethod
     def _latency_percentiles(admitted: np.ndarray, served: np.ndarray,

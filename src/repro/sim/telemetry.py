@@ -80,7 +80,8 @@ class Telemetry:
     """The engine's flight recorder: one row per telemetry interval."""
 
     SCALARS = ("tick", "f_noc", "throughput_rps", "power_w",
-               "link_util_max", "link_util_mean", "latency_est_s")
+               "link_util_max", "link_util_mean", "latency_est_s",
+               "dropped", "dropped_slo", "dropped_fault", "retried")
 
     def __init__(self, schema: TelemetrySchema, *, capacity: int = 4096):
         self.schema = schema
@@ -93,9 +94,14 @@ class Telemetry:
     def record(self, *, tick: int, f_noc: float, island_rates,
                queue_depth, busy, throughput_rps: float, power_w: float,
                link_util_max: float, link_util_mean: float,
-               latency_est_s: float) -> None:
+               latency_est_s: float, dropped: float = 0.0,
+               dropped_slo: float = 0.0, dropped_fault: float = 0.0,
+               retried: float = 0.0) -> None:
+        """One interval's row; the drop/retry channels are *cumulative*
+        run totals at recording time (fault-free runs record zeros)."""
         self.scalars.append([tick, f_noc, throughput_rps, power_w,
-                             link_util_max, link_util_mean, latency_est_s])
+                             link_util_max, link_util_mean, latency_est_s,
+                             dropped, dropped_slo, dropped_fault, retried])
         self.island_rates.append(island_rates)
         self.queue_depth.append(queue_depth)
         self.busy.append(busy)
@@ -177,14 +183,17 @@ class BatchTelemetry:
 
     def record(self, *, tick: int, f_noc, island_rates, queue_depth, busy,
                throughput_rps, power_w, link_util_max, link_util_mean,
-               latency_est_s) -> None:
+               latency_est_s, dropped=0.0, dropped_slo=0.0,
+               dropped_fault=0.0, retried=0.0) -> None:
         """One telemetry interval: scalar channels are (B,) arrays (or
-        scalars, broadcast), vector channels (B, I)/(B, A)."""
+        scalars, broadcast), vector channels (B, I)/(B, A).  Drop/retry
+        channels are cumulative per-design run totals, as sequential."""
         B = self.n_designs
         row = np.empty((B, len(self.SCALARS)))
         for i, ch in enumerate((tick, f_noc, throughput_rps, power_w,
                                 link_util_max, link_util_mean,
-                                latency_est_s)):
+                                latency_est_s, dropped, dropped_slo,
+                                dropped_fault, retried)):
             row[:, i] = ch
         self.scalars.append(row)
         self.island_rates.append(np.broadcast_to(

@@ -1,0 +1,617 @@
+"""Fault injection, SLO semantics, and recovery: differential + scenario tests.
+
+The load-bearing guarantees:
+
+* **compilation** — half-open [start, end) windows, island kills expand to
+  their sampled tiles, link degradation hits both directed links, and the
+  derived ``island_dead`` mask is exactly "every sampled tile dead",
+* **differential parity** — a nonempty :class:`FaultSchedule` (kills +
+  link degrade + SLO deadline + retry through a LoadBalancer) replays
+  bit-for-bit between the sequential engine and a B=1 batch row (states,
+  histories, drop/retry ledgers), and the ``lax.scan`` backend matches
+  the NumPy reference within the existing float32 tolerances,
+* **invariants** — work conservation *every tick* (offered == served +
+  explicit drops + backlog), queue non-negativity through kill/revive
+  cycles, and monotone cumulative drop ledgers — seeded sweeps always,
+  hypothesis-fuzzed when available,
+* **the scenario gate** — a replica kill mid-diurnal-surge on the 3+3
+  pipeline: without recovery the stranded share is dropped (> 5%);
+  with respill + alive-masked splits the run survives (< 1% drops,
+  bounded p99), with or without the DFS controller in the loop,
+* **DSE under failure** — ``closed_loop_score(fault_schedule=...)``
+  re-ranks survivors relative to the fault-free score, with the batched
+  and sequential paths producing identical scores.
+"""
+import json
+from functools import partial
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.configs.vespa_soc import CHSTONE
+from repro.core.dfs import policy_memory_bound
+from repro.core.dse import closed_loop_score, grid_sweep
+from repro.core.perfmodel import AccelWorkload, SoCPerfModel
+from repro.runtime.fault import (OnlineFaultDetector, SimFaultConfig,
+                                 SimFaultSupervisor)
+from repro.sim import (BatchSimEngine, BatchSimPlatform, ControllerHarness,
+                       FaultSchedule, FlowPattern, LoadBalancer, SimConfig,
+                       SimEngine, SimPlatform, SLOConfig, Telemetry,
+                       compile_faults, diurnal_trace, poisson_trace)
+from repro.sim.faults import respill_stranded
+
+STAGE0 = ("fe0", "fe1", "fe2")
+STAGE1 = ("be0", "be1", "be2")
+
+
+# --------------------------------------------------------------- fixtures
+def make_platform(n_tiles=6, *, req_mb=0.005, k=8, names=None, flows=None,
+                  island_groups=None):
+    m = SoCPerfModel()
+    pos = [(r, c) for r in range(4) for c in range(4)
+           if (r, c) not in {(1, 0), (0, 0), (0, 3)}][:n_tiles]
+    wls = [AccelWorkload("dfmul", 8.70, 1.1, replication=k) for _ in pos]
+    return SimPlatform.build(m, wls, pos, names=names, n_tg=2,
+                             req_mb=req_mb, flows=flows,
+                             island_groups=island_groups)
+
+
+def pipeline_platform():
+    return make_platform(6, names=STAGE0 + STAGE1,
+                         flows=FlowPattern.chain(STAGE0, STAGE1))
+
+
+def offered(trace, result):
+    """Total externally offered work == completed + drops + backlog."""
+    return float(np.asarray(trace.arrivals).sum())
+
+
+# ------------------------------------------------------------ compilation
+def test_compile_faults_windows_and_island_masks():
+    plat = make_platform(4)
+    names = plat.names
+    isl = plat.islands
+    sched = (FaultSchedule()
+             .kill_tile(names[1], start=10, end=20)
+             .kill_island(isl.names()[0], start=15, end=25)
+             .degrade_link((1, 1), (1, 2), 0.25, start=5, end=30)
+             .stick_island(isl.names()[-1], start=40, rate=0.3))
+    cf = compile_faults(sched, ticks=50, names=names, islands=isl,
+                        noc=plat.model.noc)
+    A = len(names)
+    assert cf.tile_alive.shape == (50, A)
+    # half-open windows: dead exactly on [10, 20), alive at 9 and 20
+    col = 1
+    assert cf.tile_alive[9, col] == 1.0 and cf.tile_alive[20, col] == 0.0 \
+        if names[1] in isl.islands[0].tiles else True
+    assert (cf.tile_alive[10:20, col] == 0.0).all()
+    # island kill covers every sampled tile of the island
+    tiles0 = [i for i, n in enumerate(names) if n in isl.islands[0].tiles]
+    assert (cf.tile_alive[np.ix_(range(15, 25), tiles0)] == 0.0).all()
+    # island_dead is "all sampled tiles dead" — true inside the window
+    assert cf.island_dead[16, 0]
+    assert not cf.island_dead[0].any()
+    # link degrade hits both directed links, and only in-window
+    assert cf.has_link
+    assert (cf.link_scale[5:30] < 1.0).sum(axis=1).max() == 2
+    assert (cf.link_scale[0:5] == 1.0).all()
+    assert (cf.link_scale[30:] == 1.0).all()
+    # stuck tail window runs to the horizon; rate recorded
+    assert cf.stuck[40:, -1].all() and not cf.stuck[:40, -1].any()
+    assert np.isfinite(cf.stuck_rate[45, -1])
+    assert cf.has_stuck and cf.has_stuck_rate
+    # events are tick-sorted transitions
+    ticks = [e["tick"] for e in cf.events]
+    assert ticks == sorted(ticks)
+    kinds = {e["kind"] for e in cf.events}
+    assert {"fault_kill", "fault_revive", "fault_link_degrade",
+            "fault_stuck"} <= kinds
+
+
+def test_compile_faults_rejects_unknown_names():
+    plat = make_platform(3)
+    for bad in (FaultSchedule().kill_tile("nope", start=0),
+                FaultSchedule().kill_island("nope", start=0),
+                FaultSchedule().degrade_link((0, 0), (3, 3), 0.5, start=0)):
+        with pytest.raises(AssertionError):
+            compile_faults(bad, ticks=10, names=plat.names,
+                           islands=plat.islands, noc=plat.model.noc)
+
+
+def test_slo_config_validation():
+    with pytest.raises(AssertionError):
+        SLOConfig(on_kill="explode")
+    with pytest.raises(AssertionError):
+        SLOConfig(max_retries=2)
+    with pytest.raises(AssertionError):
+        SLOConfig(deadline_s=0.0)
+    assert SLOConfig().recovers
+    assert not SLOConfig(on_kill="drop").recovers
+    assert not SLOConfig(max_retries=0).recovers
+
+
+def test_respill_stranded_semantics():
+    # 4 tiles, one balancer group over the first 3; tile 1 dead
+    bal = LoadBalancer([("a", "b", "c")], ("a", "b", "c", "d"),
+                       mode="even")
+    q = np.array([2.0, 3.0, 1.0, 5.0])
+    rq = np.array([0.5, 1.0, 0.0, 0.0])
+    alive = np.array([1.0, 0.0, 1.0, 1.0])
+    q2, rq2, spill, dropped = respill_stranded(q, rq, alive, bal)
+    np.testing.assert_array_equal(q2, [2.0, 0.0, 1.0, 5.0])
+    np.testing.assert_array_equal(rq2, [0.5, 0.0, 0.0, 0.0])
+    # fresh stranded work re-spills; the already-retried share drops
+    np.testing.assert_array_equal(spill, [0.0, 2.0, 0.0, 0.0])
+    np.testing.assert_array_equal(dropped, [0.0, 1.0, 0.0, 0.0])
+    # no balancer -> everything stranded drops
+    _, _, spill0, dropped0 = respill_stranded(q, rq, alive, None)
+    assert spill0.sum() == 0.0 and dropped0[1] == 3.0
+    # whole group dead -> no survivor to spill to
+    _, _, spill1, dropped1 = respill_stranded(
+        q, rq, np.array([0.0, 0.0, 0.0, 1.0]), bal)
+    assert spill1.sum() == 0.0
+    np.testing.assert_array_equal(dropped1, [2.0, 3.0, 1.0, 0.0])
+
+
+# --------------------------------------------- satellite: balancer guards
+def test_load_balancer_zero_capacity_and_nan_guard():
+    """All-dead / zero-capacity groups must not emit NaNs: weights are
+    sanitized and the uniform fallback keeps conservation exact."""
+    bal = LoadBalancer([("a", "b"), ("c", "d")], ("a", "b", "c", "d"),
+                       mode="capacity")
+    arr = np.array([4.0, 0.0, 2.0, 2.0])
+    q = np.zeros(4)
+    cap = np.array([0.0, 0.0, np.nan, -1.0])   # dead group + garbage caps
+    out = bal.split(arr, q, cap)
+    assert np.isfinite(out).all()
+    assert out.sum() == pytest.approx(arr.sum())
+    # alive mask steers every request of a group to its survivors
+    out2 = bal.split(np.array([4.0, 0.0, 0.0, 0.0]), q,
+                     np.ones(4), alive=np.array([0.0, 1.0, 1.0, 1.0]))
+    assert out2[0] == 0.0 and out2[1] == pytest.approx(4.0)
+    # adaptive mode with huge backlog stays finite too
+    bal3 = LoadBalancer([("a", "b")], ("a", "b"), mode="adaptive")
+    out3 = bal3.split(np.array([2.0, 0.0]), np.array([1e308, 0.0]),
+                      np.array([0.0, 0.0]))
+    assert np.isfinite(out3).all() and out3.sum() == pytest.approx(2.0)
+
+
+# ------------------------------------------------- differential: B=1 bits
+def faulted_setup(ticks=600, seed=4):
+    names = ("a0", "a1", "a2", "b0", "b1", "b2")
+    plat = make_platform(6, names=names)
+    sched = (FaultSchedule()
+             .kill_tile("a1", start=150, end=380)
+             .kill_tile("b2", start=300)
+             .degrade_link((1, 1), (1, 2), 0.3, start=100, end=500))
+    slo = SLOConfig(deadline_s=0.03, on_kill="respill", max_retries=1)
+    cap = SimEngine(plat).capacity_rps()
+    # hot enough that real backlog exists when the kill lands (the peak
+    # of the sinusoid sits at ticks/4, right on the first kill window)
+    tr = diurnal_trace(cap * 0.85, ticks, 6, dt=1e-3, depth=0.5,
+                       seed=seed)
+    groups = (names[:3], names[3:])
+    return plat, sched, slo, tr, groups
+
+
+def test_batch_b1_matches_sequential_bitforbit_under_faults():
+    plat, sched, slo, tr, groups = faulted_setup()
+    cfg = SimConfig(telemetry_interval=20, telemetry_capacity=64)
+
+    seq_eng = SimEngine(plat, config=cfg, faults=sched, slo=slo,
+                        balancer=LoadBalancer(groups, plat.names,
+                                              mode="even"))
+    seq = seq_eng.run(tr)
+    bplat = BatchSimPlatform.stack([plat])
+    bat_eng = BatchSimEngine(bplat, config=cfg, faults=sched, slo=slo,
+                             balancer=LoadBalancer(groups, plat.names,
+                                                   mode="even"))
+    bat = bat_eng.run(tr)
+
+    assert bat.completed[0] == seq.completed
+    assert bat.residual[0] == seq.residual
+    assert bat.energy_j[0] == seq.energy_j
+    assert bat.p99_latency_s[0] == seq.p99_latency_s
+    assert bat.dropped_slo[0] == seq.dropped_slo
+    assert bat.dropped_fault[0] == seq.dropped_fault
+    assert bat.retried[0] == seq.retried
+    assert bat.drop_rate[0] == seq.drop_rate
+    # a fault actually fired and the SLO actually dropped something
+    assert seq.dropped_fault > 0.0 or seq.retried > 0.0
+    assert seq.dropped_slo > 0.0
+    # full state including the retry class, elementwise exact
+    for f in ("queue", "retry_q", "busy", "pkts_in", "pkts_out"):
+        np.testing.assert_array_equal(
+            getattr(bat_eng.last_state, f)[0],
+            getattr(seq_eng.last_state, f), err_msg=f)
+    # tick histories and the explicit queue-drop ledger
+    for sh, bh in zip(seq_eng.last_histories, bat_eng.last_histories):
+        np.testing.assert_array_equal(bh[:, 0], sh)
+    np.testing.assert_array_equal(
+        bat_eng.last_fault_histories["queue_drops"][:, 0],
+        seq_eng.last_fault_histories["queue_drops"])
+
+
+def test_jax_backend_matches_numpy_under_faults():
+    pytest.importorskip("jax")
+    plat, sched, slo, tr, groups = faulted_setup(ticks=500)
+    # add a stuck-rate fault so the scan's actuator-override path runs
+    sched = sched.stick_island(plat.islands.names()[0], start=50, end=250,
+                               rate=0.4)
+    bplat = BatchSimPlatform.stack([plat, plat])
+    kw = dict(faults=sched, slo=slo,
+              balancer=LoadBalancer(groups, plat.names, mode="even"))
+    rn = BatchSimEngine(bplat, **kw).run(tr)
+    rj = BatchSimEngine(bplat, backend="jax", **kw).run(tr)
+    np.testing.assert_allclose(rj.completed, rn.completed, rtol=1e-3)
+    np.testing.assert_allclose(rj.energy_j, rn.energy_j, rtol=1e-3)
+    np.testing.assert_allclose(rj.dropped_slo, rn.dropped_slo,
+                               rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(rj.dropped_fault, rn.dropped_fault,
+                               rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(rj.retried, rn.retried,
+                               rtol=1e-3, atol=1e-2)
+    np.testing.assert_allclose(rj.drop_rate, rn.drop_rate,
+                               rtol=1e-3, atol=1e-4)
+    np.testing.assert_allclose(rj.p99_latency_s, rn.p99_latency_s,
+                               rtol=1e-3, atol=tr.dt)
+
+
+# ----------------------------------------------------------- invariants
+def check_conservation(plat, tr, *, sched, slo, groups=None, ctl=None):
+    bal = (LoadBalancer(groups, plat.names, mode="even")
+           if groups else None)
+    eng = SimEngine(plat, faults=sched, slo=slo, balancer=bal,
+                    controller=ctl)
+    r = eng.run(tr)
+    qd = eng.last_fault_histories["queue_drops"]
+    # explicit ledgers are non-negative and the per-tick drop history
+    # sums to the run totals
+    assert r.dropped_slo >= 0 and r.dropped_fault >= 0 and r.retried >= 0
+    assert (qd >= -1e-9).all()
+    # conservation: offered == completed + explicit drops + backlog
+    total_q = float(eng.last_state.queue.sum())
+    lhs = offered(tr, r)
+    rhs = r.completed + r.dropped_slo + r.dropped_fault + total_q
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-9, atol=1e-6)
+    # queues stayed non-negative through every kill/revive
+    assert (eng.last_state.queue >= 0.0).all()
+    assert (eng.last_state.retry_q >= -1e-12).all()
+    assert float(eng.last_state.retry_q.sum()) <= total_q + 1e-9
+    return r
+
+
+def run_conservation_case(seed, kill_start, kill_len, on_kill, deadline):
+    names = ("a0", "a1", "a2", "b0", "b1", "b2")
+    plat = make_platform(6, names=names)
+    cap = SimEngine(plat).capacity_rps()
+    tr = poisson_trace(float(cap.sum()) * 0.6, 400, 6, dt=1e-3, seed=seed)
+    sched = (FaultSchedule()
+             .kill_tile("a1", start=kill_start, end=kill_start + kill_len)
+             .kill_tile("b0", start=kill_start + 50))
+    slo = SLOConfig(deadline_s=deadline, on_kill=on_kill,
+                    max_retries=1 if on_kill == "respill" else 0)
+    check_conservation(plat, tr, sched=sched, slo=slo,
+                       groups=(names[:3], names[3:]))
+
+
+@pytest.mark.parametrize("on_kill", ["respill", "drop", "wait"])
+def test_conservation_under_faults_seeded(on_kill):
+    for seed, start, ln, dl in [(0, 50, 100, 0.02), (1, 120, 200, None),
+                                (2, 10, 380, 0.05)]:
+        run_conservation_case(seed, start, ln, on_kill, dl)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(seed=st.integers(0, 2**16),
+           kill_start=st.integers(0, 350),
+           kill_len=st.integers(1, 300),
+           on_kill=st.sampled_from(["respill", "drop", "wait"]),
+           deadline=st.sampled_from([None, 0.01, 0.05]))
+    def test_conservation_under_faults_fuzzed(seed, kill_start, kill_len,
+                                              on_kill, deadline):
+        run_conservation_case(seed, kill_start, kill_len, on_kill,
+                              deadline)
+
+
+def test_kill_revive_queue_drains_and_power_gates():
+    """A killed tile serves nothing and burns nothing; after revive its
+    (waited) backlog drains and completion resumes."""
+    plat = make_platform(3)
+    cap = SimEngine(plat).capacity_rps()
+    tr = poisson_trace(float(cap.sum()) * 0.5, 300, 3, dt=1e-3, seed=7)
+    sched = FaultSchedule().kill_tile(plat.names[0], start=50, end=150)
+    eng = SimEngine(plat, faults=sched,
+                    slo=SLOConfig(on_kill="wait"))
+    r = eng.run(tr)
+    adm, served = eng.last_histories
+    assert served[50:150, 0].sum() == 0.0            # dead: serves nothing
+    assert served[150:, 0].sum() > 0.0               # revived: drains
+    assert r.dropped_fault == 0.0                    # "wait" never drops
+    # power gating: the same run with the tile alive burns MORE energy
+    r_free = SimEngine(plat).run(tr)
+    assert r.energy_j < r_free.energy_j
+    # conservation incl. the wait backlog
+    np.testing.assert_allclose(
+        offered(tr, r),
+        r.completed + r.dropped_slo + float(eng.last_state.queue.sum()),
+        rtol=1e-9, atol=1e-6)
+
+
+def test_stuck_rate_overrides_hardware_not_software():
+    """A stuck actuator pins the island's silicon rate; the controller's
+    software state keeps evolving and service recovers to the software
+    view when the fault clears."""
+    plat = make_platform(3, island_groups=None)
+    cap = SimEngine(plat).capacity_rps()
+    tr = poisson_trace(float(cap.sum()) * 0.9, 300, 3, dt=1e-3, seed=3)
+    isl = plat.islands.names()[0]
+    sched = FaultSchedule().stick_island(isl, start=0, end=200, rate=0.05)
+    eng = SimEngine(plat, faults=sched)
+    r = eng.run(tr)
+    free_eng = SimEngine(plat)
+    r_free = free_eng.run(tr)
+    # pinned near-zero the island serves strictly less while stuck ...
+    served = eng.last_histories[1]
+    served_free = free_eng.last_histories[1]
+    assert served[:200].sum() < served_free[:200].sum()
+    # ... then recovers to the SOFTWARE rate when the fault clears and
+    # drains the built-up backlog (more served than the free run's tail)
+    assert served[200:].sum() > served_free[200:].sum()
+    assert r.p99_latency_s > r_free.p99_latency_s
+    assert r.completed <= r_free.completed + 1e-9
+
+
+# --------------------------------------------------------- online detect
+def test_online_fault_detector_latch_and_revive_probe():
+    det = OnlineFaultDetector(3, SimFaultConfig(dead_ticks=3))
+    cap = np.array([1.0, 0.0, 1.0])
+    served = np.array([1.0, 0.0, 1.0])
+    queue = np.array([0.0, 5.0, 0.0])
+    for _ in range(2):
+        nd, na = det.observe(served, queue, cap)
+        assert not nd.any()                       # below the streak
+    nd, na = det.observe(served, queue, cap)
+    assert nd[1] and det.believed_dead[1]         # latched on tick 3
+    # an idle healthy tile (no backlog) is never suspected
+    assert not det.believed_dead[0]
+    # revive probe: observable capacity clears the belief immediately
+    nd, na = det.observe(served, queue, np.array([1.0, 1.0, 1.0]))
+    assert na[1] and not det.believed_dead[1]
+
+
+def test_sim_fault_supervisor_events_and_straggler_gating():
+    sup = SimFaultSupervisor(SimFaultConfig(dead_ticks=2,
+                                            straggler_ticks=5))
+    sup.begin_run(("x", "y", "z"))
+    served = np.array([1.0, 0.0, 1.0])
+    queue = np.array([0.0, 1.0, 0.0])
+    cap = np.array([1.0, 0.0, 1.0])
+    evs = []
+    for t in range(3):
+        evs += sup.observe(t, served=served, queue=queue, cap=cap)
+    assert [e["kind"] for e in evs] == ["detected_dead"]
+    assert evs[0]["tiles"] == ["y"]
+    np.testing.assert_array_equal(sup.believed_alive, [1.0, 0.0, 1.0])
+    # straggler skew must PERSIST straggler_ticks before one event fires
+    cap = np.ones(3)
+    busy_skew = np.array([0.9, 0.2, 0.2])
+    n0 = len(sup.events)
+    for t in range(3, 3 + 4):                     # 4 < straggler_ticks
+        sup.observe(t, served=np.ones(3), queue=np.zeros(3), cap=cap,
+                    busy=busy_skew)
+    stragglers = [e for e in sup.events if e["kind"] == "straggler_suspect"]
+    assert not stragglers
+    for t in range(7, 7 + 10):
+        sup.observe(t, served=np.ones(3), queue=np.zeros(3), cap=cap,
+                    busy=busy_skew)
+    stragglers = [e for e in sup.events if e["kind"] == "straggler_suspect"]
+    assert len(stragglers) == 1                   # deduped set-change emit
+    assert stragglers[0]["tiles"] == ["x"]
+
+
+def test_supervisor_in_the_loop_detection_latency():
+    """The engine routes on BELIEVED availability: detection fires a few
+    ticks after the kill, telemetry carries the events, and recovery
+    still keeps the run essentially drop-free."""
+    plat = pipeline_platform()
+    cap = SimEngine(plat).capacity_rps()
+    stage_cap = float(cap[:3].sum())
+    mean = np.zeros(6)
+    mean[:3] = 0.45 * stage_cap / 3.0
+    tr = diurnal_trace(mean, 1200, 6, dt=1e-3, depth=1.0 / 3.0, seed=11,
+                       phase=-np.pi / 2.0)
+    sched = FaultSchedule().kill_tile("be1", start=400, end=900)
+    sup = SimFaultSupervisor(SimFaultConfig(dead_ticks=3))
+    eng = SimEngine(
+        plat, config=SimConfig(telemetry_interval=50),
+        faults=sched, slo=SLOConfig(deadline_s=0.05),
+        balancer=LoadBalancer((STAGE0, STAGE1), plat.names, mode="even"),
+        supervisor=sup)
+    r = eng.run(tr)
+    dead_evs = [e for e in sup.events if e["kind"] == "detected_dead"]
+    alive_evs = [e for e in sup.events if e["kind"] == "detected_alive"]
+    assert dead_evs and dead_evs[0]["tiles"] == ["be1"]
+    # latency: at least dead_ticks after the kill, but well bounded
+    assert 400 + 2 <= dead_evs[0]["tick"] <= 400 + 30
+    assert alive_evs and alive_evs[0]["tick"] >= 900
+    # the engine forwarded detection events into telemetry
+    tl_kinds = [e["kind"] for e in r.telemetry.events]
+    assert "detected_dead" in tl_kinds and "fault_kill" in tl_kinds
+    assert r.drop_rate < 0.01
+
+
+# ---------------------------------------------------------- scenario gate
+def surge_kill_run(*, recover, dfs=False, supervisor=None, ticks=4000):
+    plat = pipeline_platform()
+    cap = SimEngine(plat).capacity_rps()
+    stage_cap = float(cap[:3].sum())
+    mean = np.zeros(6)
+    mean[:3] = 0.45 * stage_cap / 3.0
+    tr = diurnal_trace(mean, ticks, 6, dt=1e-3, depth=1.0 / 3.0, seed=11,
+                       phase=-np.pi / 2.0)       # trough -> 2x surge peak
+    sched = FaultSchedule().kill_tile("be1", start=1800, end=2600)
+    slo = (SLOConfig(deadline_s=0.05, on_kill="respill", max_retries=1)
+           if recover else
+           SLOConfig(deadline_s=0.05, on_kill="drop", max_retries=0))
+    ctl = (ControllerHarness(
+        plat.islands, partial(policy_memory_bound, threshold=0.55,
+                              low_rate=0.5), queue_guard_ticks=3.0)
+        if dfs else None)
+    eng = SimEngine(
+        plat, config=SimConfig(control_interval=25), controller=ctl,
+        faults=sched, slo=slo, supervisor=supervisor,
+        balancer=LoadBalancer((STAGE0, STAGE1), plat.names, mode="even"))
+    r = eng.run(tr)
+    return eng, r, tr
+
+
+def test_scenario_gate_replica_kill_mid_surge():
+    """The PR's scenario gate: a back-end replica dies for 800 ticks of
+    a 2x diurnal surge.  Without recovery the stranded share is dropped;
+    with respill + alive-masked splits the pipeline survives at a
+    bounded p99 and an order-of-magnitude lower drop rate — work
+    conserved every tick in both runs."""
+    eng_n, r_n, tr = surge_kill_run(recover=False)
+    eng_r, r_r, _ = surge_kill_run(recover=True)
+
+    # without recovery: the kill window's share of work is lost
+    assert r_n.drop_rate > 0.05
+    # with recovery: survivors absorb the respill, nearly nothing drops
+    assert r_r.drop_rate < 0.01
+    assert r_r.retried > 0.0
+    assert r_r.completed > r_n.completed
+    # bounded tail in both: the deadline caps queueing delay
+    assert r_n.p99_latency_s <= 0.05 + tr.dt
+    assert r_r.p99_latency_s <= 0.05 + tr.dt
+    # work conservation, both modes; the chain forwards stage-0
+    # completions with one tick of latency, so the last tick's front-end
+    # output is still in flight when the run ends
+    for eng, r in ((eng_n, r_n), (eng_r, r_r)):
+        in_flight = float(eng.last_histories[1][-1, :3].sum())
+        lhs = offered(tr, r)
+        rhs = (r.completed + r.dropped_slo + r.dropped_fault
+               + float(eng.last_state.queue.sum()) + in_flight)
+        np.testing.assert_allclose(lhs, rhs, rtol=1e-9, atol=1e-6)
+
+    # the gate holds with the DFS controller in the loop too
+    _, r_dn, _ = surge_kill_run(recover=False, dfs=True)
+    _, r_dr, _ = surge_kill_run(recover=True, dfs=True)
+    assert r_dn.drop_rate > 0.05
+    assert r_dr.drop_rate < 0.01
+    # and DFS still saves energy while the fault plays out
+    assert r_dr.energy_j < r_r.energy_j
+
+
+# ------------------------------------------------------ DSE under failure
+def test_closed_loop_score_reranks_under_faults():
+    """A stuck-at-low-rate actuator mid-run re-orders survivors: the
+    design whose static win came from a throttled (energy-lean) island
+    config loses more capacity under the stuck fault than the full-rate
+    design, and the fault-aware ranking flips them.  Batched and
+    sequential scoring stay identical."""
+    m = SoCPerfModel()
+    wls = [AccelWorkload("dfadd", *CHSTONE["dfadd"]),
+           AccelWorkload("dfmul", *CHSTONE["dfmul"])]
+    res = grid_sweep(m, wls, ks=(1, 2, 4, 8), acc_rates=(0.2, 0.6, 1.0),
+                     noc_rates=(0.5, 1.0), n_tg=2)
+    # diverse Pareto survivors: one (K, acc_rate, noc_rate) combo each
+    thr = res.throughput.ravel()
+    seen, idx = set(), []
+    for j in sorted(res.pareto_indices(), key=lambda j: -thr[j]):
+        dp = res.design_point(int(j))
+        key = (dp.replication["dfmul"], dp.rates["acc"],
+               dp.rates["noc_mem"])
+        if key not in seen:
+            seen.add(key)
+            idx.append(int(j))
+        if len(idx) == 4:
+            break
+    tr = diurnal_trace(np.array([3000.0, 9000.0]), 1500, 2, dt=1e-3,
+                       depth=0.5, seed=9)
+    base = dict(model=m, indices=idx, req_mb=0.002, p99_sla_s=0.02)
+
+    s_free = closed_loop_score(res, tr, **base)
+    assert s_free.drop_rate is None               # fault-free: no ledger
+
+    fs = FaultSchedule().stick_island("dfmul", start=300, end=1200,
+                                     rate=0.2)
+    kw = dict(**base, fault_schedule=fs,
+              slo=SLOConfig(deadline_s=0.02), max_drop_rate=0.02)
+    s_fb = closed_loop_score(res, tr, **kw)
+    s_fs = closed_loop_score(res, tr, **kw, batch=False)
+
+    # batched == sequential, exactly (drop ledgers, tails, final order)
+    np.testing.assert_array_equal(s_fb.drop_rate, s_fs.drop_rate)
+    np.testing.assert_array_equal(np.asarray(s_fb.p99_latency_s),
+                                  np.asarray(s_fs.p99_latency_s))
+    np.testing.assert_array_equal(s_fb.order, s_fs.order)
+    # the fault produced real, design-dependent drops ...
+    assert (np.asarray(s_fb.drop_rate) > 0.0).all()
+    assert len(set(np.round(s_fb.drop_rate, 6))) > 1
+    # ... and at least one pair re-ranked relative to fault-free
+    assert not np.array_equal(np.asarray(s_free.order),
+                              np.asarray(s_fb.order))
+
+
+# ------------------------------------------------ satellite: telemetry IO
+def test_fault_counters_round_trip_through_telemetry_json(tmp_path):
+    plat, sched, slo, tr, groups = faulted_setup(ticks=300)
+    eng = SimEngine(plat, config=SimConfig(telemetry_interval=25),
+                    faults=sched, slo=slo,
+                    balancer=LoadBalancer(groups, plat.names, mode="even"))
+    r = eng.run(tr)
+    p = tmp_path / "tl.json"
+    r.telemetry.to_json(str(p))
+    doc = json.loads(p.read_text())
+    for ch in ("dropped_slo", "dropped_fault", "retried", "dropped"):
+        vals = doc["scalars"][ch]
+        assert vals, ch
+        # cumulative run totals: monotone non-decreasing
+        assert all(b >= a - 1e-9 for a, b in zip(vals, vals[1:])), ch
+    # the last sample's cumulative counters match the run totals
+    assert doc["scalars"]["dropped_slo"][-1] == pytest.approx(
+        r.dropped_slo, rel=1e-9)
+    assert doc["scalars"]["dropped_fault"][-1] == pytest.approx(
+        r.dropped_fault, rel=1e-9)
+    assert doc["scalars"]["retried"][-1] == pytest.approx(
+        r.retried, rel=1e-9)
+    # fault transitions rode along as events
+    kinds = {e["kind"] for e in doc["events"]}
+    assert "fault_kill" in kinds
+
+
+# ------------------------------------------------------------- slow soak
+@pytest.mark.slow
+def test_fleet_kill_soak_long_run():
+    """Half the back-end stage dies and revives twice over a long soak;
+    conservation and bounded drops must hold throughout."""
+    plat = pipeline_platform()
+    cap = SimEngine(plat).capacity_rps()
+    stage_cap = float(cap[:3].sum())
+    mean = np.zeros(6)
+    mean[:3] = 0.4 * stage_cap / 3.0
+    tr = diurnal_trace(mean, 20_000, 6, dt=1e-3, depth=0.4, seed=5)
+    sched = (FaultSchedule()
+             .kill_tile("be0", start=3000, end=6000)
+             .kill_tile("be1", start=5000, end=9000)
+             .kill_tile("be0", start=12_000, end=15_000)
+             .kill_tile("be2", start=13_000, end=14_000))
+    eng = SimEngine(
+        plat, config=SimConfig(control_interval=25),
+        faults=sched, slo=SLOConfig(deadline_s=0.05),
+        balancer=LoadBalancer((STAGE0, STAGE1), plat.names, mode="even"))
+    r = eng.run(tr)
+    # overlapping kills leave one back-end survivor for 1000 ticks; the
+    # deadline sheds what it can't absorb, but drops stay bounded
+    assert r.drop_rate < 0.04
+    qd = eng.last_fault_histories["queue_drops"]
+    assert (qd >= -1e-9).all()
+    in_flight = float(eng.last_histories[1][-1, :3].sum())
+    np.testing.assert_allclose(
+        offered(tr, r),
+        r.completed + r.dropped_slo + r.dropped_fault
+        + float(eng.last_state.queue.sum()) + in_flight,
+        rtol=1e-9, atol=1e-5)
