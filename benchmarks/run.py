@@ -10,7 +10,8 @@ measured value.
 ``--out`` refuses to overwrite an existing file whose JSON schema it
 does not recognize (anything that is not a row list) — the trajectory
 files the individual benchmarks own (``BENCH_dse.json``,
-``BENCH_sim.json``, ``BENCH_sim_batch.json``) are keyed documents, and a
+``BENCH_sim.json``, ``BENCH_sim_batch.json``, ``BENCH_observe.json``)
+are keyed documents, and a
 mistyped ``--out BENCH_dse.json`` used to silently clobber them.  Pass
 ``--force`` to overwrite anyway.
 """
@@ -76,8 +77,8 @@ def main(argv=None) -> None:
     check_out_target(args.out, force=args.force)
 
     from benchmarks import (bench_contention, bench_dfs_traffic, bench_dse,
-                            bench_kernels, bench_replication, bench_sim,
-                            bench_sim_batch, bench_sim_faults)
+                            bench_kernels, bench_observe, bench_replication,
+                            bench_sim, bench_sim_batch, bench_sim_faults)
     mods = [("replication(TableI)", bench_replication),
             ("contention(Fig3)", bench_contention),
             ("dfs_traffic(Fig4)", bench_dfs_traffic),
@@ -85,6 +86,7 @@ def main(argv=None) -> None:
             ("sim(closed-loop)", bench_sim),
             ("sim_batch(multi-design)", bench_sim_batch),
             ("sim_faults(robustness)", bench_sim_faults),
+            ("observe(monitoring)", bench_observe),
             ("kernels", bench_kernels)]
     rows = []
     failures = 0

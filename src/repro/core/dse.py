@@ -727,6 +727,15 @@ def grid_sweep(model: SoCPerfModel,
     n_chunks = 0
     peak_bytes = 0
 
+    try:
+        # lazy: the core DSE layer stays importable without repro.sim
+        from repro.sim.observe import profiled as _profiled
+    except ImportError:                              # pragma: no cover
+        import contextlib
+
+        def _profiled(name):
+            return contextlib.nullcontext()
+
     for o0 in range(0, outer_n, o_per_block):
         o1 = min(o0 + o_per_block, outer_n)
         O = o1 - o0
@@ -742,8 +751,9 @@ def grid_sweep(model: SoCPerfModel,
             return v.reshape(bshape)
 
         blk_shape = (O,) + shape[s:]
-        out = _eval_grid(model, workloads, n_tg, backend, lay, vals, get,
-                         blk_shape)
+        with _profiled("sweep_chunk"):
+            out = _eval_grid(model, workloads, n_tg, backend, lay, vals,
+                             get, blk_shape)
         flat = {k: v.ravel() for k, v in out.items()}
         n_chunks += 1
         peak_bytes = max(peak_bytes, sum(v.nbytes for v in flat.values())
@@ -807,6 +817,11 @@ class ClosedLoopScore:
     ``results`` holds per-point ``sim.SimResult`` objects on the
     sequential path; on the batched path it holds the single
     ``sim.BatchSimResult`` of the one stacked replay.
+
+    ``counters`` (only when ``observe=`` enabled the monitoring plane) is
+    one ``sim.CounterPlane.summary()`` dict per survivor — utilization,
+    stall fraction, NoC flits, per-island energy — aligned with
+    ``indices``.
     """
     indices: np.ndarray                 # (M,) int64
     p99_latency_s: np.ndarray           # (M,) float64
@@ -815,6 +830,7 @@ class ClosedLoopScore:
     order: np.ndarray                   # (M,) int64 positions into indices
     results: List[object]               # SimResults, or one BatchSimResult
     drop_rate: Optional[np.ndarray] = None   # (M,) under a fault schedule
+    counters: Optional[List[Dict[str, float]]] = None   # (M,) summaries
 
     def ranked_indices(self) -> np.ndarray:
         """Flat SweepResult indices, best-first."""
@@ -858,7 +874,8 @@ def closed_loop_score(result: SweepResult, trace, *,
                       balancer_factory=None,
                       fault_schedule=None,
                       slo=None,
-                      max_drop_rate: Optional[float] = None
+                      max_drop_rate: Optional[float] = None,
+                      observe=None
                       ) -> ClosedLoopScore:
     """Re-rank static-sweep survivors by *simulated* runtime behaviour.
 
@@ -914,6 +931,14 @@ def closed_loop_score(result: SweepResult, trace, *,
     (hard budget via ``max_drop_rate``, joining the p99 SLA in the miss
     score; otherwise as the primary sort key ahead of energy).  Fault-free
     calls rank exactly as before.
+
+    Observability: ``observe`` (a ``repro.sim.Observer`` or a level name
+    ``"counters"``/``"full"``) turns on the monitoring plane inside every
+    replay; the score then carries one counter summary per survivor in
+    ``ClosedLoopScore.counters`` (batched: one ``design(j)`` slice each of
+    the single stacked plane).  ``observe=None`` keeps the replays
+    monitoring-free and is bit-for-bit identical to pre-observability
+    scoring.
     """
     from repro.sim import BatchTrace, SimConfig, SimEngine, SimPlatform
 
@@ -950,7 +975,8 @@ def closed_loop_score(result: SweepResult, trace, *,
                                           if balancer_factory is not None
                                           else None),
                                 backend=backend,
-                                faults=fault_schedule, slo=slo)
+                                faults=fault_schedule, slo=slo,
+                                observe=observe)
         r = engine.run(trace)
         p99 = r.p99_latency_s
         ept = r.energy_per_request_j
@@ -958,6 +984,10 @@ def closed_loop_score(result: SweepResult, trace, *,
         drops = (np.asarray(r.drop_rate, dtype=np.float64)
                  if fault_schedule is not None else None)
         results: List[object] = [r]
+        ob = engine.observer
+        counters = (None if ob is None or ob.counters is None else
+                    [ob.counters.design(j).summary()
+                     for j in range(indices.shape[0])])
     else:
         p99 = np.empty(indices.shape[0])
         ept = np.empty(indices.shape[0])
@@ -965,6 +995,7 @@ def closed_loop_score(result: SweepResult, trace, *,
         drops = (np.empty(indices.shape[0])
                  if fault_schedule is not None else None)
         results = []
+        summaries: List[Dict[str, float]] = []
         for j, i in enumerate(indices):
             dp = result.design_point(int(i))
             platform = SimPlatform.from_design_point(
@@ -978,7 +1009,8 @@ def closed_loop_score(result: SweepResult, trace, *,
                                balancer=(balancer_factory(platform)
                                          if balancer_factory is not None
                                          else None),
-                               faults=fault_schedule, slo=slo)
+                               faults=fault_schedule, slo=slo,
+                               observe=observe)
             r = engine.run(trace.design(j) if isinstance(trace, BatchTrace)
                            else trace)
             results.append(r)
@@ -987,13 +1019,20 @@ def closed_loop_score(result: SweepResult, trace, *,
             thr[j] = r.throughput_rps
             if drops is not None:
                 drops[j] = r.drop_rate
+            if engine.observer is not None \
+                    and engine.observer.counters is not None:
+                # summarize NOW — a shared Observer instance re-attaches
+                # its plane on the next survivor's run
+                summaries.append(engine.observer.counters.summary())
+        counters = summaries if len(summaries) == len(results) else None
 
     order = _rank_scores(p99, ept, p99_sla_s, drop_rate=drops,
                          max_drop_rate=max_drop_rate)
     return ClosedLoopScore(indices=indices, p99_latency_s=p99,
                            energy_per_request_j=ept, throughput_rps=thr,
                            order=np.asarray(order, dtype=np.int64),
-                           results=results, drop_rate=drops)
+                           results=results, drop_rate=drops,
+                           counters=counters)
 
 
 # ---------------------------------------------------------------------------

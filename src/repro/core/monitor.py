@@ -19,8 +19,9 @@ standing in for the ESP NoC flit; DESIGN.md assumption #3).
 from __future__ import annotations
 
 import time
+from collections import deque
 from dataclasses import dataclass
-from typing import Any, Dict, Iterable, List, Optional, Tuple
+from typing import Any, Deque, Dict, Iterable, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -114,10 +115,18 @@ class MonitorClient:
     ``read()`` pulls the device counter tree once (one transfer) and stamps
     it with wall-clock; ``rates()`` differentiates consecutive samples into
     pkt/s — what the paper plots in Fig. 4.
+
+    The sample history is bounded (``max_samples``, a deque) so long soaks
+    never grow it without limit — the same fix ``ActuatorState.history``
+    got; only a recent window is ever differenced or printed anyway.
     """
 
-    def __init__(self):
-        self.samples: List[MonitorSample] = []
+    def __init__(self, max_samples: int = 4096):
+        self.samples: Deque[MonitorSample] = deque(maxlen=int(max_samples))
+        # memoized table() column layout: recomputed only when the set of
+        # tiles/kinds changes, not sorted afresh on every render
+        self._layout_key: Optional[Tuple[Tuple[str, ...], ...]] = None
+        self._layout: List[Tuple[str, Tuple[str, ...]]] = []
 
     def read(self, counters: Counters, step: int) -> MonitorSample:
         host = jax.device_get(counters)
@@ -128,8 +137,9 @@ class MonitorClient:
         return s
 
     def rates(self, tile: str, kind: str = "pkts_in") -> List[Tuple[int, float]]:
+        samples = list(self.samples)
         out = []
-        for a, b in zip(self.samples, self.samples[1:]):
+        for a, b in zip(samples, samples[1:]):
             dt = b.wall_time - a.wall_time
             if dt <= 0:
                 continue
@@ -137,12 +147,22 @@ class MonitorClient:
             out.append((b.step, da / dt))
         return out
 
+    def _columns(self, counters: Dict[str, Dict[str, float]]
+                 ) -> List[Tuple[str, Tuple[str, ...]]]:
+        key = tuple((t, tuple(row)) for t, row in counters.items())
+        if key != self._layout_key:
+            self._layout_key = key
+            self._layout = [(t, tuple(sorted(counters[t])))
+                            for t in sorted(counters)]
+        return self._layout
+
     def table(self) -> str:
         if not self.samples:
             return "(no samples)"
         last = self.samples[-1]
         lines = [f"step {last.step}  t={last.wall_time:.3f}"]
-        for t, row in sorted(last.counters.items()):
-            cols = "  ".join(f"{k}={v:.3g}" for k, v in sorted(row.items()))
+        for t, kinds in self._columns(last.counters):
+            row = last.counters[t]
+            cols = "  ".join(f"{k}={row[k]:.3g}" for k in kinds)
             lines.append(f"  {t:12s} {cols}")
         return "\n".join(lines)

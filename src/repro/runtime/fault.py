@@ -223,9 +223,10 @@ class SimFaultSupervisor:
         for mask, kind in ((newly_dead, "detected_dead"),
                            (newly_alive, "detected_alive")):
             if mask.any():
+                tiles = [self._names[i] for i in np.nonzero(mask)[0]]
                 out.append({
                     "tick": int(tick), "kind": kind,
-                    "tiles": [self._names[i] for i in np.nonzero(mask)[0]]})
+                    "subject": ",".join(tiles), "tiles": tiles})
         if busy is not None:
             b = np.asarray(busy, dtype=np.float64)
             live = ~self.detector.believed_dead
@@ -239,9 +240,10 @@ class SimFaultSupervisor:
                 # emit only persistent skew, and only on set changes —
                 # per-tick Poisson flicker would flood a long soak's log
                 if cur and cur != self._last_skew:
+                    tiles = [self._names[i] for i in sorted(cur)]
                     out.append({
                         "tick": int(tick), "kind": "straggler_suspect",
-                        "tiles": [self._names[i] for i in sorted(cur)]})
+                        "subject": ",".join(tiles), "tiles": tiles})
                 self._last_skew = cur
         self.events.extend(out)
         return out

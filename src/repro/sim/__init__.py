@@ -30,6 +30,14 @@ faults.py    — FaultSchedule (tile/island kills, link degradation, stuck
                replay one schedule, bit-for-bit at B=1
 telemetry.py — ring-buffer time series + JSON export (per-design rings
                for the batched engine), incl. drop/retry fault counters
+observe.py   — run-time monitoring: the per-tile/per-link/per-island
+               hardware-counter plane (CounterPlane), schema'd
+               control-plane tracing (ControlTrace/TraceEvent), the
+               Observer level= knob (off/counters/full) every engine
+               accepts via observe=, and wall-clock phase profiling
+metrics.py   — MetricsRegistry (counter/gauge/histogram) rendering
+               Prometheus text + JSON timeseries from telemetry and the
+               counter plane
 
 DSE bridge: ``core/dse.py:closed_loop_score`` re-ranks ``grid_sweep``
 Pareto survivors by simulated tail latency and energy under dynamic
@@ -48,6 +56,11 @@ from repro.sim.faults import (  # noqa: F401
     StuckRate, TileKill, compile_faults, respill_stranded)
 from repro.sim.flows import (  # noqa: F401
     CompiledFlows, FlowPattern, compile_flows)
+from repro.sim.metrics import (  # noqa: F401
+    MetricsRegistry, parse_prometheus_text, telemetry_timeseries)
+from repro.sim.observe import (  # noqa: F401
+    LEVELS, TRACE_KINDS, ControlTrace, CounterPlane, Observer, Profiler,
+    TraceEvent, export_metrics, get_profiler, profiled, reset_profiler)
 from repro.sim.telemetry import (  # noqa: F401
     BatchTelemetry, RingBuffer, Telemetry, TelemetrySchema,
     weighted_percentiles)

@@ -58,6 +58,7 @@ from repro.sim.engine import (PKT_BYTES, SimConfig, SimPlatform, StepConsts,
 from repro.sim.faults import (CompiledFaults, FaultSchedule, SLOConfig,
                               compile_faults, respill_stranded)
 from repro.sim.flows import FlowPattern, compile_flows
+from repro.sim.observe import STALL_EPS, CounterPlane, Observer
 from repro.sim.telemetry import BatchTelemetry, TelemetrySchema
 from repro.sim.traffic import BatchTrace, Trace
 
@@ -274,7 +275,7 @@ class BatchSimEngine:
                  balancer: Optional[LoadBalancer] = None,
                  backend: str = "numpy",
                  faults: Optional[FaultSchedule] = None,
-                 slo: Optional[SLOConfig] = None):
+                 slo: Optional[SLOConfig] = None, observe=None):
         assert backend in ("numpy", "jax"), backend
         self.platform = platform
         self.config = config
@@ -283,6 +284,11 @@ class BatchSimEngine:
         self.backend = backend
         self.faults = faults
         self.slo = slo
+        # run-time monitoring (observe.Observer or level string): the
+        # numpy path accumulates the counter plane incrementally per tick,
+        # the jax path carries accumulators through the scan (counters
+        # level; full-trace tracing needs the Python-loop engines)
+        self.observer = Observer.coerce(observe)
         self.last_state: Optional[TickState] = None
         self.last_histories = None      # (admitted, served) (T, B, A)
         self.last_fault_histories = None
@@ -453,12 +459,34 @@ class BatchSimEngine:
             TelemetrySchema(islands=p.islands.names(), tiles=p.names),
             B, capacity=cfg.telemetry_capacity)
 
+        # ---- monitoring (read-only; per tick the deferred capture costs
+        # two preallocated slot writes — dyn row, link-load row — and the
+        # counters are reconstructed vectorized from the histories the
+        # loop already keeps, exactly like the sequential engine)
+        ob = self.observer
+        ocap = None
+        if ob is not None and ob.enabled:
+            ocap = ob.capture_sequential(
+                T=T, consts=consts, lead=(B,),
+                island_of_tile=self._island_of_tile,
+                noc_island=self._noc_island, n_links=self._inc.shape[-1],
+                n_islands=len(p.islands.names()),
+                tile_alive=cf.tile_alive if has_tile else None,
+                link_scale=cf.link_scale if has_link else None,
+                tile_names=p.names, island_names=p.islands.names())
+            ocap.on_service(0, svc)
+            ob.begin_run()
+            ob.emit(0, "run_start", subject="batch-numpy", ticks=T, dt=dt,
+                    designs=B, level=ob.level)
+
         wall0 = time.perf_counter()
         for t_i in range(T):
             for ev in ev_by_tick.get(t_i, ()):
                 telem.event(t_i, ev["kind"],
                             **{k: v for k, v in ev.items()
                                if k not in ("tick", "kind")})
+                if ob is not None:
+                    ob.emit_event_dict(t_i, ev)
             alive = cf.tile_alive[t_i] if has_tile else None
             lscale = cf.link_scale[t_i] if has_link else None
             if has_stuck_rate:
@@ -467,6 +495,8 @@ class BatchSimEngine:
                         row, applied_stuck, equal_nan=True):
                     applied_stuck = row
                     svc = self._service(rates, rate_override=applied_stuck)
+                    if ocap is not None:
+                        ocap.on_service(t_i, svc)
 
             respill = stranded_exit = None
             if has_tile and slo.on_kill != "wait":
@@ -492,6 +522,8 @@ class BatchSimEngine:
                     arr = arr + retry_arr
             out = tick_step(st, arr, svc, consts, alive=alive,
                             link_scale=lscale, retry_in=retry_arr)
+            if ocap is not None:
+                ocap.on_tick(t_i, out)
             if carry is not None:
                 carry = out.forwarded
             if self.balancer is not None:
@@ -554,11 +586,22 @@ class BatchSimEngine:
                 if new_rates is not None:
                     rates = new_rates
                     svc = self._service(rates, rate_override=applied_stuck)
-                    telem.event(
-                        t_i, "dfs_commit",
-                        designs=np.nonzero(
-                            self.controller.last_committed)[0].tolist())
+                    if ocap is not None:
+                        ocap.on_service(t_i + 1, svc)
+                    committed = np.nonzero(
+                        self.controller.last_committed)[0].tolist()
+                    telem.event(t_i, "dfs_commit", designs=committed)
+                    if ob is not None:
+                        ob.emit(t_i, "dfs_commit", subject="batch",
+                                designs=committed)
         elapsed = time.perf_counter() - wall0
+        if ocap is not None:
+            # lazy: the vectorized reconstruction runs on the first
+            # observer.counters read, not inside the engine's wall clock
+            ob.attach_lazy(lambda: ocap.finalize(admitted_hist, served_hist,
+                                                 qdrop_hist))
+            ob.emit(max(T - 1, 0), "run_end", subject="batch-numpy",
+                    designs=B)
 
         self.last_state = st
         self.last_histories = (admitted_hist, served_hist)
@@ -713,6 +756,17 @@ class BatchSimEngine:
         link_bw = m.noc.link_bw
         max_slow = m.noc.max_slowdown
         hop_lat = m.noc.hop_latency
+        # monitoring statics: a Python bool baked into the trace (part of
+        # the jit cache key) — level=off scans emit no extra ys and stay
+        # byte-identical to the pre-observability trace.  When observing,
+        # the scan only STACKS a narrow snapshot of the step's existing
+        # arrays into extra ys (a dynamic-update-slice each, no
+        # arithmetic); the counter plane is reconstructed from them
+        # lazily at the first counters read.
+        ob = self.observer
+        observing = ob is not None and ob.enabled
+        n_islands = len(p.islands.names())
+        n_links = int(self._inc.shape[-1])
         hopf = 1.0 + m.hop_latency_share * hop_counts
         hopf0 = 1.0 + m.hop_latency_share * m._ref_hops()
         t_ref = (1.0 - w) + w * max(1.0, own) * hopf0
@@ -830,6 +884,7 @@ class BatchSimEngine:
                 r = jnp.minimum(rho, 0.999)
                 dyn = jnp.minimum(1.0 + r / (2.0 * (1.0 - r)), max_slow)
             else:
+                loads = None
                 dyn = jnp.ones_like(q)
             cap = (base_mbps * t_ref / (t_comp + t_wire * dyn)
                    / req_mb) * dt
@@ -938,8 +993,27 @@ class BatchSimEngine:
                     qdrop_t = qdrop_t + stranded_exit
                 if slo_drop is not None:
                     qdrop_t = qdrop_t + slo_drop
-                return carry, (adm, served, qdrop_t)
-            return carry, (adm, served)
+                ys = (adm, served, qdrop_t)
+            else:
+                ys = (adm, served)
+            if observing:
+                # pure reads of the step's arrays, never fed back into
+                # the dynamics above.  Stacked into preallocated ys
+                # buffers (one dynamic-update-slice each) rather than
+                # carried sums — XLA copies while-loop carries per
+                # iteration, which measures strictly slower.  Payload is
+                # deliberately narrow: float32 snapshots (counters are
+                # tolerance-checked against the numpy engines anyway), a
+                # precomputed stall bit, and the per-ISLAND rates from
+                # which f_tile/f_noc expand host-side; busy, link loads
+                # and power all reconstruct lazily from these plus the
+                # admitted/served histories
+                obs_ys = {"cap": cap.astype(jnp.float32),
+                          "dyn": dyn.astype(jnp.float32),
+                          "stall": queue > STALL_EPS,
+                          "rates": rates_eff.astype(jnp.float32)}
+                ys = ys + (obs_ys,)
+            return carry, ys
 
         def run_scan(xs0, rates0, guard0, pid_i0, pid_prev0, pid_has0,
                      cap0):
@@ -958,7 +1032,7 @@ class BatchSimEngine:
         # (mask values travel through xs, so same-shape schedules share
         # one trace)
         fault_key = (has_tile, has_link, has_stuck, has_stuck_rate,
-                     recover, drain, track, deadline_ticks)
+                     recover, drain, track, deadline_ticks, observing)
         if self._jax_fn is None or self._jax_fn[0] != (T, ci, fault_key):
             self._jax_fn = ((T, ci, fault_key), jax.jit(run_scan))
         run_scan = self._jax_fn[1]
@@ -1000,6 +1074,9 @@ class BatchSimEngine:
             jnp.asarray(guard0), jnp.asarray(pid_i0),
             jnp.asarray(pid_prev0), jnp.asarray(pid_has0),
             jnp.asarray(cap0))
+        obs_ys = None
+        if observing:
+            *ys, obs_ys = ys
         if track:
             admitted, served, qdropT = ys
             qdrops = np.asarray(qdropT, dtype=np.float64)
@@ -1013,6 +1090,74 @@ class BatchSimEngine:
         admitted = np.asarray(admitted, dtype=np.float64)
         served = np.asarray(served, dtype=np.float64)
         elapsed = time.perf_counter() - wall0
+
+        if obs_ys is not None:
+            # lazy reconstruction from the raw per-tick ys on the first
+            # counters read — the scan itself only paid the ys memcpys.
+            # busy, the link loads and the power integral are replayed
+            # host-side with the scan's own expressions (float64 over the
+            # float32 snapshots, so they land within f32 rounding of the
+            # numpy engine's counters)
+            tile_alive_np = (np.asarray(cf.tile_alive, dtype=np.float64)
+                             if has_tile else None)
+            lscale_np = (np.asarray(cf.link_scale, dtype=np.float64)
+                         if has_link else None)
+            demand_np = np.asarray(self._flow_demand, dtype=np.float64)
+            inc_np = np.asarray(self._inc, dtype=np.float64)
+            iot_np = np.asarray(self._island_of_tile)
+
+            def _jax_plane(o=obs_ys, admitted=admitted, served=served):
+                stall = np.asarray(o["stall"])
+                cap_t = np.asarray(o["cap"], dtype=np.float64)
+                dyn_t = np.asarray(o["dyn"], dtype=np.float64)
+                rates_t = np.asarray(o["rates"], dtype=np.float64)
+                f_tile = rates_t[:, :, iot_np]                 # (T, B, A)
+                f_noc = (rates_t[:, :, noc_idx] if noc_idx >= 0
+                         else np.ones(rates_t.shape[:2]))      # (T, B)
+                busy = np.where(cap_t > 0.0,
+                                served / np.where(cap_t > 0.0, cap_t, 1.0),
+                                0.0)
+                pktf = np.asarray(p.req_mb) * 1e6 / PKT_BYTES
+                hopc = np.asarray(self._hop_counts, dtype=np.float64)
+                oh = np.zeros((A, n_islands))
+                oh[np.arange(A), iot_np] = 1.0
+                tile = {
+                    "offered": admitted.sum(axis=0),
+                    "invocations": served.sum(axis=0),
+                    "busy_ticks": busy.sum(axis=0),
+                    "stall_ticks": stall.sum(axis=0).astype(float),
+                    "cap_sum": cap_t.sum(axis=0),
+                    "hop_flits": (served * pktf * hopc).sum(axis=0),
+                    "slowdown_sum": (dyn_t - 1.0).sum(axis=0)}
+                if dyn_on:
+                    # the wire load at tick t is driven by busy[t-1], as
+                    # in the scan (busy starts the run at zero)
+                    busy_prev = np.concatenate(
+                        [np.zeros((1, B, A)), busy[:-1]], axis=0)
+                    loads = np.einsum("tba,bal->tbl",
+                                      demand_np * busy_prev, inc_np)
+                    if lscale_np is not None:
+                        loads = loads / lscale_np[:, None, :]
+                    util = loads / (link_bw * f_noc[..., None])
+                    link = {"flits": loads.sum(axis=0) / PKT_BYTES,
+                            "util_sum": util.sum(axis=0),
+                            "peak_util": util.max(axis=0, initial=0.0)}
+                else:
+                    link = {k: np.zeros((B, n_links))
+                            for k in ("flits", "util_sum", "peak_util")}
+                tp = P_STATIC_W + P_DYN_W * f_tile * voltage2(f_tile) * busy
+                if tile_alive_np is not None:
+                    tp = tp * tile_alive_np[:, None, :]
+                noc_p = cfg.noc_power_share * (
+                    P_STATIC_W + P_DYN_W * f_noc * voltage2(f_noc))
+                en = (tp.sum(axis=0) * dt) @ oh
+                if noc_idx >= 0:
+                    en[:, noc_idx] += noc_p.sum(axis=0) * dt
+                return CounterPlane.from_arrays(
+                    tile=tile, link=link, island={"energy_j": en},
+                    ticks=np.full(B, float(T)), lead=(B,),
+                    tile_names=p.names, island_names=p.islands.names())
+            ob.attach_lazy(_jax_plane)
 
         if ctl is not None:             # write evolved state back
             ctl.rates = np.asarray(ratesF, dtype=np.float64)

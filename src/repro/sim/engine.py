@@ -50,6 +50,7 @@ from repro.core.perfmodel import AccelWorkload, SoCPerfModel, chip_power
 from repro.sim.faults import (CompiledFaults, FaultSchedule, SLOConfig,
                               compile_faults, respill_stranded)
 from repro.sim.flows import FlowPattern, compile_flows
+from repro.sim.observe import Observer
 from repro.sim.telemetry import (Telemetry, TelemetrySchema,
                                  weighted_percentiles)
 from repro.sim.traffic import Trace
@@ -248,6 +249,8 @@ class TickOut:
     forwarded: Optional[np.ndarray] = None  # (..., A) chained completions
                                             # to enqueue NEXT tick
     slo_drop: Optional[np.ndarray] = None   # (..., A) deadline drops
+    link_loads: Optional[np.ndarray] = None  # (..., L) offered link loads
+                                             # (None without contention)
 
 
 def tick_step(st: TickState, arr_t: np.ndarray, svc: Dict[str, np.ndarray],
@@ -294,6 +297,7 @@ def tick_step(st: TickState, arr_t: np.ndarray, svc: Dict[str, np.ndarray],
                / (c.link_bw * f_noc[..., None]))
         dyn = contention_slowdown(rho, c.max_slow)
     else:
+        loads = None
         rho = np.zeros_like(q)
         dyn = np.ones_like(q)
     cap_tick = (c.base_mbps * svc["t_ref"]
@@ -343,7 +347,7 @@ def tick_step(st: TickState, arr_t: np.ndarray, svc: Dict[str, np.ndarray],
                  if c.forward is not None else None)
     return TickOut(admitted=adm, served=served, cap_tick=cap_tick, rho=rho,
                    dyn=dyn, tile_power=tile_power, noc_power=noc_power,
-                   forwarded=forwarded, slo_drop=slo_drop)
+                   forwarded=forwarded, slo_drop=slo_drop, link_loads=loads)
 
 
 def percentile_samples(admitted: np.ndarray, served: np.ndarray,
@@ -476,13 +480,17 @@ class SimEngine:
     def __init__(self, platform: SimPlatform, *,
                  config: SimConfig = SimConfig(), controller=None,
                  balancer=None, faults: Optional[FaultSchedule] = None,
-                 slo: Optional[SLOConfig] = None, supervisor=None):
+                 slo: Optional[SLOConfig] = None, supervisor=None,
+                 observe=None):
         self.platform = platform
         self.config = config
         self.controller = controller    # a control.ControllerHarness or None
         self.balancer = balancer        # a control.LoadBalancer or None
         self.faults = faults            # a faults.FaultSchedule or None
         self.slo = slo                  # a faults.SLOConfig or None
+        # run-time monitoring: an observe.Observer (or level string) —
+        # zero-perturbation by construction (it only READS tick outputs)
+        self.observer = Observer.coerce(observe)
         # online detection: a runtime.fault.SimFaultSupervisor, which sees
         # only sim telemetry (served/queue/capacity) — routing and respill
         # then act on its BELIEVED availability while the true masks gate
@@ -648,12 +656,34 @@ class SimEngine:
             TelemetrySchema(islands=live.names(), tiles=p.names),
             capacity=cfg.telemetry_capacity)
 
+        # ---- monitoring (zero-perturbation: the capture only READS tick
+        # outputs; per tick it costs two preallocated slot writes, the
+        # full counter plane is reconstructed vectorized after the loop)
+        ob = self.observer
+        ocap = None
+        slo_span = None                 # open SLO-drop span accumulator
+        guard_prev: Tuple[str, ...] = ()
+        if ob is not None and ob.enabled:
+            ocap = ob.capture_sequential(
+                T=T, consts=consts, island_of_tile=self._island_of_tile,
+                noc_island=self._noc_island, n_links=self._inc.shape[-1],
+                n_islands=len(live.names()),
+                tile_alive=cf.tile_alive if has_tile else None,
+                link_scale=cf.link_scale if has_link else None,
+                tile_names=p.names, island_names=live.names())
+            ocap.on_service(0, svc)
+            ob.begin_run()
+            ob.emit(0, "run_start", subject="sequential", ticks=T, dt=dt,
+                    level=ob.level)
+
         wall0 = time.perf_counter()
         for t_i in range(T):
             for ev in ev_by_tick.get(t_i, ()):
                 telem.event(t_i, ev["kind"],
                             **{k: v for k, v in ev.items()
                                if k not in ("tick", "kind")})
+                if ob is not None:
+                    ob.emit_event_dict(t_i, ev)
             alive = cf.tile_alive[t_i] if has_tile else None
             lscale = cf.link_scale[t_i] if has_link else None
             if has_stuck_rate:
@@ -662,6 +692,8 @@ class SimEngine:
                         row, applied_stuck, equal_nan=True):
                     applied_stuck = row     # hardware override (service only)
                     svc = self._service(cur_cfg, rate_override=applied_stuck)
+                    if ocap is not None:
+                        ocap.on_service(t_i, svc)
             # routing acts on the BELIEVED availability (the supervisor's
             # detection state when online detection is in the loop, else
             # the oracle mask); the true mask still gates the hardware
@@ -692,6 +724,23 @@ class SimEngine:
                     arr = arr + retry_arr
             out = tick_step(st, arr, svc, consts, alive=alive,
                             link_scale=lscale, retry_in=retry_arr)
+            if ocap is not None:
+                ocap.on_tick(t_i, out)
+                if ob.tracing and out.slo_drop is not None:
+                    drop_amt = float(out.slo_drop.sum())
+                    if drop_amt > 0.0 and slo_span is None:
+                        hit = np.nonzero(out.slo_drop > 0.0)[0]
+                        slo_span = [t_i, 0.0, 0]
+                        ob.emit(t_i, "slo_drop_start",
+                                tiles=[p.names[a] for a in hit])
+                    if slo_span is not None:
+                        if drop_amt > 0.0:
+                            slo_span[1] += drop_amt
+                            slo_span[2] += 1
+                        else:
+                            ob.emit(t_i, "slo_drop_end",
+                                    ticks=slo_span[2], dropped=slo_span[1])
+                            slo_span = None
             if carry is not None:
                 carry = out.forwarded
             if self.balancer is not None:
@@ -717,6 +766,8 @@ class SimEngine:
                     telem.event(t_i, ev["kind"],
                                 **{k: v for k, v in ev.items()
                                    if k not in ("tick", "kind")})
+                    if ob is not None:
+                        ob.emit_event_dict(t_i, ev)
 
             win_busy += st.busy
             win_served += float(out.served.sum())
@@ -740,6 +791,12 @@ class SimEngine:
                     dropped_slo=float(st.dropped_slo),
                     dropped_fault=float(st.dropped_fault),
                     retried=float(st.retried))
+                if (ob is not None and ob.tracing
+                        and self.balancer is not None):
+                    w = self.balancer.weights(st.queue, prev_cap)
+                    ob.emit(t_i, "lb_split", subject=self.balancer.mode,
+                            mode=self.balancer.mode,
+                            weights=np.round(w, 6).tolist())
                 win_busy = np.zeros(A)
                 win_served = 0.0
                 win_ticks = 0
@@ -765,10 +822,28 @@ class SimEngine:
                            if cf is not None and cf.has_stuck else None))
                 ctl_busy = np.zeros(A)
                 ctl_ticks = 0
+                if ob is not None and ob.tracing and self.controller.actions:
+                    act = self.controller.actions[-1]
+                    if act.tick == t_i and act.guarded != guard_prev:
+                        if act.guarded:
+                            ob.emit(t_i, "dfs_guard",
+                                    subject=",".join(act.guarded),
+                                    islands=list(act.guarded),
+                                    requested={i: act.requested[i]
+                                               for i in act.guarded})
+                        guard_prev = act.guarded
                 if new_cfg is not None:
                     cur_cfg = new_cfg
                     svc = self._service(cur_cfg,
                                         rate_override=applied_stuck)
+                    if ocap is not None:
+                        # the new rates take effect at the NEXT tick
+                        ocap.on_service(t_i + 1, svc)
+                        ob.emit(t_i, "dfs_commit",
+                                subject=f"v{new_cfg.version}",
+                                version=new_cfg.version,
+                                rates={i.name: i.rate
+                                       for i in new_cfg.islands})
                     telem.event(t_i, "dfs_commit",
                                 version=new_cfg.version,
                                 rates={i.name: i.rate
@@ -787,6 +862,19 @@ class SimEngine:
                      else float((served_hist
                                  * self._compiled_flows.exit_mask).sum()))
         offered = float(arrivals.sum())
+        if ocap is not None:
+            # lazy: the vectorized reconstruction runs on the first
+            # observer.counters read, not inside the engine's wall clock
+            ob.attach_lazy(lambda: ocap.finalize(admitted_hist, served_hist,
+                                                 qdrop_hist))
+            if slo_span is not None:        # span still open at run end
+                ob.emit(max(T - 1, 0), "slo_drop_end",
+                        ticks=slo_span[2], dropped=slo_span[1])
+            ob.emit(max(T - 1, 0), "run_end", subject="sequential",
+                    completed=completed, offered=offered,
+                    dropped=float(st.dropped),
+                    swaps=(self.controller.actuator.swaps - swaps0
+                           if self.controller is not None else 0))
         p50, p99 = latency_percentiles(admitted_hist, served_hist, dt,
                                        queue_drops=qdrop_hist)
         sim_seconds = T * dt

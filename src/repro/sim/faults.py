@@ -250,7 +250,18 @@ def compile_faults(schedule: FaultSchedule, *, ticks: int,
 
     def mark(tick, kind, **payload):
         if 0 <= tick < T:
-            events.append({"tick": int(tick), "kind": kind, **payload})
+            # a stable human-readable subject (tile list / island / link
+            # endpoints) so the events map 1:1 onto observe.TraceEvent
+            if "tiles" in payload:
+                subject = ",".join(str(t) for t in payload["tiles"])
+            elif "island" in payload:
+                subject = str(payload["island"])
+            elif "a" in payload and "b" in payload:
+                subject = f"{payload['a']}-{payload['b']}"
+            else:
+                subject = ""
+            events.append({"tick": int(tick), "kind": kind,
+                           "subject": subject, **payload})
 
     def kill_tiles(tiles, s, e, domain):
         cols = [name_idx[t] for t in tiles]

@@ -16,6 +16,22 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 
+def _json_safe(obj):
+    """Recursively convert NumPy scalars/arrays (and tuples/sets) into
+    plain JSON-serializable Python values.  Event payloads routinely carry
+    ``np.float64``/``np.int64`` leaves (island rates, drop totals), which
+    ``json.dumps`` rejects — every export path routes through this."""
+    if isinstance(obj, dict):
+        return {str(k): _json_safe(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple, set)):
+        return [_json_safe(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return _json_safe(obj.tolist())
+    if isinstance(obj, np.generic):        # np.float64, np.int64, np.bool_
+        return obj.item()
+    return obj
+
+
 class RingBuffer:
     """Fixed-capacity append-only buffer of fixed-shape float rows.
 
@@ -131,7 +147,7 @@ class Telemetry:
             "island_rates": self.island_rates.array().tolist(),
             "queue_depth": self.queue_depth.array().tolist(),
             "busy": self.busy.array().tolist(),
-            "events": self.events,
+            "events": _json_safe(self.events),
             "rows_recorded": self.scalars.total_appended,
         }
 
@@ -233,7 +249,7 @@ class BatchTelemetry:
             "island_rates": self.island_rates.array().tolist(),
             "queue_depth": self.queue_depth.array().tolist(),
             "busy": self.busy.array().tolist(),
-            "events": self.events,
+            "events": _json_safe(self.events),
             "rows_recorded": self.scalars.total_appended,
         }
 

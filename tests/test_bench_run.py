@@ -43,6 +43,7 @@ def test_check_out_target_accepts_missing_empty_and_own(tmp_path):
 
 @pytest.mark.parametrize("content", [
     json.dumps({"ticks": 400, "runs": {"sequential": {}}}),  # BENCH_* doc
+    json.dumps({"walls": {}, "gate": {"pass": True}}),       # BENCH_observe
     json.dumps([{"name": "x"}]),                             # partial rows
     "not json at all",
 ])
@@ -53,6 +54,29 @@ def test_check_out_target_refuses_foreign_schema(tmp_path, content):
         check_out_target(str(target))
     check_out_target(str(target), force=True)           # --force overrides
     assert target.read_text() == content                # check never writes
+
+
+def test_bench_observe_document_schema():
+    """The committed BENCH_observe.json must carry the overhead-gate
+    contract CI asserts on: per-engine walls and overheads, a gate block
+    naming the gated engines with a passing verdict, and the metrics
+    round-trip flag.  Catches schema drift between the benchmark and the
+    CI step that parses it."""
+    path = os.path.join(os.path.dirname(__file__), "..",
+                        "BENCH_observe.json")
+    with open(path) as f:
+        doc = json.load(f)
+    assert not is_row_list(doc)          # keyed document, not a row list
+    gate = doc["gate"]
+    assert set(gate["gated_engines"]) == {"batch_numpy", "batch_jax"}
+    assert gate["max_overhead"] == pytest.approx(0.05)
+    assert gate["pass"] is True
+    for eng in gate["gated_engines"]:
+        assert gate["counters_overhead"][eng] <= gate["max_overhead"]
+        walls = doc["walls"][eng]
+        assert {"off", "counters", "full"} <= set(walls)
+        assert all(w > 0.0 for w in walls.values())
+    assert doc["metrics_roundtrip_ok"] is True
 
 
 def test_main_fails_fast_before_running_benchmarks(tmp_path):

@@ -16,10 +16,11 @@ import numpy as np
 import pytest
 
 from repro.configs import get_config
-from repro.core import (DFSActuator, charge, charge_boundary, default_islands,
-                        default_plan, init_counters, manual_reset)
+from repro.core import (DFSActuator, MonitorClient, charge, charge_boundary,
+                        default_islands, default_plan, init_counters,
+                        manual_reset)
 from repro.core.dfs import DEFAULT_HISTORY_MAXLEN
-from repro.core.monitor import PKT_BYTES
+from repro.core.monitor import PKT_BYTES, MonitorSample
 from repro.core.tiles import TilePlan, TileSpec
 
 
@@ -175,3 +176,55 @@ def test_concurrent_commit_swap_atomicity():
     assert not errors
     assert act.swaps <= 900
     assert len(act.history()) <= DEFAULT_HISTORY_MAXLEN
+
+# -------------------------------------------------------- monitor client
+def test_monitor_client_sample_history_is_bounded():
+    """Long soaks must not grow the sample history without limit — the
+    deque keeps only the newest ``max_samples`` reads (the same fix
+    ``ActuatorState.history`` got)."""
+    mc = MonitorClient(max_samples=16)
+    c = init_counters(make_plan())
+    for step in range(50):
+        c = charge(c, "attn", pkts_in=1.0)
+        mc.read(c, step)
+    assert len(mc.samples) == 16
+    assert mc.samples[0].step == 34 and mc.samples[-1].step == 49
+    # rates() differentiates only the retained window
+    pts = mc.rates("attn", "pkts_in")
+    assert len(pts) <= 15 and all(s >= 35 for s, _ in pts)
+
+
+def test_monitor_client_rates_differentiates_consecutive_reads():
+    mc = MonitorClient()
+    rows = [({"attn": {"pkts_in": 100.0}}, 0, 0.0),
+            ({"attn": {"pkts_in": 160.0}}, 10, 2.0),
+            ({"attn": {"pkts_in": 160.0}}, 20, 2.0),   # dt == 0: skipped
+            ({"attn": {"pkts_in": 190.0}}, 30, 5.0)]
+    for counters, step, wall in rows:
+        mc.samples.append(MonitorSample(step=step, wall_time=wall,
+                                        counters=counters))
+    assert mc.rates("attn") == [(10, 30.0), (30, 10.0)]
+    assert mc.rates("attn", "pkts_out") == [(10, 0.0), (30, 0.0)]
+
+
+def test_monitor_client_table_layout_is_memoized():
+    """The column layout recomputes only when the tile/kind set changes —
+    not per render — and the rendered table tracks the newest sample."""
+    mc = MonitorClient()
+    c = init_counters(make_plan())
+    mc.read(charge(c, "attn", pkts_in=2.0), 0)
+    first = mc.table()
+    layout = mc._layout
+    mc.read(charge(c, "attn", pkts_in=7.0), 1)
+    second = mc.table()
+    assert mc._layout is layout         # same key -> cached layout object
+    assert first != second and "step 1" in second
+    # a changed counter set invalidates the memo
+    mc.read({"attn": {"pkts_in": 1.0}, "extra": {"rtt": 0.5}}, 2)
+    mc.table()
+    assert mc._layout is not layout
+    assert [t for t, _ in mc._layout] == ["attn", "extra"]
+
+
+def test_monitor_client_empty_table():
+    assert MonitorClient().table() == "(no samples)"

@@ -5,13 +5,20 @@ through plain ``json.loads``, exactly the arrays the recorder holds —
 and each design's slice of the parsed document must equal the
 ``design(b)`` view the differential tests compare against (and, at B=1,
 the sequential recorder's own export).
+
+Plus the PR 7 satellites: ``_json_safe`` on numpy-laden event payloads,
+``weighted_percentiles`` edge cases, and ``RingBuffer`` wraparound with
+multi-axis (``(B, width)``) rows.
 """
 import json
 
 import numpy as np
+import pytest
 
 from repro.sim import (BatchSimEngine, BatchSimPlatform, SimConfig,
                        SimEngine, SimPlatform, Telemetry, diurnal_trace)
+from repro.sim.telemetry import (RingBuffer, _json_safe,
+                                 weighted_percentiles)
 from repro.core.perfmodel import AccelWorkload, SoCPerfModel
 
 
@@ -101,3 +108,134 @@ def test_batch_b1_export_matches_sequential_export():
             np.asarray(bdoc["scalars"][name])[:, 0],
             np.asarray(sdoc["scalars"][name]), err_msg=name)
     assert bdoc["rows_recorded"] == sdoc["rows_recorded"]
+
+
+# ------------------------------------------------------------- _json_safe
+
+
+def test_json_safe_strips_numpy_leaves():
+    """Event payloads carry np scalars/arrays/tuples/sets — every leaf
+    must come out as a plain Python value ``json.dumps`` accepts."""
+    payload = {
+        "rate": np.float64(0.75),
+        "count": np.int64(3),
+        "flag": np.bool_(True),
+        "rates": np.asarray([0.5, 1.0]),
+        "grid": np.arange(4).reshape(2, 2),
+        "mixed": (np.float32(1.5), [np.int32(2), {"k": np.float64(0.1)}]),
+        "names": {"a"},                 # sets become lists
+        1: "int key",                   # keys stringify
+    }
+    safe = _json_safe(payload)
+    out = json.loads(json.dumps(safe))  # must not raise
+    assert out["rate"] == 0.75 and out["count"] == 3
+    assert out["flag"] is True
+    assert out["rates"] == [0.5, 1.0]
+    assert out["grid"] == [[0, 1], [2, 3]]
+    assert out["mixed"] == [1.5, [2, {"k": 0.1}]]
+    assert out["names"] == ["a"]
+    assert out["1"] == "int key"
+    assert type(safe["rate"]) is float and type(safe["count"]) is int
+
+
+def test_telemetry_event_export_survives_numpy_payloads():
+    """``Telemetry.to_json`` must serialize events whose payloads carry
+    numpy values (island rate vectors, np.float64 totals)."""
+    t = Telemetry.__new__(Telemetry)    # schema-free shell is enough
+    t.events = []
+    t.events.append({"tick": np.int64(25), "kind": "commit",
+                     "rates": np.asarray([0.5, 1.0])})
+    doc = _json_safe({"events": t.events})
+    back = json.loads(json.dumps(doc))
+    assert back["events"][0] == {"tick": 25, "kind": "commit",
+                                 "rates": [0.5, 1.0]}
+
+
+# -------------------------------------------------- weighted_percentiles
+
+
+def test_weighted_percentiles_zero_weights_and_empty():
+    nan3 = weighted_percentiles([], [], (50.0, 99.0))
+    assert nan3.shape == (2,) and np.isnan(nan3).all()
+    # all-zero weights reduce to the empty sample, not a 0/0
+    out = weighted_percentiles([1.0, 2.0], [0.0, 0.0], (50.0,))
+    assert np.isnan(out).all()
+
+
+def test_weighted_percentiles_single_bin_and_extremes():
+    out = weighted_percentiles([3.5], [10.0], (0.0, 50.0, 100.0))
+    assert (out == 3.5).all()
+    # q=0 lands on the smallest value, q=100 on the largest
+    v, w = [1.0, 2.0, 3.0], [1.0, 1.0, 1.0]
+    lo, hi = weighted_percentiles(v, w, (0.0, 100.0))
+    assert lo == 1.0 and hi == 3.0
+
+
+def test_weighted_percentiles_mass_concentration_and_order():
+    """Weights are request counts: a bin holding 99% of the mass owns the
+    p50; input order must not matter (stable sort on values)."""
+    v = np.asarray([0.010, 0.001, 0.005])
+    w = np.asarray([1.0, 98.0, 1.0])
+    p50, p99 = weighted_percentiles(v, w, (50.0, 99.0))
+    assert p50 == 0.001 and p99 == 0.005
+    p50s, p99s = weighted_percentiles(np.sort(v), w[np.argsort(v)],
+                                      (50.0, 99.0))
+    assert p50 == p50s and p99 == p99s
+    # zero-weight bins are dropped before percentile selection
+    p99z = weighted_percentiles(np.append(v, 9.9), np.append(w, 0.0),
+                                (99.0,))[0]
+    assert p99z == 0.005
+
+
+def test_weighted_percentiles_matches_expanded_sample():
+    """Against the brute-force definition: expand each bin into ``w``
+    copies and take the rank statistic directly."""
+    rng = np.random.default_rng(3)
+    v = rng.uniform(0.001, 0.1, size=40)
+    w = rng.integers(1, 20, size=40).astype(float)
+    expanded = np.sort(np.repeat(v, w.astype(int)))
+    for q in (50.0, 90.0, 99.0):
+        got = weighted_percentiles(v, w, (q,))[0]
+        idx = int(np.ceil(q / 100.0 * expanded.size)) - 1
+        assert got == expanded[max(idx, 0)]
+
+
+# ------------------------------------------------------------- RingBuffer
+
+
+def test_ringbuffer_multi_axis_rows_wraparound():
+    """(B, width) rows — the batched telemetry shape — must wrap exactly
+    like scalar-lead rows: retained window, oldest first, each row
+    intact."""
+    rb = RingBuffer(5, (3, 2))
+    assert rb.row_shape == (3, 2) and rb.width == 2
+    rows = [np.full((3, 2), float(i)) for i in range(12)]
+    for r in rows:
+        rb.append(r)
+    assert len(rb) == 5 and rb.total_appended == 12
+    got = rb.array()
+    assert got.shape == (5, 3, 2)
+    np.testing.assert_array_equal(got, np.stack(rows[7:]))
+    np.testing.assert_array_equal(rb.last(), rows[-1])
+    # array() copies out of the ring: mutating the copy can't corrupt it
+    got[:] = -1.0
+    np.testing.assert_array_equal(rb.array(), np.stack(rows[7:]))
+
+
+def test_ringbuffer_exact_capacity_boundary():
+    rb = RingBuffer(4, (2, 3))
+    for i in range(4):
+        rb.append(np.full((2, 3), float(i)))
+    assert len(rb) == 4
+    np.testing.assert_array_equal(rb.array()[:, 0, 0],
+                                  np.asarray([0.0, 1.0, 2.0, 3.0]))
+    rb.append(np.full((2, 3), 4.0))     # first overwrite
+    np.testing.assert_array_equal(rb.array()[:, 0, 0],
+                                  np.asarray([1.0, 2.0, 3.0, 4.0]))
+
+
+def test_ringbuffer_rejects_degenerate_shapes():
+    with pytest.raises(AssertionError):
+        RingBuffer(0, 3)
+    with pytest.raises(AssertionError):
+        RingBuffer(4, (2, 0))
