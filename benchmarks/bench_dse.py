@@ -107,25 +107,25 @@ def soc_dse_batch():
     except Exception as e:                                # pragma: no cover
         jax_stats = {"error": repr(e)}
 
-    with open(BENCH_JSON, "w") as f:
-        json.dump({
-            "points": len(res),
-            "valid_points": res.n_valid,
-            "sweep_seconds": sweep_s,
-            "points_per_sec": len(res) / sweep_s,
-            "pareto_seconds": pareto_s,
-            "pareto_size": int(front.shape[0]),
-            "parity_max_rel_err": parity,
-            "backend": res.backend,
-            "jax": jax_stats,
-            "best": {"replication": best.replication,
-                     "rates": best.rates,
-                     "placement": {k: list(v)
-                                   for k, v in best.placement.items()},
-                     "throughput": best.throughput,
-                     "area": best.area,
-                     "energy_per_unit": best.energy_per_unit},
-        }, f, indent=2)
+    from benchmarks.run import append_bench_row
+    append_bench_row(BENCH_JSON, {
+        "points": len(res),
+        "valid_points": res.n_valid,
+        "sweep_seconds": sweep_s,
+        "points_per_sec": len(res) / sweep_s,
+        "pareto_seconds": pareto_s,
+        "pareto_size": int(front.shape[0]),
+        "parity_max_rel_err": parity,
+        "backend": res.backend,
+        "jax": jax_stats,
+        "best": {"replication": best.replication,
+                 "rates": best.rates,
+                 "placement": {k: list(v)
+                               for k, v in best.placement.items()},
+                 "throughput": best.throughput,
+                 "area": best.area,
+                 "energy_per_unit": best.energy_per_unit},
+    })
     return rows
 
 
@@ -133,8 +133,8 @@ def soc_dse_islands():
     """Independent-islands chunked/streaming sweep: one rate axis per
     accelerator island (paper C2), ~2e7 joint points evaluated in
     fixed-size blocks with a running Pareto/top-k merge.  Reports
-    points/second + peak tracked block bytes, folded into
-    ``BENCH_dse.json`` (written by :func:`soc_dse_batch` just before)."""
+    points/second + peak tracked block bytes, amended into the trajectory
+    row :func:`soc_dse_batch` just appended to ``BENCH_dse.json``."""
     m = SoCPerfModel()
     wls = [AccelWorkload(n, *CHSTONE[n])
            for n in ("dfadd", "dfmul", "dfsin")]
@@ -178,14 +178,8 @@ def soc_dse_islands():
                                for k, v in best.placement.items()},
                  "throughput": best.throughput},
     }
-    try:
-        with open(BENCH_JSON) as f:
-            doc = json.load(f)
-    except Exception:                                  # pragma: no cover
-        doc = {}
-    doc["islands_independent_chunked"] = stats
-    with open(BENCH_JSON, "w") as f:
-        json.dump(doc, f, indent=2)
+    from benchmarks.run import amend_latest_row
+    amend_latest_row(BENCH_JSON, {"islands_independent_chunked": stats})
 
     return [("dse_islands_chunked", sweep_s * 1e6,
              f"points={len(res)} pps={len(res) / sweep_s:,.0f} "

@@ -168,8 +168,8 @@ def bench_observe():
         "metrics_roundtrip_ok": roundtrip,
         "profiler": get_profiler().summary(),
     }
-    with open(BENCH_JSON, "w") as f:
-        json.dump(doc, f, indent=2)
+    from benchmarks.run import append_bench_row
+    append_bench_row(BENCH_JSON, doc)
 
     if not roundtrip:
         raise RuntimeError("Prometheus round-trip failed")

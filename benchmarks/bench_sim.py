@@ -90,17 +90,17 @@ def bench_sim():
         stats[name]["energy_saving_vs_fixed"] = (
             1.0 - stats[name]["energy_per_request_j"] / base)
 
-    with open(BENCH_JSON, "w") as f:
-        json.dump({
-            "n_requests": N_REQUESTS,
-            "ticks": TICKS,
-            "dt": DT,
-            "n_tiles": plat.n_tiles,
-            "capacity_rps_total": float(cap.sum()),
-            "mean_utilization": float(
-                trace.offered_rps / cap.sum()),
-            "runs": stats,
-        }, f, indent=2)
+    from benchmarks.run import append_bench_row
+    append_bench_row(BENCH_JSON, {
+        "n_requests": N_REQUESTS,
+        "ticks": TICKS,
+        "dt": DT,
+        "n_tiles": plat.n_tiles,
+        "capacity_rps_total": float(cap.sum()),
+        "mean_utilization": float(
+            trace.offered_rps / cap.sum()),
+        "runs": stats,
+    })
     return rows
 
 

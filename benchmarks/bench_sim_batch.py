@@ -92,10 +92,10 @@ def bench_sim_batch():
     # The heterogeneous (B, I) rate plumbing must not regress the batched
     # replay: guarded against this run's own shared-rate B=512 rate and
     # against the previously recorded islands row (if any).
+    from benchmarks.run import latest_row
     try:
-        with open(BENCH_JSON) as f:
-            prev_islands = json.load(f)["runs"][
-                "batch_numpy_islands_512"]["survivors_per_sec"]
+        prev_islands = latest_row(BENCH_JSON)["runs"][
+            "batch_numpy_islands_512"]["survivors_per_sec"]
     except Exception:
         prev_islands = None
 
@@ -216,12 +216,43 @@ def bench_sim_batch():
         stats["batch_jax_512"] = {"error": repr(e)}
         rows.append(("sim_batch_jax_B512", 0.0, f"SKIPPED:{e!r}"))
 
-    with open(BENCH_JSON, "w") as f:
-        json.dump({
-            "ticks": TICKS, "dt": DT, "req_mb": REQ_MB,
-            "n_requests_per_design": float(trace.n_requests),
-            "runs": stats,
-        }, f, indent=2)
+    # Pallas fused-tick backend (interpret mode on CPU): a validation
+    # row, not a speed row — interpret mode runs the kernel body under
+    # the Pallas interpreter, so B is kept small and the interesting
+    # number is agreement with the numpy reference, which the engine's
+    # differential tests assert bit-tightly.
+    try:
+        PB = 64
+        idx = survivors[:PB]
+        bplat = BatchSimPlatform.from_design_points(m, res, idx,
+                                                    req_mb=REQ_MB)
+        ctl = BatchControllerHarness(bplat.islands, bplat.rates,
+                                     BatchPIDRatePolicy(target=0.7),
+                                     tile_names=bplat.names,
+                                     queue_guard_ticks=3.0)
+        eng = BatchSimEngine(bplat, config=SimConfig(control_interval=25),
+                             controller=ctl, backend="pallas")
+        t0 = time.perf_counter()
+        rp = eng.run(trace)
+        pallas_wall = time.perf_counter() - t0
+        stats["batch_pallas_64"] = {
+            "designs": PB, "wall_seconds": pallas_wall,
+            "survivors_per_sec": PB / pallas_wall,
+            "mode": "interpret",
+            "completed_total": float(np.sum(rp.completed))}
+        rows.append(("sim_batch_pallas_B64", pallas_wall / PB * 1e6,
+                     f"{PB / pallas_wall:,.1f} survivors/s "
+                     f"(fused tick kernel, interpret mode)"))
+    except Exception as e:  # pragma: no cover - pallas optional at bench
+        stats["batch_pallas_64"] = {"error": repr(e)}
+        rows.append(("sim_batch_pallas_B64", 0.0, f"SKIPPED:{e!r}"))
+
+    from benchmarks.run import append_bench_row
+    append_bench_row(BENCH_JSON, {
+        "ticks": TICKS, "dt": DT, "req_mb": REQ_MB,
+        "n_requests_per_design": float(trace.n_requests),
+        "runs": stats,
+    })
     return rows
 
 

@@ -125,10 +125,10 @@ def bench_sim_faults():
                  f"detect={detect_ticks} ticks "
                  f"backlog_clear={clear_ticks} ticks after revive"))
 
-    with open(BENCH_JSON, "w") as f:
-        json.dump({"ticks": TICKS, "dt": DT, "kill_window": list(KILL),
-                   "deadline_s": recover.deadline_s, "runs": runs},
-                  f, indent=2)
+    from benchmarks.run import append_bench_row
+    append_bench_row(BENCH_JSON,
+                     {"ticks": TICKS, "dt": DT, "kill_window": list(KILL),
+                      "deadline_s": recover.deadline_s, "runs": runs})
     return rows
 
 

@@ -10,15 +10,26 @@ measured value.
 ``--out`` refuses to overwrite an existing file whose JSON schema it
 does not recognize (anything that is not a row list) — the trajectory
 files the individual benchmarks own (``BENCH_dse.json``,
-``BENCH_sim.json``, ``BENCH_sim_batch.json``, ``BENCH_observe.json``)
-are keyed documents, and a
-mistyped ``--out BENCH_dse.json`` used to silently clobber them.  Pass
-``--force`` to overwrite anyway.
+``BENCH_sim.json``, ``BENCH_sim_batch.json``, ``BENCH_sim_faults.json``,
+``BENCH_observe.json``, ``BENCH_shard.json``) carry a different row
+schema, and a mistyped ``--out BENCH_dse.json`` used to silently clobber
+them.  Pass ``--force`` to overwrite anyway.
+
+**Trajectory files**: each ``BENCH_*.json`` is a JSON *list* of
+timestamped snapshot rows (newest last) — one row appended per benchmark
+run via :func:`append_bench_row` — so the perf trajectory accretes
+across PRs instead of being overwritten.  Each benchmark used to write a
+single bare snapshot dict, so every run *replaced* the previous numbers
+and the "trajectory tracked across PRs" the docstrings promised never
+existed; :func:`load_trajectory` still reads those legacy single-dict
+documents as one-row trajectories, and regression guards compare against
+:func:`latest_row`.
 """
 import argparse
 import json
 import os
 import sys
+from datetime import datetime, timezone
 
 # `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
 # sys.path; add the root so `from benchmarks import ...` resolves both
@@ -38,14 +49,80 @@ def is_row_list(doc) -> bool:
                     for r in doc))
 
 
+def load_trajectory(path):
+    """Read a ``BENCH_*.json`` trajectory as a list of snapshot rows.
+
+    Missing/empty/corrupt files read as an empty trajectory; a legacy
+    bare-dict snapshot (the pre-trajectory schema) reads as a one-row
+    trajectory so old committed files keep their history when the next
+    run appends to them.
+    """
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError):
+        return []
+    if isinstance(doc, dict):
+        return [doc]
+    if isinstance(doc, list):
+        return [r for r in doc if isinstance(r, dict)]
+    return []
+
+
+def latest_row(path):
+    """The most recent snapshot row of a trajectory file (or ``None``).
+
+    Regression guards compare against this instead of ``json.load``-ing
+    the file as a dict — the read that silently broke once the files
+    became row lists.
+    """
+    rows = load_trajectory(path)
+    return rows[-1] if rows else None
+
+
+def append_bench_row(path, snapshot):
+    """Append one snapshot row (stamped ``recorded_utc``) to ``path``.
+
+    Returns the full trajectory after the append.  This is the only
+    writer the individual benchmarks use — replacing the ``json.dump``
+    of a bare dict that used to overwrite the whole history each run.
+    """
+    rows = load_trajectory(path)
+    row = dict(snapshot)
+    row.setdefault("recorded_utc",
+                   datetime.now(timezone.utc).isoformat(timespec="seconds"))
+    rows.append(row)
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=2)
+        f.write("\n")
+    return rows
+
+
+def amend_latest_row(path, extra):
+    """Merge ``extra`` keys into the newest row of a trajectory file.
+
+    For multi-part benchmarks (``bench_dse``) whose later sections fold
+    stats into the snapshot the earlier section just appended — an amend
+    of the current run's row, never a new row.
+    """
+    rows = load_trajectory(path)
+    assert rows, f"amend_latest_row({path!r}): no trajectory to amend"
+    rows[-1].update(extra)
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=2)
+        f.write("\n")
+    return rows
+
+
 def check_out_target(path, *, force: bool = False) -> None:
     """Refuse to clobber an existing ``--out`` file we did not write.
 
     A missing file, an empty file, or a previous row-list emission are
-    fine; any other schema (e.g. the keyed ``BENCH_*.json`` trajectory
-    documents, which individual benchmarks own) raises ``SystemExit``
-    unless ``force``.  Runs BEFORE the benchmarks so a bad target fails
-    in milliseconds, not after minutes of measurement.
+    fine; any other schema (e.g. the ``BENCH_*.json`` trajectory files,
+    whose snapshot rows carry benchmark-specific keys rather than exactly
+    ``ROW_KEYS``) raises ``SystemExit`` unless ``force``.  Runs BEFORE
+    the benchmarks so a bad target fails in milliseconds, not after
+    minutes of measurement.
     """
     if force or path is None or not os.path.exists(path):
         return
@@ -78,7 +155,8 @@ def main(argv=None) -> None:
 
     from benchmarks import (bench_contention, bench_dfs_traffic, bench_dse,
                             bench_kernels, bench_observe, bench_replication,
-                            bench_sim, bench_sim_batch, bench_sim_faults)
+                            bench_shard, bench_sim, bench_sim_batch,
+                            bench_sim_faults)
     mods = [("replication(TableI)", bench_replication),
             ("contention(Fig3)", bench_contention),
             ("dfs_traffic(Fig4)", bench_dfs_traffic),
@@ -87,6 +165,7 @@ def main(argv=None) -> None:
             ("sim_batch(multi-design)", bench_sim_batch),
             ("sim_faults(robustness)", bench_sim_faults),
             ("observe(monitoring)", bench_observe),
+            ("shard(multi-device)", bench_shard),
             ("kernels", bench_kernels)]
     rows = []
     failures = 0

@@ -301,6 +301,100 @@ class BatchPIDRatePolicy:
         return out
 
 
+# Custom batch policies on the FAST backends: any object implementing the
+# ``jax_step`` protocol below is lowered straight into the ``lax.scan``
+# carry / Pallas kernel scratch by ``BatchSimEngine._jax_control`` — the
+# fast path is no longer limited to the membound/PID pair.
+#
+#   jax_state(B, I) -> tuple of B-leading 2-D state arrays (the carry)
+#   jax_step(rates, obs, state) -> (req, new_state)
+#       rates: (B, I) live island rates;
+#       obs: {"util","boundness","queue_ticks"} island-aggregated (B, I);
+#       req: (B, I) with NaN = "no request" (the BatchPolicy contract);
+#       state advance is committed only on control ticks by the caller.
+#   jax_sync(state)       optional: write evolved state back post-run
+#   jax_cache_key()       optional: hashable tuning digest (jit cache key)
+#   skip_islands(topo)    optional: (I,) bool mask of never-touched islands
+#
+# jax_step runs inside jit/pallas: jnp ops only, no captured jnp array
+# constants (scalars and the passed-in arrays are fine).
+
+
+class BatchEWMAUtilizationPolicy:
+    """Utilization-tracking proportional policy with EWMA smoothing —
+    the reference implementation of the ``jax_step`` protocol.
+
+    Each control tick the island's smoothed utilization ``ewma`` pulls
+    the rate toward ``rates * ewma / target`` (busy islands speed up,
+    idle islands slow down), clipped to ``[min_rate, 1]``.  State is the
+    (B, I) EWMA plus a (B, 1) "seeded" flag (the first sample primes the
+    EWMA instead of decaying from zero).  The numpy ``__call__`` and the
+    ``jax_step`` lowering share the same arithmetic, so the scan/Pallas
+    backends reproduce the numpy engine within float32 rounding
+    (differential-tested)."""
+
+    def __init__(self, *, alpha: float = 0.3, target: float = 0.7,
+                 min_rate: float = 0.2):
+        assert 0.0 < alpha <= 1.0 and 0.0 < target <= 1.0
+        self.alpha = alpha
+        self.target = target
+        self.min_rate = min_rate
+        self._ewma: Optional[np.ndarray] = None              # (B, I)
+
+    def reset(self) -> None:
+        self._ewma = None
+
+    def _skip(self, fixed, counts, names) -> np.ndarray:
+        return (np.asarray(fixed) | (np.asarray(counts) == 0)
+                | (np.asarray(names) == "noc_mem"))
+
+    # ---- numpy path (BatchControllerHarness)
+    def __call__(self, rates: np.ndarray, sample) -> np.ndarray:
+        rates = np.asarray(rates, dtype=np.float64)
+        skip = self._skip(sample.fixed, sample.counts,
+                          sample.island_names)
+        util = np.where(skip, 0.0,
+                        np.nan_to_num(sample.island_mean(sample.busy)))
+        if self._ewma is None:
+            ewma = util
+        else:
+            ewma = self.alpha * util + (1.0 - self.alpha) * self._ewma
+        self._ewma = ewma
+        out = np.clip(rates * (ewma / self.target), self.min_rate, 1.0)
+        out[:, skip] = np.nan
+        return out
+
+    # ---- jax path (scan carry / pallas scratch)
+    def skip_islands(self, topo) -> np.ndarray:
+        return self._skip(topo.fixed, topo.counts, topo.names)
+
+    def jax_state(self, B: int, I: int):
+        if self._ewma is not None:
+            return (np.asarray(self._ewma, dtype=np.float64),
+                    np.ones((B, 1), dtype=bool))
+        return (np.zeros((B, I)), np.zeros((B, 1), dtype=bool))
+
+    def jax_step(self, rates, obs, state):
+        import jax.numpy as jnp
+        ewma_prev, has = state
+        util = obs["util"]
+        ewma = jnp.where(has,
+                         self.alpha * util
+                         + (1.0 - self.alpha) * ewma_prev,
+                         util)
+        req = jnp.clip(rates * (ewma / self.target), self.min_rate, 1.0)
+        return req, (ewma, has | jnp.ones_like(has))
+
+    def jax_sync(self, state) -> None:
+        ewma, has = state
+        if np.any(has):
+            self._ewma = np.asarray(ewma, dtype=np.float64)
+
+    def jax_cache_key(self):
+        return (type(self).__qualname__, self.alpha, self.target,
+                self.min_rate)
+
+
 def policy_energy_per_token_sweep(
         islands: IslandConfig,
         perf_eval_batch: Callable[[Dict[str, np.ndarray]],

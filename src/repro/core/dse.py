@@ -35,13 +35,16 @@ import itertools
 import time
 from bisect import bisect_right
 from dataclasses import dataclass, field
+from functools import lru_cache
 from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.islands import IslandConfig, NOC_LADDER, TILE_LADDER
 from repro.core.noc import pos_index
-from repro.core.perfmodel import AccelWorkload, SoCPerfModel, chip_power
+from repro.core.perfmodel import (AccelWorkload, SoCPerfModel, chip_power,
+                                  _memory_traffic_math_per_accel,
+                                  _throughput_math)
 from repro.core.replication import (replication_area_model,
                                     replication_throughput_model)
 from repro.core.tiles import TilePlan
@@ -547,6 +550,118 @@ def _eval_grid(model: SoCPerfModel, workloads, n_tg: int, backend: str,
             "valid": valid}
 
 
+# bounded: one executable per (device count, model constants) combination
+# actually swept in this process — keyed on scalars only, never arrays
+@lru_cache(maxsize=8)
+def _flat_point_evaluator(n_devices: int, A: int, n_tg: int,
+                          base_wire: Tuple[Tuple[float, float], ...],
+                          own_demand: float, tg_demand: float,
+                          link_bw: float, hop_latency_share: float,
+                          ref_hops: float, mem_service: float,
+                          tg_demand_fig4: float):
+    """jit-compiled (and, for ``n_devices > 1``, ``shard_map``-sharded)
+    evaluator of the three float objectives over a flat (P,) point axis.
+
+    The math is the same fixed-order accel loop as :func:`_eval_grid`
+    (``_throughput_math`` / ``chip_power`` / the per-accel Fig.-4 memory
+    model), expressed in jax so the point axis can be partitioned across
+    devices.  Sharding only splits an elementwise computation, so every
+    device count produces identical floats — tested 1-vs-N in
+    ``tests/test_shard_pallas.py``.  Runs at jax default precision (f32),
+    so results deviate ~1e-6 relative from the numpy f64 path, which
+    stays the ground truth for ``devices=None``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    from repro import compat
+    from repro import shard as shard_mod
+    from jax.sharding import PartitionSpec
+
+    def fn(kA, faA, hopA, f_noc, f_tg):
+        thr = jnp.zeros_like(f_noc)
+        for a, (base, wire) in enumerate(base_wire):
+            thr = thr + _throughput_math(
+                jnp, base, wire, kA[a], faA[a], f_noc, f_tg, n_tg, hopA[a],
+                own_demand=own_demand, tg_demand=tg_demand, link_bw=link_bw,
+                hop_latency_share=hop_latency_share, ref_hops=ref_hops)
+        pw = chip_power(faA[0], busy=1.0)
+        for a in range(1, A):
+            pw = pw + chip_power(faA[a], busy=1.0)
+        power = pw / float(A) + 0.3 * chip_power(f_noc, busy=1.0)
+        energy = power / jnp.maximum(thr, 1e-9)
+        mem = _memory_traffic_math_per_accel(
+            jnp, [faA[a] for a in range(A)], f_noc, f_tg, n_tg,
+            mem_service=mem_service, tg_demand_fig4=tg_demand_fig4)
+        return thr, energy, mem
+
+    if n_devices <= 1:
+        return jax.jit(fn)
+    mesh = shard_mod.device_mesh(n_devices, "points")
+    s2 = PartitionSpec(None, "points")
+    s1 = PartitionSpec("points")
+    return jax.jit(compat.shard_map(
+        fn, mesh=mesh, in_specs=(s2, s2, s2, s1, s1),
+        out_specs=(s1, s1, s1), check_vma=False))
+
+
+def _eval_flat_points(model: SoCPerfModel, workloads, n_tg: int,
+                      lay: _AxisLayout, vals: Dict[str, object],
+                      shape: Tuple[int, ...], lo: int, hi: int,
+                      n_devices: int) -> Dict[str, np.ndarray]:
+    """Evaluate global flat points ``[lo, hi)`` as flat (P,) arrays.
+
+    The per-point axis gathers, the area sum and the placement-validity
+    mask stay host-side (cheap integer work, bit-identical regardless of
+    device count); the float objective math runs through the sharded
+    :func:`_flat_point_evaluator`.  The point axis is padded to a device
+    multiple (padded lanes replicate point 0 and are sliced off).
+    """
+    from repro import shard as shard_mod
+
+    coords = np.unravel_index(np.arange(lo, hi), shape)
+    A = lay.A
+    P = hi - lo
+    kA = np.stack([np.asarray(vals["k"])[coords[lay.k(a)]]
+                   for a in range(A)])
+    faA = np.stack([np.asarray(vals["acc"][a])[coords[lay.fa(a)]]
+                    for a in range(A)])
+    posA = np.stack([np.asarray(vals["pos"])[coords[lay.pos(a)]]
+                     for a in range(A)])
+    hopA = np.stack([model.hop_counts(pos_idx=posA[a])
+                     for a in range(A)]).astype(np.float64)
+    f_noc = np.asarray(vals["noc"])[coords[lay.fnoc]]
+    f_tg = np.asarray(vals["tg"])[coords[lay.ftg]]
+
+    area = np.zeros(P, dtype=np.float64)
+    for a in range(A):
+        area += np.asarray(vals["area"])[coords[lay.k(a)]]
+    valid = np.ones(P, dtype=bool)
+    for a in range(A):
+        for b in range(a + 1, A):
+            valid &= posA[a] != posA[b]
+
+    evaluator = _flat_point_evaluator(
+        int(n_devices), A, int(n_tg),
+        tuple((float(wl.base_mbps), float(wl.wire_share))
+              for wl in workloads),
+        float(model.own_demand), float(model.tg_demand),
+        float(model.noc.link_bw), float(model.hop_latency_share),
+        float(model._ref_hops()), float(model.mem_service),
+        float(model.tg_demand_fig4))
+
+    def pad(x: np.ndarray) -> np.ndarray:
+        return shard_mod.pad_axis(x, n_devices, axis=x.ndim - 1)
+
+    thr, energy, mem = evaluator(pad(kA), pad(faA), pad(hopA),
+                                 pad(f_noc), pad(f_tg))
+    return {"throughput": np.asarray(thr)[:P].astype(np.float64),
+            "area": area,
+            "energy_per_unit": np.asarray(energy)[:P].astype(np.float64),
+            "mem_traffic": np.asarray(mem)[:P].astype(np.float64),
+            "valid": valid}
+
+
 def _prepare_axes(model, workloads, ks, acc_rates, noc_rates, tg_rates,
                   positions, island_rates):
     """Axis bookkeeping shared by the one-shot and chunked paths."""
@@ -641,7 +756,8 @@ def grid_sweep(model: SoCPerfModel,
                backend: str = "numpy",
                island_rates: str = "shared",
                chunk_points: Optional[int] = None,
-               topk_track: int = 64):
+               topk_track: int = 64,
+               devices=None):
     """Batched cross-product sweep over the paper's design axes.
 
     ``workloads`` is one :class:`AccelWorkload` or a sequence for a *joint*
@@ -680,6 +796,17 @@ def grid_sweep(model: SoCPerfModel,
     bool mask) however large the full grid is, while indices stay globally
     addressable and Pareto front / top-k are identical to a one-shot
     sweep (tested).  Otherwise a dense :class:`SweepResult` is returned.
+
+    **Multi-device sharding**: ``devices=`` (``None`` / int / ``"auto"``,
+    see :func:`repro.shard.resolve_devices`) switches each block (or the
+    whole grid on the dense path) to a flat per-point jax evaluator whose
+    point axis is ``shard_map``-partitioned across devices.  Any device
+    count — including 1 — produces identical floats (sharding only splits
+    elementwise math); ``devices=None`` keeps the numpy float64 path as
+    the bit-for-bit ground truth, against which the jax float32 path
+    deviates ~1e-6 relative.  Multi-device CPU runs need
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before the
+    first jax import.
     """
     if isinstance(workloads, AccelWorkload):
         workloads = (workloads,)
@@ -691,11 +818,20 @@ def grid_sweep(model: SoCPerfModel,
     shape = tuple(len(v) for _, v in axes)
     n_points = int(np.prod([len(v) for _, v in axes], dtype=np.int64))
 
+    n_devices = 0
+    if devices is not None:
+        from repro import shard as shard_mod
+        n_devices = shard_mod.resolve_devices(devices)
+
     t0 = time.perf_counter()
     if chunk_points is None or n_points <= chunk_points:
-        get = lambda dim, v: _axis(v, dim, ndim)        # noqa: E731
-        out = _eval_grid(model, workloads, n_tg, backend, lay, vals, get,
-                         shape)
+        if n_devices:
+            out = _eval_flat_points(model, workloads, n_tg, lay, vals,
+                                    shape, 0, n_points, n_devices)
+        else:
+            get = lambda dim, v: _axis(v, dim, ndim)    # noqa: E731
+            out = _eval_grid(model, workloads, n_tg, backend, lay, vals,
+                             get, shape)
         elapsed = time.perf_counter() - t0
         return SweepResult(
             axes=axes, shape=shape, workloads=workloads, n_tg=n_tg,
@@ -752,9 +888,14 @@ def grid_sweep(model: SoCPerfModel,
 
         blk_shape = (O,) + shape[s:]
         with _profiled("sweep_chunk"):
-            out = _eval_grid(model, workloads, n_tg, backend, lay, vals,
-                             get, blk_shape)
-        flat = {k: v.ravel() for k, v in out.items()}
+            if n_devices:
+                flat = _eval_flat_points(model, workloads, n_tg, lay, vals,
+                                         shape, o0 * inner, o1 * inner,
+                                         n_devices)
+            else:
+                out = _eval_grid(model, workloads, n_tg, backend, lay,
+                                 vals, get, blk_shape)
+                flat = {k: v.ravel() for k, v in out.items()}
         n_chunks += 1
         peak_bytes = max(peak_bytes, sum(v.nbytes for v in flat.values())
                          + flat["throughput"].nbytes)   # + kernel temp
@@ -875,7 +1016,8 @@ def closed_loop_score(result: SweepResult, trace, *,
                       fault_schedule=None,
                       slo=None,
                       max_drop_rate: Optional[float] = None,
-                      observe=None
+                      observe=None,
+                      devices=None
                       ) -> ClosedLoopScore:
     """Re-rank static-sweep survivors by *simulated* runtime behaviour.
 
@@ -904,7 +1046,9 @@ def closed_loop_score(result: SweepResult, trace, *,
     ``repro.sim.ControllerHarness`` per materialized ``SimPlatform``)
     selects the sequential path, as does ``batch=False``; the sequential
     path is the differential-test reference and produces identical
-    rankings (tested).
+    rankings (tested).  ``devices=`` (``None`` / int / ``"auto"``) shards
+    the batched jax scan's design axis across devices via ``shard_map`` —
+    bitwise identical to the single-device jax run at any device count.
 
     Determinism: ``trace`` may be a callable ``trace(seed) -> Trace``; it
     is invoked with the explicit ``trace_seed``, so repeated scoring of
@@ -976,7 +1120,7 @@ def closed_loop_score(result: SweepResult, trace, *,
                                           else None),
                                 backend=backend,
                                 faults=fault_schedule, slo=slo,
-                                observe=observe)
+                                observe=observe, devices=devices)
         r = engine.run(trace)
         p99 = r.p99_latency_s
         ept = r.energy_per_request_j

@@ -30,19 +30,29 @@ advances ``(B, A)`` arrays:
   chained stages) with a :class:`~repro.sim.control.LoadBalancer`
   splitting arrivals across replica groups.
 
-Two backends: ``"numpy"`` (float64, the ground-truth reference) and
+Three backends: ``"numpy"`` (float64, the ground-truth reference),
 ``"jax"`` — the tick loop as one ``jax.lax.scan`` (jit-compiled; float32
 unless ``jax_enable_x64``), so the whole grid_sweep -> Pareto -> batched
-co-sim pipeline can run jitted end to end.  The jax backend supports
-open-loop replay, the vectorized membound/PID policies (+ queue guard),
-flow patterns, per-design traces and the balancer; it records no
-telemetry rings (latency percentiles are still reconstructed exactly
-from the returned histories).
+co-sim pipeline can run jitted end to end — and ``"pallas"``, the
+queue-update/service/forward tick sequence fused into one Pallas kernel
+(:mod:`repro.kernels.tick_sim`; ``interpret=True`` everywhere a real
+TPU is absent).  The jax backend supports open-loop replay, the
+vectorized membound/PID policies (+ queue guard), *custom* jax-side
+batch policies (any policy exposing the ``jax_step`` protocol — see
+:meth:`BatchSimEngine._control_plan`), flow patterns, per-design traces
+and the balancer; it records no telemetry rings (latency percentiles
+are still reconstructed exactly from the returned histories).  With
+``devices=`` the jax backend shards the design axis across devices via
+``shard_map`` (``repro.shard`` + the ``repro.compat`` shims): the
+per-design rows are fully independent, so any device count returns the
+single-device floats exactly (differentially tested) — spin up virtual
+CPU devices with ``XLA_FLAGS=--xla_force_host_platform_device_count=N``.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -61,6 +71,11 @@ from repro.sim.flows import FlowPattern, compile_flows
 from repro.sim.observe import STALL_EPS, CounterPlane, Observer
 from repro.sim.telemetry import BatchTelemetry, TelemetrySchema
 from repro.sim.traffic import BatchTrace, Trace
+
+# jitted-scan LRU bound: one compiled executable per distinct
+# (trace shape, cadence, fault class, policy/balancer/config digest);
+# long-lived engines swept through many configurations stay bounded
+_SCAN_CACHE_MAX = 8
 
 
 # ---------------------------------------------------------------------------
@@ -275,9 +290,13 @@ class BatchSimEngine:
                  balancer: Optional[LoadBalancer] = None,
                  backend: str = "numpy",
                  faults: Optional[FaultSchedule] = None,
-                 slo: Optional[SLOConfig] = None, observe=None):
-        assert backend in ("numpy", "jax"), backend
+                 slo: Optional[SLOConfig] = None, observe=None,
+                 devices=None):
+        assert backend in ("numpy", "jax", "pallas"), backend
         self.platform = platform
+        # devices: None (single-device ground truth), an int, or "auto" —
+        # the jax backend shards the design axis across this many devices
+        self.devices = devices
         self.config = config
         self.controller = controller
         self.balancer = balancer
@@ -312,7 +331,13 @@ class BatchSimEngine:
             self._noc_island = isl_names.index("noc_mem")
         except ValueError:
             self._noc_island = -1
-        self._jax_fn = None             # compiled scan, keyed by (T, ci)
+        # compiled-scan cache: full run signature -> jitted scan.  The
+        # key is EXPLICIT about everything the trace bakes in as a
+        # constant (dt, controller plan, balancer layout, SLO semantics,
+        # config scalars, device count) — two configurations that differ
+        # in any baked constant MUST NOT share one executable (the PR 8
+        # jit-cache collision bugfix; regression-tested).  Bounded LRU.
+        self._jax_cache: "OrderedDict" = OrderedDict()
 
     # ------------------------------------------------------------ service
     def _service(self, rates: np.ndarray,
@@ -399,6 +424,8 @@ class BatchSimEngine:
         (T, A) arrivals) or a per-design :class:`BatchTrace` (T, B, A)."""
         if self.backend == "jax":
             return self._run_jax(trace)
+        if self.backend == "pallas":
+            return self._run_pallas(trace)
         return self._run_numpy(trace)
 
     def _run_numpy(self, trace) -> BatchSimResult:
@@ -684,17 +711,238 @@ class BatchSimEngine:
                         integral_clamp=pol.integral_clamp)
             plan["skip"] = (topo.fixed | (topo.counts == 0)
                             | np.isin(names, pol.skip))
+        elif hasattr(ctl.policy, "jax_step"):
+            # custom BatchPolicy lowered into the scan/kernel carry: the
+            # policy ships its own jax-side step (see core/dfs.py
+            # BatchJaxPolicy protocol) and the harness semantics —
+            # guard latch, ladder quantization, masked dual-buffer
+            # commit — stay in the shared control lowering
+            pol = ctl.policy
+            plan["kind"] = "custom"
+            plan["policy"] = pol
+            skip = (pol.skip_islands(topo)
+                    if hasattr(pol, "skip_islands")
+                    else (topo.fixed | (topo.counts == 0)))
+            plan["skip"] = np.asarray(skip, dtype=bool)
         else:
             raise NotImplementedError(
                 "jax backend supports controller=None, guard-only, "
-                "BatchMemoryBoundPolicy or BatchPIDRatePolicy; got "
+                "BatchMemoryBoundPolicy, BatchPIDRatePolicy, or any "
+                "policy implementing the jax_step protocol; got "
                 f"{type(ctl.policy).__name__}")
         return plan
+
+    # ------------------------------------------------- jax control plane
+    def _jax_control(self, plan, ci: int, B: int):
+        """Lower the digested controller plan to ONE jax-traceable control
+        function shared by the ``lax.scan`` backend and the Pallas kernel
+        (so the two fast paths cannot drift).
+
+        Returns ``(control, pol_state0)``: ``control(rates, guard,
+        pol_state, ctl_flag, obs, dead=None, stuck=None)`` applies the
+        policy + guard latch + ladder quantization + masked dual-buffer
+        commit and returns ``(rates, guard, pol_state, committed)``;
+        ``pol_state0`` is the tuple of per-design policy-state arrays
+        threaded through the carry (PID integral/prev-err, or whatever a
+        custom ``jax_step`` policy declares via ``jax_state``).  ``obs``
+        carries per-TILE signals (``util``, ``bound``, ``qt`` — each
+        ``(B, A)``); island aggregation happens here so both backends
+        share it.  ``control`` is None for an open-loop run.
+        """
+        import jax
+        import jax.numpy as jnp
+        kind = plan["kind"]
+        if kind == "none":
+            return None, (), None
+        topo = plan["topo"]
+        # numpy, not jnp: the Pallas backend must feed these through
+        # kernel inputs (captured array constants are rejected), so the
+        # closure converts lazily (or takes a ``consts=`` override)
+        cst = {"membership": np.asarray(topo.membership),       # (I, A)
+               "counts_safe": np.where(topo.counts > 0,
+                                       topo.counts, 1.0),
+               "counts_pos": np.asarray(topo.counts > 0),
+               "fixed": np.asarray(topo.fixed),
+               "levels": np.asarray(topo.ladder_levels),        # (I, Lmax)
+               "skip": np.asarray(plan.get(
+                   "skip", np.ones(len(topo.names), dtype=bool)))}
+        I = len(topo.names)
+        pol = plan.get("policy")
+
+        if kind == "pid":
+            ctlp = self.controller.policy
+            if ctlp._integral is not None:
+                pol_state0 = (np.asarray(ctlp._integral),
+                              np.asarray(ctlp._prev_err),
+                              np.ones((B, 1), dtype=bool))
+            else:
+                pol_state0 = (np.zeros((B, I)), np.zeros((B, I)),
+                              np.zeros((B, 1), dtype=bool))
+        elif kind == "custom":
+            pol_state0 = tuple(np.asarray(s) for s in pol.jax_state(B, I))
+        else:
+            pol_state0 = ()
+
+        def control(rates, guard, pol_state, ctl_flag, obs,
+                    dead=None, stuck=None, consts=None):
+            c = (consts if consts is not None
+                 else {kk: jnp.asarray(vv) for kk, vv in cst.items()})
+            membership = c["membership"]
+            counts_safe = c["counts_safe"]
+            counts_pos = c["counts_pos"]
+            fixed = c["fixed"]
+            levels = c["levels"]
+            skip = c["skip"]
+            util_i = (obs["util"] @ membership.T) / counts_safe
+            bound_i = (obs["bound"] @ membership.T) / counts_safe
+            qt = obs["qt"]
+            qt_i = jnp.where(membership[None, :, :] > 0,
+                             qt[:, None, :], -jnp.inf).max(axis=-1)
+            qt_i = jnp.where(counts_pos, qt_i, 0.0)
+
+            valid = jnp.zeros(rates.shape, dtype=bool)
+            req = rates
+            if kind == "membound":
+                req = jnp.where(bound_i >= plan["threshold"],
+                                plan["low_rate"], 1.0)
+                valid = ~skip[None, :] & jnp.ones_like(valid)
+            elif kind == "pid":
+                pid_i, pid_prev, pid_has = pol_state
+                err = jnp.where(skip[None, :], 0.0,
+                                util_i - plan["target"])
+                i_term = jnp.clip(pid_i + err,
+                                  -plan["integral_clamp"],
+                                  plan["integral_clamp"])
+                d_term = jnp.where(pid_has, err - pid_prev, 0.0)
+                new = (rates + plan["kp"] * err + plan["ki"] * i_term
+                       + plan["kd"] * d_term)
+                req = jnp.clip(new, plan["min_rate"], 1.0)
+                valid = ~skip[None, :] & jnp.ones_like(valid)
+                pol_state = (jnp.where(ctl_flag, i_term, pid_i),
+                             jnp.where(ctl_flag, err, pid_prev),
+                             pid_has | ctl_flag)
+            elif kind == "custom":
+                obs_i = {"util": util_i, "boundness": bound_i,
+                         "queue_ticks": qt_i}
+                req_raw, new_state = pol.jax_step(rates, obs_i,
+                                                  tuple(pol_state))
+                # NaN = "no request" (the numpy BatchPolicy contract)
+                req_raw = jnp.where(skip[None, :], jnp.nan, req_raw)
+                valid = ~jnp.isnan(req_raw)
+                req = jnp.where(valid, req_raw, rates)
+                pol_state = tuple(
+                    jax.tree_util.tree_map(
+                        lambda n, o: jnp.where(ctl_flag, n, o),
+                        tuple(new_state), tuple(pol_state)))
+
+            if plan["guard"] is not None:
+                latch = jnp.where(
+                    qt_i > plan["guard"], True,
+                    jnp.where(qt_i < plan["guard_release"], False,
+                              guard))
+                latch = latch & ~fixed[None, :]
+                if dead is not None:     # dead islands drop out of latch
+                    latch = latch & ~dead[None, :]
+                req = jnp.where(latch, plan["guard_rate"], req)
+                valid = valid | latch
+                guard = jnp.where(ctl_flag, latch, guard)
+
+            d = jnp.abs(levels[None, :, :] - req[:, :, None])
+            idx = jnp.argmin(d, axis=-1)
+            qz = jnp.take_along_axis(
+                jnp.broadcast_to(levels, (req.shape[0],) + levels.shape),
+                idx[:, :, None], axis=-1)[:, :, 0]
+            changed = valid & ~fixed[None, :] & (qz != rates) & ctl_flag
+            if dead is not None:        # no hardware to commit to
+                changed = changed & ~dead[None, :]
+            if stuck is not None:       # actuator write never lands
+                changed = changed & ~stuck[None, :]
+            rates = jnp.where(changed, qz, rates)
+            committed = jnp.where(ctl_flag, changed.any(axis=-1), False)
+            return rates, guard, pol_state, committed
+
+        return control, pol_state0, cst
+
+    def _control_writeback(self, plan, ratesF, guardF, swapsF, polF,
+                           swaps_before):
+        """Push the scan/kernel's evolved controller state back into the
+        Python-side harness/policy objects (shared by jax and pallas)."""
+        ctl = self.controller
+        if ctl is None:
+            return
+        ctl.rates = np.asarray(ratesF, dtype=np.float64)
+        ctl._guard_active = np.asarray(guardF, dtype=bool)
+        ctl.swaps = swaps_before + np.asarray(swapsF).astype(np.int64)
+        ctl.versions = ctl.versions + np.asarray(swapsF).astype(np.int64)
+        if plan["kind"] == "pid":
+            ctl.policy._integral = np.asarray(polF[0], dtype=np.float64)
+            ctl.policy._prev_err = np.asarray(polF[1], dtype=np.float64)
+        elif plan["kind"] == "custom" and hasattr(plan["policy"],
+                                                 "jax_sync"):
+            plan["policy"].jax_sync(tuple(np.asarray(s) for s in polF))
+
+    # --------------------------------------------- jit-cache bookkeeping
+    def _policy_digest(self, plan):
+        """Hashable digest of everything the control lowering bakes into
+        the traced function as a compile-time constant."""
+        kind = plan["kind"]
+        if kind == "none":
+            return ("none",)
+        topo = plan["topo"]
+        items = [kind, plan["guard"], plan["guard_release"],
+                 plan["guard_rate"],
+                 np.asarray(topo.membership).tobytes(),
+                 np.asarray(topo.counts).tobytes(),
+                 np.asarray(topo.fixed).tobytes(),
+                 np.asarray(topo.ladder_levels).tobytes(),
+                 np.asarray(plan.get("skip", ())).tobytes()]
+        if kind == "membound":
+            items += [plan["threshold"], plan["low_rate"]]
+        elif kind == "pid":
+            items += [plan[kk] for kk in ("target", "kp", "ki", "kd",
+                                          "min_rate", "integral_clamp")]
+        elif kind == "custom":
+            pol = plan["policy"]
+            if hasattr(pol, "jax_cache_key"):
+                items.append(pol.jax_cache_key())
+            else:
+                # identity + scalar attrs: a retuned policy (same object,
+                # new gains) must miss the cache
+                items.append((type(pol).__module__,
+                              type(pol).__qualname__, id(pol)))
+                items.append(tuple(sorted(
+                    (kk, vv) for kk, vv in vars(pol).items()
+                    if isinstance(vv, (bool, int, float, str)))))
+        return tuple(items)
+
+    def _balancer_digest(self):
+        lb = self.balancer
+        if lb is None:
+            return None
+        return (lb.mode, np.asarray(lb.membership).tobytes(),
+                np.asarray(lb.group_of).tobytes(),
+                np.asarray(lb.covered).tobytes())
+
+    def _cached_scan(self, sig, build):
+        """Look up / build the jitted scan for an explicit signature.
+        Bounded LRU (``_SCAN_CACHE_MAX``): long-lived engines driven
+        through many trace lengths / schedules can't pin one executable
+        per configuration forever."""
+        fn = self._jax_cache.get(sig)
+        if fn is not None:
+            self._jax_cache.move_to_end(sig)
+            return fn
+        fn = build()
+        self._jax_cache[sig] = fn
+        while len(self._jax_cache) > _SCAN_CACHE_MAX:
+            self._jax_cache.popitem(last=False)
+        return fn
 
     def _run_jax(self, trace) -> BatchSimResult:
         import jax
         import jax.numpy as jnp
         from jax import lax
+        from repro import shard as shard_mod
         from repro.core.perfmodel import P_DYN_W, P_STATIC_W
 
         p, cfg = self.platform, self.config
@@ -709,16 +957,12 @@ class BatchSimEngine:
         is_ctl = np.zeros(T, dtype=bool)
         if ci:
             is_ctl[ci - 1::ci] = True
+        D = shard_mod.resolve_devices(self.devices)
+        Bp = shard_mod.shard_len(B, D)
 
-        # ----- static closures (float dtype follows jax's x64 setting)
-        inc = jnp.asarray(self._inc)
-        hop_counts = jnp.asarray(np.asarray(self._hop_counts, float))
-        base_mbps = jnp.asarray(p.base_mbps)
-        req_mb = jnp.asarray(p.req_mb)
-        w = jnp.asarray(p.wire_share)
-        k = jnp.asarray(p.k)
-        t_comp_ref = jnp.asarray(self._t_comp_ref)
-        f_tg = jnp.asarray(p.f_tg)
+        # ----- replicated statics (shared across designs; safe to close
+        # over even under shard_map) — per-DESIGN arrays travel through
+        # the ``pd`` argument instead so the design axis can shard
         island_of_tile = jnp.asarray(self._island_of_tile)
         noc_idx = self._noc_island
         own = m.own_demand                  # static TG-saturation term
@@ -756,23 +1000,18 @@ class BatchSimEngine:
         link_bw = m.noc.link_bw
         max_slow = m.noc.max_slowdown
         hop_lat = m.noc.hop_latency
+        hop_share = m.hop_latency_share
+        hopf0 = 1.0 + m.hop_latency_share * m._ref_hops()
+        n_tg = p.n_tg
+        dyn_on = cfg.dynamic_contention
+        max_q = cfg.max_queue
         # monitoring statics: a Python bool baked into the trace (part of
         # the jit cache key) — level=off scans emit no extra ys and stay
-        # byte-identical to the pre-observability trace.  When observing,
-        # the scan only STACKS a narrow snapshot of the step's existing
-        # arrays into extra ys (a dynamic-update-slice each, no
-        # arithmetic); the counter plane is reconstructed from them
-        # lazily at the first counters read.
+        # byte-identical to the pre-observability trace.
         ob = self.observer
         observing = ob is not None and ob.enabled
         n_islands = len(p.islands.names())
         n_links = int(self._inc.shape[-1])
-        hopf = 1.0 + m.hop_latency_share * hop_counts
-        hopf0 = 1.0 + m.hop_latency_share * m._ref_hops()
-        t_ref = (1.0 - w) + w * max(1.0, own) * hopf0
-        n_tg = p.n_tg
-        dyn_on = cfg.dynamic_contention
-        max_q = cfg.max_queue
 
         # ----- fault/SLO statics: presence flags are Python bools baked
         # into the trace (part of the jit cache key); the per-tick mask
@@ -792,250 +1031,190 @@ class BatchSimEngine:
         drain = has_tile and slo.on_kill != "wait"
         track = has_tile or deadline
 
-        if kind != "none":
-            topo = plan["topo"]
-            membership = jnp.asarray(topo.membership)           # (I, A)
-            counts_safe = jnp.asarray(
-                np.where(topo.counts > 0, topo.counts, 1.0))
-            fixed = jnp.asarray(topo.fixed)
-            levels = jnp.asarray(topo.ladder_levels)            # (I, Lmax)
-            skip = jnp.asarray(plan.get(
-                "skip", np.ones(len(topo.names), dtype=bool)))
+        control, pol0, _cctl = self._jax_control(plan, ci, B)
 
         def voltage2(f):
             v = 0.7 + 0.3 * f
             return v * v
 
-        def service(rates):
-            f_tile = rates[:, island_of_tile]                   # (B, A)
-            f_noc = (rates[:, noc_idx] if noc_idx >= 0
-                     else jnp.ones(rates.shape[0]))
-            fa = jnp.maximum(f_tile, 1e-3)
-            fn = jnp.maximum(f_noc, 1e-3)[:, None]
-            load = own + tgd * f_tg[:, None] * n_tg
-            slow = jnp.maximum(1.0, load / (link_bw * fn))
-            t_comp = (1.0 - w) / (k * fa)
-            t_wire = w * slow * hopf / fn
-            return t_comp, t_wire, f_tile, f_noc
+        def run_scan(pd, xs0, init):
+            # per-design constants arrive as (possibly sharded) arguments
+            inc = pd["inc"]
+            hop_counts = pd["hop"]
+            base_mbps = pd["base"]
+            req_mb = pd["req"]
+            w = pd["w"]
+            k = pd["k"]
+            t_comp_ref = pd["tcr"]
+            f_tg = pd["ftg"]
+            hopf = 1.0 + hop_share * hop_counts
+            t_ref = (1.0 - w) + w * max(1.0, own) * hopf0
 
-        def step(carry, xs):
-            arr_t, ctl_flag = xs["arr"], xs["ctl"]
-            (queue, busy, rtt, rates, guard, pid_i, pid_prev, pid_has,
-             ctl_busy, dropped, energy, swaps, carry_fwd, prev_cap,
-             retry_q, dslo, dfault, retried) = carry
-            alive_t = xs["alive"] if has_tile else None
-            if has_stuck_rate:
-                srate_t = xs["srate"]          # (I,) NaN = follow software
-                rates_eff = jnp.where(jnp.isnan(srate_t)[None, :],
-                                      rates, srate_t[None, :])
-            else:
-                rates_eff = rates
-            t_comp, t_wire, f_tile, f_noc = service(rates_eff)
+            def service(rates):
+                f_tile = rates[:, island_of_tile]               # (B, A)
+                f_noc = (rates[:, noc_idx] if noc_idx >= 0
+                         else jnp.ones(rates.shape[0]))
+                fa = jnp.maximum(f_tile, 1e-3)
+                fn = jnp.maximum(f_noc, 1e-3)[:, None]
+                load = own + tgd * f_tg[:, None] * n_tg
+                slow = jnp.maximum(1.0, load / (link_bw * fn))
+                t_comp = (1.0 - w) / (k * fa)
+                t_wire = w * slow * hopf / fn
+                return t_comp, t_wire, f_tile, f_noc
 
-            # drain work stranded on dead replicas BEFORE the split, so
-            # the re-spill weights see the post-drain queues (as the
-            # numpy engines do)
-            respill = stranded_exit = None
-            if drain:
-                dead_m = 1.0 - alive_t
-                stranded = queue * dead_m
-                s_retry = retry_q * dead_m
-                queue = queue - stranded
-                retry_q = retry_q - s_retry
-                if recover:
-                    surv = jnp.einsum("a,ga->g", alive_t, lbM) > 0.0
-                    can = lb_cov & surv[lb_gof]
-                    respill = jnp.where(can, stranded - s_retry, 0.0)
-                    fdrop = stranded - respill
-                    retried = retried + respill.sum(axis=-1)
-                    stranded_exit = respill + fdrop
+            def step(carry, xs):
+                arr_t, ctl_flag = xs["arr"], xs["ctl"]
+                (queue, busy, rtt, rates, guard, pol_state, ctl_busy,
+                 dropped, energy, swaps, carry_fwd, prev_cap,
+                 retry_q, dslo, dfault, retried) = carry
+                alive_t = xs["alive"] if has_tile else None
+                if has_stuck_rate:
+                    srate_t = xs["srate"]      # (I,) NaN = follow software
+                    rates_eff = jnp.where(jnp.isnan(srate_t)[None, :],
+                                          rates, srate_t[None, :])
                 else:
-                    fdrop = stranded
-                    stranded_exit = stranded
-                dfault = dfault + fdrop.sum(axis=-1)
+                    rates_eff = rates
+                t_comp, t_wire, f_tile, f_noc = service(rates_eff)
 
-            arr_eff = jnp.broadcast_to(arr_t, queue.shape)
-            if has_fwd:
-                arr_eff = arr_eff + carry_fwd
-            retry_arr = None
-            if lb is not None:
-                arr_eff = lb_split(arr_eff, queue, prev_cap,
-                                   alive=alive_t if recover else None)
+                # drain work stranded on dead replicas BEFORE the split,
+                # so the re-spill weights see the post-drain queues (as
+                # the numpy engines do)
+                respill = stranded_exit = None
+                if drain:
+                    dead_m = 1.0 - alive_t
+                    stranded = queue * dead_m
+                    s_retry = retry_q * dead_m
+                    queue = queue - stranded
+                    retry_q = retry_q - s_retry
+                    if recover:
+                        surv = jnp.einsum("a,ga->g", alive_t, lbM) > 0.0
+                        can = lb_cov & surv[lb_gof]
+                        respill = jnp.where(can, stranded - s_retry, 0.0)
+                        fdrop = stranded - respill
+                        retried = retried + respill.sum(axis=-1)
+                        stranded_exit = respill + fdrop
+                    else:
+                        fdrop = stranded
+                        stranded_exit = stranded
+                    dfault = dfault + fdrop.sum(axis=-1)
+
+                arr_eff = jnp.broadcast_to(arr_t, queue.shape)
+                if has_fwd:
+                    arr_eff = arr_eff + carry_fwd
+                retry_arr = None
+                if lb is not None:
+                    arr_eff = lb_split(arr_eff, queue, prev_cap,
+                                       alive=alive_t if recover else None)
+                    if recover:
+                        retry_arr = lb_split(respill, queue, prev_cap,
+                                             alive=alive_t)
+                        arr_eff = arr_eff + retry_arr
+                q = queue + arr_eff
+                adm = arr_eff
                 if recover:
-                    retry_arr = lb_split(respill, queue, prev_cap,
-                                         alive=alive_t)
-                    arr_eff = arr_eff + retry_arr
-            q = queue + arr_eff
-            adm = arr_eff
-            if recover:
-                q0 = q                  # retry-class mixing denominator
-                retry_q = retry_q + retry_arr
-            if max_q != float("inf"):
-                over = jnp.maximum(q - max_q, 0.0)
-                q = q - over
-                adm = adm - over
-                dropped = dropped + over.sum(axis=-1)
-            if dyn_on:
-                loads = jnp.einsum("ba,bal->bl", demand * busy, inc)
-                if has_link:
-                    loads = loads / xs["lscale"]
-                rho = ((inc * loads[:, None, :]).max(axis=-1)
-                       / (link_bw * f_noc[:, None]))
-                r = jnp.minimum(rho, 0.999)
-                dyn = jnp.minimum(1.0 + r / (2.0 * (1.0 - r)), max_slow)
-            else:
-                loads = None
-                dyn = jnp.ones_like(q)
-            cap = (base_mbps * t_ref / (t_comp + t_wire * dyn)
-                   / req_mb) * dt
-            if has_tile:
-                cap_nominal = cap
-                cap = cap * alive_t
-                served = jnp.minimum(q, cap)
-                queue = q - served
-                busy = jnp.where(cap > 0.0,
-                                 served / jnp.where(cap > 0.0, cap, 1.0),
-                                 0.0)
-            else:
-                served = jnp.minimum(q, cap)
-                queue = q - served
-                busy = served / cap
-            slo_drop = None
-            if deadline:
-                horizon = ((cap if not has_tile else cap_nominal)
-                           * deadline_ticks)
-                slo_drop = jnp.maximum(queue - horizon, 0.0)
-                queue = queue - slo_drop
-                dslo = dslo + slo_drop.sum(axis=-1)
-            if recover:
-                retry_q = retry_q * jnp.where(
-                    q0 > 0.0, queue / jnp.where(q0 > 0.0, q0, 1.0), 0.0)
-            rtt = rtt + hop_counts * dyn * hop_lat
-            if has_fwd:
-                carry_fwd = jnp.einsum("ba,aj->bj", served, fwdM)
-            if lb is not None:
-                prev_cap = cap
+                    q0 = q              # retry-class mixing denominator
+                    retry_q = retry_q + retry_arr
+                if max_q != float("inf"):
+                    over = jnp.maximum(q - max_q, 0.0)
+                    q = q - over
+                    adm = adm - over
+                    dropped = dropped + over.sum(axis=-1)
+                if dyn_on:
+                    loads = jnp.einsum("ba,bal->bl", demand * busy, inc)
+                    if has_link:
+                        loads = loads / xs["lscale"]
+                    rho = ((inc * loads[:, None, :]).max(axis=-1)
+                           / (link_bw * f_noc[:, None]))
+                    r = jnp.minimum(rho, 0.999)
+                    dyn = jnp.minimum(1.0 + r / (2.0 * (1.0 - r)),
+                                      max_slow)
+                else:
+                    loads = None
+                    dyn = jnp.ones_like(q)
+                cap = (base_mbps * t_ref / (t_comp + t_wire * dyn)
+                       / req_mb) * dt
+                if has_tile:
+                    cap_nominal = cap
+                    cap = cap * alive_t
+                    served = jnp.minimum(q, cap)
+                    queue = q - served
+                    busy = jnp.where(cap > 0.0,
+                                     served / jnp.where(cap > 0.0, cap,
+                                                        1.0),
+                                     0.0)
+                else:
+                    served = jnp.minimum(q, cap)
+                    queue = q - served
+                    busy = served / cap
+                slo_drop = None
+                if deadline:
+                    horizon = ((cap if not has_tile else cap_nominal)
+                               * deadline_ticks)
+                    slo_drop = jnp.maximum(queue - horizon, 0.0)
+                    queue = queue - slo_drop
+                    dslo = dslo + slo_drop.sum(axis=-1)
+                if recover:
+                    retry_q = retry_q * jnp.where(
+                        q0 > 0.0, queue / jnp.where(q0 > 0.0, q0, 1.0),
+                        0.0)
+                rtt = rtt + hop_counts * dyn * hop_lat
+                if has_fwd:
+                    carry_fwd = jnp.einsum("ba,aj->bj", served, fwdM)
+                if lb is not None:
+                    prev_cap = cap
 
-            tp = P_STATIC_W + P_DYN_W * f_tile * voltage2(f_tile) * busy
-            if has_tile:                # dead tiles are power-gated
-                tp = tp * alive_t
-            tile_power = jnp.sum(tp, axis=-1)
-            noc_power = cfg.noc_power_share * (
-                P_STATIC_W + P_DYN_W * f_noc * voltage2(f_noc))
-            energy = energy + (tile_power + noc_power) * dt
-            ctl_busy = ctl_busy + busy
+                tp = (P_STATIC_W
+                      + P_DYN_W * f_tile * voltage2(f_tile) * busy)
+                if has_tile:            # dead tiles are power-gated
+                    tp = tp * alive_t
+                tile_power = jnp.sum(tp, axis=-1)
+                noc_power = cfg.noc_power_share * (
+                    P_STATIC_W + P_DYN_W * f_noc * voltage2(f_noc))
+                energy = energy + (tile_power + noc_power) * dt
+                ctl_busy = ctl_busy + busy
 
-            if kind != "none":
-                util = ctl_busy / max(ci, 1)                    # (B, A)
-                util_i = (util @ membership.T) / counts_safe    # (B, I)
-                t_wire_now = t_wire * dyn
-                bound = t_wire_now / (t_comp_ref + t_wire_now)
-                bound_i = (bound @ membership.T) / counts_safe
-                qt = queue / jnp.maximum(cap, 1e-12)
-                qt_i = jnp.where(membership[None, :, :] > 0,
-                                 qt[:, None, :], -jnp.inf).max(axis=-1)
-                qt_i = jnp.where(jnp.asarray(topo.counts > 0), qt_i, 0.0)
+                if control is not None:
+                    t_wire_now = t_wire * dyn
+                    obs = {"util": ctl_busy / max(ci, 1),
+                           "bound": t_wire_now / (t_comp_ref
+                                                  + t_wire_now),
+                           "qt": queue / jnp.maximum(cap, 1e-12)}
+                    rates, guard, pol_state, committed = control(
+                        rates, guard, pol_state, ctl_flag, obs,
+                        dead=xs["dead"] if has_tile else None,
+                        stuck=xs["stuck_m"] if has_stuck else None)
+                    swaps = swaps + committed
+                ctl_busy = jnp.where(ctl_flag, 0.0, ctl_busy)
+                carry = (queue, busy, rtt, rates, guard, pol_state,
+                         ctl_busy, dropped, energy, swaps, carry_fwd,
+                         prev_cap, retry_q, dslo, dfault, retried)
+                if track:
+                    qdrop_t = jnp.zeros_like(queue)
+                    if stranded_exit is not None:
+                        qdrop_t = qdrop_t + stranded_exit
+                    if slo_drop is not None:
+                        qdrop_t = qdrop_t + slo_drop
+                    ys = (adm, served, qdrop_t)
+                else:
+                    ys = (adm, served)
+                if observing:
+                    # pure reads of the step's arrays, never fed back
+                    # into the dynamics above; narrow float32 snapshots
+                    obs_ys = {"cap": cap.astype(jnp.float32),
+                              "dyn": dyn.astype(jnp.float32),
+                              "stall": queue > STALL_EPS,
+                              "rates": rates_eff.astype(jnp.float32)}
+                    ys = ys + (obs_ys,)
+                return carry, ys
 
-                valid = jnp.zeros(rates.shape, dtype=bool)
-                req = rates
-                if kind == "membound":
-                    req = jnp.where(bound_i >= plan["threshold"],
-                                    plan["low_rate"], 1.0)
-                    valid = ~skip[None, :] & jnp.ones_like(valid)
-                elif kind == "pid":
-                    err = jnp.where(skip[None, :], 0.0,
-                                    util_i - plan["target"])
-                    i_term = jnp.clip(pid_i + err,
-                                      -plan["integral_clamp"],
-                                      plan["integral_clamp"])
-                    d_term = jnp.where(pid_has, err - pid_prev, 0.0)
-                    new = (rates + plan["kp"] * err + plan["ki"] * i_term
-                           + plan["kd"] * d_term)
-                    req = jnp.clip(new, plan["min_rate"], 1.0)
-                    valid = ~skip[None, :] & jnp.ones_like(valid)
-                    pid_i = jnp.where(ctl_flag, i_term, pid_i)
-                    pid_prev = jnp.where(ctl_flag, err, pid_prev)
-                    pid_has = pid_has | ctl_flag
-
-                if plan["guard"] is not None:
-                    latch = jnp.where(
-                        qt_i > plan["guard"], True,
-                        jnp.where(qt_i < plan["guard_release"], False,
-                                  guard))
-                    latch = latch & ~fixed[None, :]
-                    if has_tile:        # dead islands drop out of the latch
-                        latch = latch & ~xs["dead"][None, :]
-                    req = jnp.where(latch, plan["guard_rate"], req)
-                    valid = valid | latch
-                    guard = jnp.where(ctl_flag, latch, guard)
-
-                d = jnp.abs(levels[None, :, :] - req[:, :, None])
-                idx = jnp.argmin(d, axis=-1)
-                qz = jnp.take_along_axis(
-                    jnp.broadcast_to(levels, (req.shape[0],) + levels.shape),
-                    idx[:, :, None], axis=-1)[:, :, 0]
-                changed = (valid & ~fixed[None, :] & (qz != rates)
-                           & ctl_flag)
-                if has_tile:            # no hardware to commit to
-                    changed = changed & ~xs["dead"][None, :]
-                if has_stuck:           # actuator write never lands
-                    changed = changed & ~xs["stuck_m"][None, :]
-                rates = jnp.where(changed, qz, rates)
-                swaps = swaps + jnp.where(ctl_flag, changed.any(axis=-1),
-                                          False)
-            ctl_busy = jnp.where(ctl_flag, 0.0, ctl_busy)
-            carry = (queue, busy, rtt, rates, guard, pid_i, pid_prev,
-                     pid_has, ctl_busy, dropped, energy, swaps, carry_fwd,
-                     prev_cap, retry_q, dslo, dfault, retried)
-            if track:
-                qdrop_t = jnp.zeros_like(queue)
-                if stranded_exit is not None:
-                    qdrop_t = qdrop_t + stranded_exit
-                if slo_drop is not None:
-                    qdrop_t = qdrop_t + slo_drop
-                ys = (adm, served, qdrop_t)
-            else:
-                ys = (adm, served)
-            if observing:
-                # pure reads of the step's arrays, never fed back into
-                # the dynamics above.  Stacked into preallocated ys
-                # buffers (one dynamic-update-slice each) rather than
-                # carried sums — XLA copies while-loop carries per
-                # iteration, which measures strictly slower.  Payload is
-                # deliberately narrow: float32 snapshots (counters are
-                # tolerance-checked against the numpy engines anyway), a
-                # precomputed stall bit, and the per-ISLAND rates from
-                # which f_tile/f_noc expand host-side; busy, link loads
-                # and power all reconstruct lazily from these plus the
-                # admitted/served histories
-                obs_ys = {"cap": cap.astype(jnp.float32),
-                          "dyn": dyn.astype(jnp.float32),
-                          "stall": queue > STALL_EPS,
-                          "rates": rates_eff.astype(jnp.float32)}
-                ys = ys + (obs_ys,)
-            return carry, ys
-
-        def run_scan(xs0, rates0, guard0, pid_i0, pid_prev0, pid_has0,
-                     cap0):
-            zBA = jnp.zeros((B, A))
-            zB = jnp.zeros(B)
-            carry0 = (zBA, zBA, zBA, rates0, guard0, pid_i0, pid_prev0,
-                      pid_has0, zBA, zB, zB,
-                      jnp.zeros(B, dtype=jnp.int32), zBA, cap0,
+            Bb = k.shape[0]
+            zBA = jnp.zeros((Bb, A))
+            zB = jnp.zeros(Bb)
+            carry0 = (zBA, zBA, zBA, init["rates"], init["guard"],
+                      tuple(init["pol"]), zBA, zB, zB,
+                      jnp.zeros(Bb, dtype=jnp.int32), zBA, init["cap"],
                       zBA, zB, zB, zB)
             return lax.scan(step, carry0, xs0)
-
-        # cache the jitted scan per (T, ci, fault signature): repeated
-        # runs of one engine (e.g. repeated closed_loop_score calls)
-        # retrace only on a trace length / control cadence / fault-shape
-        # change; XLA reuses the compiled executable for matching shapes
-        # (mask values travel through xs, so same-shape schedules share
-        # one trace)
-        fault_key = (has_tile, has_link, has_stuck, has_stuck_rate,
-                     recover, drain, track, deadline_ticks, observing)
-        if self._jax_fn is None or self._jax_fn[0] != (T, ci, fault_key):
-            self._jax_fn = ((T, ci, fault_key), jax.jit(run_scan))
-        run_scan = self._jax_fn[1]
 
         if ctl is not None:
             ctl.begin_run()
@@ -1044,51 +1223,120 @@ class BatchSimEngine:
             swaps_before = ctl.swaps.copy()
         else:
             rates0 = p.rates
-            guard0 = np.zeros((B, len(p.islands.names())), dtype=bool)
-        I = rates0.shape[1]
-        pid_i0 = np.zeros((B, I))
-        pid_prev0 = np.zeros((B, I))
-        pid_has0 = np.zeros((), dtype=bool)
-        if kind == "pid" and ctl.policy._integral is not None:
-            pid_i0 = np.asarray(ctl.policy._integral)
-            pid_prev0 = np.asarray(ctl.policy._prev_err)
-            pid_has0 = np.ones((), dtype=bool)
+            guard0 = np.zeros((B, n_islands), dtype=bool)
+            swaps_before = None
         cap0 = (self.capacity_rps(rates0) * dt if lb is not None
                 else np.zeros((B, A)))
 
-        xs0 = {"arr": jnp.asarray(trace.arrivals),
-               "ctl": jnp.asarray(is_ctl)}
+        arrivals = np.asarray(trace.arrivals)
+        xs0 = {"arr": arrivals, "ctl": is_ctl}
         if has_tile:
-            xs0["alive"] = jnp.asarray(cf.tile_alive)
-            xs0["dead"] = jnp.asarray(cf.island_dead)
+            xs0["alive"] = np.asarray(cf.tile_alive)
+            xs0["dead"] = np.asarray(cf.island_dead)
         if has_link:
-            xs0["lscale"] = jnp.asarray(cf.link_scale)
+            xs0["lscale"] = np.asarray(cf.link_scale)
         if has_stuck:
-            xs0["stuck_m"] = jnp.asarray(cf.stuck)
+            xs0["stuck_m"] = np.asarray(cf.stuck)
         if has_stuck_rate:
-            xs0["srate"] = jnp.asarray(cf.stuck_rate)
+            xs0["srate"] = np.asarray(cf.stuck_rate)
+        pd = {"inc": np.asarray(self._inc),
+              "hop": np.asarray(self._hop_counts, dtype=np.float64),
+              "base": p.base_mbps, "req": p.req_mb, "w": p.wire_share,
+              "k": p.k, "tcr": self._t_comp_ref, "ftg": p.f_tg}
+        init = {"rates": np.asarray(rates0), "guard": np.asarray(guard0),
+                "cap": np.asarray(cap0), "pol": tuple(pol0)}
+        if Bp != B:
+            # pad the design axis to a device multiple with copies of
+            # design 0 (computed, then discarded — sliced off below)
+            pad = lambda a: shard_mod.pad_axis(np.asarray(a), D)  # noqa
+            pd = {kk: pad(vv) for kk, vv in pd.items()}
+            init = {"rates": pad(init["rates"]),
+                    "guard": pad(init["guard"]), "cap": pad(init["cap"]),
+                    "pol": tuple(pad(s) for s in init["pol"])}
+            if arrivals.ndim == 3:
+                xs0["arr"] = shard_mod.pad_axis(arrivals, D, axis=1)
+
+        # ----- explicit jit-cache key: every Python-level constant the
+        # traced function bakes in (the (T, ci, fault-flag) key of the
+        # original implementation collided on dt, controller tuning,
+        # balancer layout, SLO mode and config scalars)
+        fault_key = (has_tile, has_link, has_stuck, has_stuck_rate,
+                     recover, drain, track, deadline_ticks, observing)
+        sig = ("scan", T, ci, dt, B, D, arrivals.ndim, fault_key,
+               self._policy_digest(plan), self._balancer_digest(),
+               (cfg.max_queue, cfg.dynamic_contention,
+                cfg.noc_power_share),
+               (own, tgd, link_bw, max_slow, hop_lat, hop_share, hopf0,
+                n_tg),
+               None if slo is None else (slo.on_kill, slo.recovers,
+                                         slo.deadline_s))
+
+        def build():
+            if D <= 1:
+                return jax.jit(run_scan)
+            from jax.sharding import PartitionSpec
+            from repro.compat import shard_map as _smap
+            mesh = shard_mod.device_mesh(D, "designs")
+
+            def lead(a):
+                return PartitionSpec(
+                    *(("designs",) + (None,) * (np.ndim(a) - 1)))
+
+            def rep(a):
+                return PartitionSpec(*((None,) * np.ndim(a)))
+
+            def timed(a):
+                nd = np.ndim(a)
+                if nd >= 3:             # (T, B, ...) per-design axis
+                    return PartitionSpec(
+                        *((None, "designs") + (None,) * (nd - 2)))
+                return rep(a)
+
+            in_specs = (
+                jax.tree_util.tree_map(lead, pd),
+                {kk: (timed(vv) if kk == "arr" else rep(vv))
+                 for kk, vv in xs0.items()},
+                jax.tree_util.tree_map(lead, init))
+            out_sh = jax.eval_shape(run_scan, pd, xs0, init)
+            out_specs = (
+                jax.tree_util.tree_map(
+                    lambda s: PartitionSpec(
+                        *(("designs",) + (None,) * (len(s.shape) - 1))),
+                    out_sh[0]),
+                jax.tree_util.tree_map(
+                    lambda s: PartitionSpec(
+                        *((None, "designs")
+                          + (None,) * (len(s.shape) - 2))),
+                    out_sh[1]))
+            return jax.jit(_smap(run_scan, mesh=mesh, in_specs=in_specs,
+                                 out_specs=out_specs, check_vma=False))
+
+        fn = self._cached_scan(sig, build)
 
         wall0 = time.perf_counter()
-        carryF, ys = run_scan(
-            xs0, jnp.asarray(rates0),
-            jnp.asarray(guard0), jnp.asarray(pid_i0),
-            jnp.asarray(pid_prev0), jnp.asarray(pid_has0),
-            jnp.asarray(cap0))
+        carryF, ys = fn(pd, xs0, init)
         obs_ys = None
         if observing:
             *ys, obs_ys = ys
         if track:
             admitted, served, qdropT = ys
-            qdrops = np.asarray(qdropT, dtype=np.float64)
+            qdrops = np.asarray(qdropT, dtype=np.float64)[:, :B]
         else:
             admitted, served = ys
             qdrops = None
-        (queueF, busyF, rttF, ratesF, guardF, pid_iF, pid_prevF, pid_hasF,
-         _ctlb, droppedF, energyF, swapsF, _fwdF, _capF,
-         retryqF, dsloF, dfaultF, retriedF) = [
-             np.asarray(x) for x in carryF]
-        admitted = np.asarray(admitted, dtype=np.float64)
-        served = np.asarray(served, dtype=np.float64)
+        (queueF, busyF, rttF, ratesF, guardF, polF, _ctlb, droppedF,
+         energyF, swapsF, _fwdF, _capF, retryqF, dsloF, dfaultF,
+         retriedF) = carryF
+        polF = tuple(np.asarray(s)[:B] for s in polF)
+        queueF, busyF, rttF, ratesF, guardF = [
+            np.asarray(x)[:B]
+            for x in (queueF, busyF, rttF, ratesF, guardF)]
+        droppedF, energyF, swapsF, retryqF, dsloF, dfaultF, retriedF = [
+            np.asarray(x)[:B]
+            for x in (droppedF, energyF, swapsF, retryqF, dsloF,
+                      dfaultF, retriedF)]
+        admitted = np.asarray(admitted, dtype=np.float64)[:, :B]
+        served = np.asarray(served, dtype=np.float64)[:, :B]
         elapsed = time.perf_counter() - wall0
 
         if obs_ys is not None:
@@ -1098,6 +1346,8 @@ class BatchSimEngine:
             # host-side with the scan's own expressions (float64 over the
             # float32 snapshots, so they land within f32 rounding of the
             # numpy engine's counters)
+            obs_ys = {kk: np.asarray(vv)[:, :B]
+                      for kk, vv in obs_ys.items()}
             tile_alive_np = (np.asarray(cf.tile_alive, dtype=np.float64)
                              if has_tile else None)
             lscale_np = (np.asarray(cf.link_scale, dtype=np.float64)
@@ -1115,7 +1365,8 @@ class BatchSimEngine:
                 f_noc = (rates_t[:, :, noc_idx] if noc_idx >= 0
                          else np.ones(rates_t.shape[:2]))      # (T, B)
                 busy = np.where(cap_t > 0.0,
-                                served / np.where(cap_t > 0.0, cap_t, 1.0),
+                                served / np.where(cap_t > 0.0, cap_t,
+                                                  1.0),
                                 0.0)
                 pktf = np.asarray(p.req_mb) * 1e6 / PKT_BYTES
                 hopc = np.asarray(self._hop_counts, dtype=np.float64)
@@ -1143,9 +1394,10 @@ class BatchSimEngine:
                             "util_sum": util.sum(axis=0),
                             "peak_util": util.max(axis=0, initial=0.0)}
                 else:
-                    link = {k: np.zeros((B, n_links))
-                            for k in ("flits", "util_sum", "peak_util")}
-                tp = P_STATIC_W + P_DYN_W * f_tile * voltage2(f_tile) * busy
+                    link = {kk: np.zeros((B, n_links))
+                            for kk in ("flits", "util_sum", "peak_util")}
+                tp = (P_STATIC_W
+                      + P_DYN_W * f_tile * voltage2(f_tile) * busy)
                 if tile_alive_np is not None:
                     tp = tp * tile_alive_np[:, None, :]
                 noc_p = cfg.noc_power_share * (
@@ -1159,15 +1411,8 @@ class BatchSimEngine:
                     tile_names=p.names, island_names=p.islands.names())
             ob.attach_lazy(_jax_plane)
 
-        if ctl is not None:             # write evolved state back
-            ctl.rates = np.asarray(ratesF, dtype=np.float64)
-            ctl._guard_active = np.asarray(guardF, dtype=bool)
-            ctl.swaps = swaps_before + swapsF.astype(np.int64)
-            ctl.versions = ctl.versions + swapsF.astype(np.int64)
-            if kind == "pid":
-                ctl.policy._integral = np.asarray(pid_iF, dtype=np.float64)
-                ctl.policy._prev_err = np.asarray(pid_prevF,
-                                                  dtype=np.float64)
+        self._control_writeback(plan, ratesF, guardF, swapsF, polF,
+                                swaps_before)
         self.last_state = TickState(
             queue=queueF.astype(np.float64), busy=busyF.astype(np.float64),
             pkts_in=(admitted.sum(axis=0) * np.asarray(p.req_mb)
@@ -1196,3 +1441,122 @@ class BatchSimEngine:
             dropped_fault=dfaultF.astype(np.float64),
             retried=retriedF.astype(np.float64),
             qdrops=qdrops)
+
+    # ------------------------------------------------------------ pallas
+    def _run_pallas(self, trace) -> BatchSimResult:
+        """The fused-kernel backend: the whole queue-update / contention /
+        service / forward / control tick as ONE Pallas kernel
+        (:func:`repro.kernels.tick_sim.fused_tick_sim`), T grid steps
+        deep, per-tile state held in VMEM scratch between ticks.
+
+        Scope: open-loop replay + every controller the jax backend's
+        control lowering supports (membound / PID / guard / custom
+        ``jax_step`` policies).  Faults, SLO semantics, the load
+        balancer and the observer plane need scan-side bookkeeping this
+        kernel does not carry — those runs raise ``NotImplementedError``
+        and belong on ``backend="jax"``.  Differentially validated
+        against the NumPy float64 engine (f32 tolerance) and the scan
+        backend."""
+        p, cfg = self.platform, self.config
+        B, A, T, dt = p.n_designs, p.n_tiles, trace.ticks, trace.dt
+        self._check_trace(trace)
+        if self._compile_faults(T) is not None:
+            raise NotImplementedError(
+                "pallas backend does not simulate fault schedules; "
+                "use backend='jax'")
+        if self.slo is not None:
+            raise NotImplementedError(
+                "pallas backend does not apply SLO semantics; "
+                "use backend='jax'")
+        if self.balancer is not None:
+            raise NotImplementedError(
+                "pallas backend does not run the load balancer; "
+                "use backend='jax'")
+        if self.observer is not None and self.observer.enabled:
+            raise NotImplementedError(
+                "pallas backend records no observer plane; "
+                "use backend='jax' or 'numpy'")
+        from repro.kernels.tick_sim import fused_tick_sim
+
+        m = p.model
+        plan = self._control_plan()
+        ctl = self.controller
+        ci = cfg.control_interval if (ctl is not None
+                                      and cfg.control_interval) else 0
+        control, pol0, cctl = self._jax_control(plan, ci, B)
+        if ctl is not None:
+            ctl.begin_run()
+            rates0 = ctl.live_rates()
+            guard0 = ctl._guard_active
+            swaps_before = ctl.swaps.copy()
+        else:
+            rates0 = p.rates
+            guard0 = np.zeros((B, len(p.islands.names())), dtype=bool)
+            swaps_before = None
+
+        arr = np.asarray(trace.arrivals)
+        if arr.ndim == 2:               # shared trace -> (T, B, A)
+            arr = np.broadcast_to(arr[:, None, :], (T, B, A))
+        is_ctl = np.zeros(T, dtype=bool)
+        if ci:
+            is_ctl[ci - 1::ci] = True
+
+        consts = {"base": p.base_mbps, "req": p.req_mb,
+                  "w": p.wire_share, "k": p.k,
+                  "hop": np.asarray(self._hop_counts, dtype=np.float64),
+                  "tcr": self._t_comp_ref, "inc": np.asarray(self._inc),
+                  "ftg": np.asarray(p.f_tg)[:, None]}
+        scalars = {"dt": dt, "own": m.own_demand, "tgd": m.tg_demand,
+                   "link_bw": m.noc.link_bw,
+                   "max_slow": m.noc.max_slowdown,
+                   "hop_lat": m.noc.hop_latency,
+                   "hop_share": m.hop_latency_share,
+                   "hopf0": 1.0 + m.hop_latency_share * m._ref_hops(),
+                   "noc_share": cfg.noc_power_share, "n_tg": p.n_tg,
+                   "dyn_on": cfg.dynamic_contention,
+                   "max_q": cfg.max_queue, "ci": ci,
+                   "noc_idx": self._noc_island,
+                   "iot": np.asarray(self._island_of_tile),
+                   "demand": np.asarray(self._flow_demand,
+                                        dtype=np.float64),
+                   "forward": (np.asarray(self._forward)
+                               if self._forward is not None else None)}
+        init = {"rates": np.asarray(rates0), "guard": np.asarray(guard0),
+                "pol": tuple(pol0)}
+
+        wall0 = time.perf_counter()
+        out = fused_tick_sim(arr, is_ctl, consts, scalars, init,
+                             control_fn=control, control_consts=cctl,
+                             interpret=True)
+        admitted = np.asarray(out["adm"], dtype=np.float64)
+        served = np.asarray(out["served"], dtype=np.float64)
+        queueF = np.asarray(out["queue"], dtype=np.float64)
+        droppedF = np.asarray(out["dropped"], dtype=np.float64)
+        energyF = np.asarray(out["energy"], dtype=np.float64)
+        swapsF = np.asarray(np.rint(out["swaps"]), dtype=np.int64)
+        elapsed = time.perf_counter() - wall0
+
+        self._control_writeback(plan, out["rates"], out["guard"],
+                                swapsF, out["pol"], swaps_before)
+        zB = np.zeros(B)
+        self.last_state = TickState(
+            queue=queueF, busy=np.asarray(out["busy"], dtype=np.float64),
+            pkts_in=(admitted.sum(axis=0) * np.asarray(p.req_mb)
+                     * 1e6 / PKT_BYTES),
+            pkts_out=(served.sum(axis=0) * np.asarray(p.req_mb)
+                      * 1e6 / PKT_BYTES),
+            rtt_acc=np.asarray(out["rtt"], dtype=np.float64),
+            dropped=droppedF, energy=energyF,
+            retry_q=np.zeros((B, A)), dropped_slo=zB.copy(),
+            dropped_fault=zB.copy(), retried=zB.copy())
+        self.last_histories = (admitted, served)
+        self.last_fault_histories = None
+        return self._result(
+            trace, admitted, served,
+            completed=self._completed(served),
+            dropped=droppedF,
+            residual=queueF.sum(axis=-1),
+            energy=energyF, swaps=swapsF, elapsed=elapsed,
+            backend="pallas", telem=None,
+            dropped_slo=zB.copy(), dropped_fault=zB.copy(),
+            retried=zB.copy())

@@ -14,7 +14,9 @@ import pytest
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
 
-from benchmarks.run import check_out_target, is_row_list, main  # noqa: E402
+from benchmarks.run import (append_bench_row, amend_latest_row,  # noqa: E402
+                            check_out_target, is_row_list, latest_row,
+                            load_trajectory, main)
 
 
 ROWS = [{"name": "x", "us_per_call": 1.0, "derived": "d"}]
@@ -58,15 +60,18 @@ def test_check_out_target_refuses_foreign_schema(tmp_path, content):
 
 def test_bench_observe_document_schema():
     """The committed BENCH_observe.json must carry the overhead-gate
-    contract CI asserts on: per-engine walls and overheads, a gate block
-    naming the gated engines with a passing verdict, and the metrics
-    round-trip flag.  Catches schema drift between the benchmark and the
-    CI step that parses it."""
+    contract CI asserts on — in its *newest trajectory row*: per-engine
+    walls and overheads, a gate block naming the gated engines with a
+    passing verdict, and the metrics round-trip flag.  Catches schema
+    drift between the benchmark and the CI step that parses it."""
     path = os.path.join(os.path.dirname(__file__), "..",
                         "BENCH_observe.json")
     with open(path) as f:
-        doc = json.load(f)
-    assert not is_row_list(doc)          # keyed document, not a row list
+        raw = json.load(f)
+    assert isinstance(raw, list) and raw   # a trajectory, not a bare dict
+    assert not is_row_list(raw)            # ...with foreign (gate) keys,
+    doc = latest_row(path)                 # so --out still refuses it
+    assert doc == raw[-1]
     gate = doc["gate"]
     assert set(gate["gated_engines"]) == {"batch_numpy", "batch_jax"}
     assert gate["max_overhead"] == pytest.approx(0.05)
@@ -77,6 +82,65 @@ def test_bench_observe_document_schema():
         assert {"off", "counters", "full"} <= set(walls)
         assert all(w > 0.0 for w in walls.values())
     assert doc["metrics_roundtrip_ok"] is True
+
+
+def test_committed_bench_files_are_trajectories():
+    """Every committed BENCH_*.json is a row-list trajectory (the PR 8
+    migration) that the --out guard still refuses to clobber, and any
+    row appended after the migration carries a recorded_utc stamp."""
+    root = os.path.join(os.path.dirname(__file__), "..")
+    names = [n for n in sorted(os.listdir(root))
+             if n.startswith("BENCH_") and n.endswith(".json")]
+    assert names, "no BENCH_*.json trajectories committed"
+    for name in names:
+        path = os.path.join(root, name)
+        with open(path) as f:
+            raw = json.load(f)
+        assert isinstance(raw, list) and raw, name
+        rows = load_trajectory(path)
+        assert rows == raw, name
+        # migrated legacy snapshots (row 0) may predate timestamping;
+        # every post-migration append stamps recorded_utc
+        for r in rows[1:]:
+            assert "recorded_utc" in r, (name, sorted(r))
+        with pytest.raises(SystemExit, match="refusing to overwrite"):
+            check_out_target(path)
+
+
+def test_trajectory_append_and_legacy_migration(tmp_path):
+    """append_bench_row accretes timestamped rows; a legacy bare-dict
+    snapshot reads as a one-row trajectory and the next append preserves
+    it (the bench-trajectory bugfix: runs used to overwrite the file)."""
+    path = str(tmp_path / "BENCH_x.json")
+    assert load_trajectory(path) == []          # missing file
+    assert latest_row(path) is None
+
+    # legacy schema: one bare snapshot dict
+    with open(path, "w") as f:
+        json.dump({"runs": {"a": 1}}, f)
+    assert load_trajectory(path) == [{"runs": {"a": 1}}]
+
+    rows = append_bench_row(path, {"runs": {"a": 2}})
+    assert len(rows) == 2
+    assert rows[0] == {"runs": {"a": 1}}        # history preserved
+    assert latest_row(path)["runs"] == {"a": 2}
+    assert "recorded_utc" in latest_row(path)
+
+    append_bench_row(path, {"runs": {"a": 3}})
+    got = load_trajectory(path)
+    assert len(got) == 3
+    assert [r["runs"]["a"] for r in got] == [1, 2, 3]
+
+    # amending folds into the newest row without growing the trajectory
+    amend_latest_row(path, {"extra": True})
+    got = load_trajectory(path)
+    assert len(got) == 3 and got[-1]["extra"] is True
+    assert "extra" not in got[0]
+
+    # trajectory rows are not the harness's own --out schema
+    assert not is_row_list(got)
+    with pytest.raises(SystemExit, match="refusing to overwrite"):
+        check_out_target(path)
 
 
 def test_main_fails_fast_before_running_benchmarks(tmp_path):
