@@ -77,6 +77,14 @@ from repro.sim.traffic import BatchTrace, Trace
 # long-lived engines swept through many configurations stay bounded
 _SCAN_CACHE_MAX = 8
 
+# slot names of the tuple ``BatchSimEngine._scan_cache_sig`` returns,
+# in order.  A knob that retraces the scan must claim a slot (or join
+# an existing digest slot); tests/test_analysis.py enumerates these and
+# the RPR002 rule pass checks the construction stays complete.
+SCAN_SIG_FIELDS = ("tag", "T", "ci", "dt", "B", "D", "arrivals_ndim",
+                   "fault_key", "policy_digest", "balancer_digest",
+                   "config", "model", "slo")
+
 
 # ---------------------------------------------------------------------------
 # Platform: B concrete designs, stacked
@@ -783,7 +791,7 @@ class BatchSimEngine:
         else:
             pol_state0 = ()
 
-        def control(rates, guard, pol_state, ctl_flag, obs,
+        def control(rates, guard, pol_state, ctl_flag, obs,  # repro: traced
                     dead=None, stuck=None, consts=None):
             c = (consts if consts is not None
                  else {kk: jnp.asarray(vv) for kk, vv in cst.items()})
@@ -922,6 +930,28 @@ class BatchSimEngine:
         return (lb.mode, np.asarray(lb.membership).tobytes(),
                 np.asarray(lb.group_of).tobytes(),
                 np.asarray(lb.covered).tobytes())
+
+    def _scan_cache_sig(self, *, T, ci, dt, B, D, arrivals_ndim,
+                        fault_key, plan, slo):
+        """The ONE canonical scan-jit cache signature.
+
+        Every Python-level constant the traced ``run_scan`` closure
+        bakes in must be keyed here (``SCAN_SIG_FIELDS`` names the
+        slots; ``tests/test_analysis.py`` enumerates them and the
+        RPR002 rule pass checks completeness statically).  Keeping the
+        construction in a single helper means a future knob added to
+        the scan cannot be forgotten at one of several call sites."""
+        p, cfg, m = self.platform, self.config, self.platform.model
+        return ("scan", T, ci, dt, B, D, arrivals_ndim, fault_key,
+                self._policy_digest(plan), self._balancer_digest(),
+                (cfg.max_queue, cfg.dynamic_contention,
+                 cfg.noc_power_share),
+                (m.own_demand, m.tg_demand, m.noc.link_bw,
+                 m.noc.max_slowdown, m.noc.hop_latency,
+                 m.hop_latency_share,
+                 1.0 + m.hop_latency_share * m._ref_hops(), p.n_tg),
+                None if slo is None else (slo.on_kill, slo.recovers,
+                                          slo.deadline_s))
 
     def _cached_scan(self, sig, build):
         """Look up / build the jitted scan for an explicit signature.
@@ -1262,14 +1292,10 @@ class BatchSimEngine:
         # balancer layout, SLO mode and config scalars)
         fault_key = (has_tile, has_link, has_stuck, has_stuck_rate,
                      recover, drain, track, deadline_ticks, observing)
-        sig = ("scan", T, ci, dt, B, D, arrivals.ndim, fault_key,
-               self._policy_digest(plan), self._balancer_digest(),
-               (cfg.max_queue, cfg.dynamic_contention,
-                cfg.noc_power_share),
-               (own, tgd, link_bw, max_slow, hop_lat, hop_share, hopf0,
-                n_tg),
-               None if slo is None else (slo.on_kill, slo.recovers,
-                                         slo.deadline_s))
+        sig = self._scan_cache_sig(T=T, ci=ci, dt=dt, B=B, D=D,
+                                   arrivals_ndim=arrivals.ndim,
+                                   fault_key=fault_key, plan=plan,
+                                   slo=slo)
 
         def build():
             if D <= 1:
