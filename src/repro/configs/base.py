@@ -228,7 +228,7 @@ def shapes_for(cfg: ArchConfig) -> Dict[str, ShapeConfig]:
 # Registry
 # ---------------------------------------------------------------------------
 
-_REGISTRY: Dict[str, Callable[[], ArchConfig]] = {}
+_REGISTRY: Dict[str, Callable[[], ArchConfig]] = {}  # repro: noqa[RPR003] registry, not a cache: one entry per @register decorator in source, bounded at import time
 
 
 def register(name: str):
