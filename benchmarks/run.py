@@ -9,11 +9,9 @@ measured value.
 
 ``--out`` refuses to overwrite an existing file whose JSON schema it
 does not recognize (anything that is not a row list) — the trajectory
-files the individual benchmarks own (``BENCH_dse.json``,
-``BENCH_sim.json``, ``BENCH_sim_batch.json``, ``BENCH_sim_faults.json``,
-``BENCH_observe.json``, ``BENCH_shard.json``) carry a different row
-schema, and a mistyped ``--out BENCH_dse.json`` used to silently clobber
-them.  Pass ``--force`` to overwrite anyway.
+files the individual benchmarks own (see :data:`TRAJECTORY_FILES`)
+carry a different row schema, and a mistyped ``--out BENCH_dse.json``
+used to silently clobber them.  Pass ``--force`` to overwrite anyway.
 
 **Trajectory files**: each ``BENCH_*.json`` is a JSON *list* of
 timestamped snapshot rows (newest last) — one row appended per benchmark
@@ -39,6 +37,17 @@ if _ROOT not in sys.path:
     sys.path.insert(0, _ROOT)
 
 ROW_KEYS = {"name", "us_per_call", "derived"}
+
+# The trajectory files the individual benchmarks own (append-only row
+# lists, newest last).  This is the canonical schema constant: the
+# static-analysis gate (``python -m repro.analysis --bench``) reads it
+# to assert every file exists and its latest row still passes the
+# enforced gates recorded inside it, so a regressed append cannot land
+# silently.  Add new ``BENCH_*.json`` files HERE, not just in the
+# benchmark module that writes them.
+TRAJECTORY_FILES = ("BENCH_dse.json", "BENCH_sim.json",
+                    "BENCH_sim_batch.json", "BENCH_sim_faults.json",
+                    "BENCH_observe.json", "BENCH_shard.json")
 
 
 def is_row_list(doc) -> bool:
