@@ -1,0 +1,119 @@
+"""BENCH001 — benchmark trajectory guard.
+
+The repo tracks performance as append-only trajectory files
+(``BENCH_*.json`` row lists, see :mod:`benchmarks.run`).  This check —
+run as part of the static-analysis CI gate — asserts that the *latest*
+row of every known trajectory still passes the gates recorded inside
+it: each ``gates``/``gate`` entry whose dict carries
+``enforced: true`` must also carry ``pass: true`` (or
+``ok``/``passed``).  A regression someone appended but did not fix
+fails the gate exactly like a new lint finding.
+
+The list of trajectory files is the linter-checked schema constant
+``benchmarks.run.TRAJECTORY_FILES``; when ``benchmarks/`` is not
+importable (installed package, trimmed checkout) a glob fallback over
+``BENCH_*.json`` keeps the check meaningful.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.findings import Finding
+
+RULE_ID = "BENCH001"
+SUMMARY = "latest BENCH_*.json rows must pass their enforced gates"
+
+_FALLBACK_GLOB = "BENCH_*.json"
+
+
+def _trajectory_files(repo_root: Path) -> List[Path]:
+    run_py = repo_root / "benchmarks" / "run.py"
+    if run_py.exists():
+        try:
+            import importlib.util
+            spec = importlib.util.spec_from_file_location(
+                "_repro_bench_run", run_py)
+            mod = importlib.util.module_from_spec(spec)
+            spec.loader.exec_module(mod)
+            names = getattr(mod, "TRAJECTORY_FILES", None)
+            if names:
+                return [repo_root / n for n in names]
+        except Exception:
+            pass
+    return sorted(repo_root.glob(_FALLBACK_GLOB))
+
+
+def _latest_row(path: Path) -> Optional[Dict]:
+    try:
+        rows = json.loads(path.read_text())
+    except (json.JSONDecodeError, OSError):
+        return None
+    if isinstance(rows, list) and rows and \
+            all(isinstance(r, dict) for r in rows):
+        return rows[-1]
+    return None
+
+
+def _gate_entries(row: Dict) -> Dict[str, Dict]:
+    """Gate dicts of a snapshot row.
+
+    Both shapes in the wild are accepted: ``row["gate"]`` as a single
+    gate dict carrying ``pass`` (BENCH_observe/BENCH_shard), and
+    ``row["gates"]`` as a name->gate mapping.
+    """
+    out: Dict[str, Dict] = {}
+    g = row.get("gate")
+    if isinstance(g, dict):
+        if "pass" in g or "ok" in g or "passed" in g:
+            out["gate"] = g
+        else:
+            for name, entry in g.items():
+                if isinstance(entry, dict):
+                    out[name] = entry
+    gs = row.get("gates")
+    if isinstance(gs, dict):
+        for name, entry in gs.items():
+            if isinstance(entry, dict):
+                out[name] = entry
+    return out
+
+
+def _gate_ok(entry: Dict) -> Optional[bool]:
+    for key in ("pass", "ok", "passed"):
+        if key in entry:
+            return bool(entry[key])
+    return None
+
+
+def check_trajectories(repo_root: Path) -> List[Finding]:
+    findings: List[Finding] = []
+    files = _trajectory_files(repo_root)
+    for path in files:
+        rel = path.name
+        if not path.exists():
+            findings.append(Finding(
+                RULE_ID, rel, 1,
+                f"trajectory file {rel} listed in TRAJECTORY_FILES is "
+                "missing — regenerate it or update the constant"))
+            continue
+        row = _latest_row(path)
+        if row is None:
+            findings.append(Finding(
+                RULE_ID, rel, 1,
+                f"{rel} is not a row-list trajectory (see "
+                "benchmarks/run.py schema)"))
+            continue
+        for name, entry in _gate_entries(row).items():
+            # a gate without an `enforced` field is enforced by default
+            # (BENCH_observe); `enforced: false` is advisory-only
+            if not entry.get("enforced", True):
+                continue
+            ok = _gate_ok(entry)
+            if ok is False:
+                findings.append(Finding(
+                    RULE_ID, rel, 1,
+                    f"latest row of {rel}: enforced gate `{name}` is "
+                    "failing — the last appended benchmark regressed"))
+    return findings

@@ -1,0 +1,151 @@
+"""Analysis driver: parse modules once, run every rule, collect findings.
+
+Each rule module exposes ``RULE_ID``, ``SUMMARY`` and
+``check(ctx: ModuleContext) -> list[Finding]`` plus optionally
+``check_project(ctxs: list[ModuleContext]) -> list[Finding]`` for
+cross-module rules (RPR006 parity needs several files at once).
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, Iterator, List, Optional, Sequence
+
+from repro.analysis import astutil
+from repro.analysis.findings import (Finding, apply_noqa,
+                                     assign_fingerprints,
+                                     extract_comments,
+                                     split_by_baseline)
+
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", "build", "dist",
+              ".eggs", "node_modules"}
+
+
+def iter_python_files(paths: Sequence[Path]) -> Iterator[Path]:
+    seen = set()
+    for p in paths:
+        if p.is_file() and p.suffix == ".py":
+            rp = p.resolve()
+            if rp not in seen:
+                seen.add(rp)
+                yield p
+        elif p.is_dir():
+            for f in sorted(p.rglob("*.py")):
+                if any(part in _SKIP_DIRS for part in f.parts):
+                    continue
+                rf = f.resolve()
+                if rf not in seen:
+                    seen.add(rf)
+                    yield f
+
+
+@dataclass
+class ModuleContext:
+    """One parsed module plus the shared per-module indices rules use."""
+    path: Path                # as given (absolute or relative)
+    relpath: str              # repo-relative posix path used in findings
+    source: str
+    tree: ast.Module
+    lines: List[str]
+    imports: astutil.ImportMap
+    funcindex: astutil.FunctionIndex
+    _trace: Optional[astutil.TraceIndex] = field(default=None, repr=False)
+
+    @property
+    def traceindex(self) -> astutil.TraceIndex:
+        if self._trace is None:
+            self._trace = astutil.TraceIndex(
+                self.tree, self.imports, self.funcindex, self.lines)
+        return self._trace
+
+    def finding(self, rule: str, node_or_line, message: str) -> Finding:
+        line = (node_or_line if isinstance(node_or_line, int)
+                else getattr(node_or_line, "lineno", 1))
+        return Finding(rule=rule, path=self.relpath, line=line,
+                       message=message)
+
+
+def load_module(path: Path, root: Path) -> Optional[ModuleContext]:
+    try:
+        source = path.read_text()
+        tree = ast.parse(source, filename=str(path))
+    except (SyntaxError, UnicodeDecodeError, OSError):
+        return None
+    try:
+        rel = path.resolve().relative_to(root.resolve()).as_posix()
+    except ValueError:
+        rel = path.as_posix()
+    return ModuleContext(
+        path=path, relpath=rel, source=source, tree=tree,
+        lines=source.splitlines(),
+        imports=astutil.ImportMap(tree),
+        funcindex=astutil.FunctionIndex(tree))
+
+
+@dataclass
+class AnalysisReport:
+    findings: List[Finding]          # fingerprinted, noqa applied
+    new: List[Finding]               # not in baseline, not suppressed
+    baselined: List[Finding]
+    suppressed: List[Finding]
+    modules: int
+
+    @property
+    def exit_code(self) -> int:
+        return 1 if self.new else 0
+
+    def to_dict(self) -> Dict[str, object]:
+        return {
+            "modules": self.modules,
+            "counts": {
+                "new": len(self.new),
+                "baselined": len(self.baselined),
+                "suppressed": len(self.suppressed),
+            },
+            "new": [f.to_dict() for f in self.new],
+            "baselined": [f.to_dict() for f in self.baselined],
+            "suppressed": [
+                dict(f.to_dict(), justification=f.justification)
+                for f in self.suppressed
+            ],
+        }
+
+
+def analyze_paths(paths: Sequence[Path], *, root: Optional[Path] = None,
+                  baseline: Optional[Iterable[str]] = None,
+                  rules: Optional[Sequence[object]] = None,
+                  ) -> AnalysisReport:
+    from repro.analysis.rules import get_rules
+
+    root = root or Path.cwd()
+    active = list(rules) if rules is not None else get_rules()
+    ctxs: List[ModuleContext] = []
+    for f in iter_python_files(list(paths)):
+        ctx = load_module(f, root)
+        if ctx is not None:
+            ctxs.append(ctx)
+
+    raw: List[Finding] = []
+    for rule in active:
+        per_module = getattr(rule, "check", None)
+        if per_module is not None:
+            for ctx in ctxs:
+                raw.extend(per_module(ctx))
+        project_wide = getattr(rule, "check_project", None)
+        if project_wide is not None:
+            raw.extend(project_wide(ctxs))
+
+    lines_by_path = {c.relpath: c.lines for c in ctxs}
+    comments_by_path = {c.relpath: extract_comments(c.source)
+                        for c in ctxs}
+    findings = assign_fingerprints(raw, lines_by_path)
+    findings = apply_noqa(findings, comments_by_path)
+    # RPR000 meta findings produced by apply_noqa need fingerprints too
+    findings = assign_fingerprints(findings, lines_by_path)
+
+    accepted = set(baseline or ())
+    new, old = split_by_baseline(findings, accepted)
+    suppressed = [f for f in findings if f.suppressed]
+    return AnalysisReport(findings=findings, new=new, baselined=old,
+                          suppressed=suppressed, modules=len(ctxs))

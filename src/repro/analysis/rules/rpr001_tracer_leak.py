@@ -1,0 +1,49 @@
+"""RPR001 — tracer leak.
+
+Inside a function reached by ``jax.jit`` / ``lax.scan`` / ``vmap`` /
+``shard_map`` (see :class:`repro.analysis.astutil.TraceIndex`), values
+derived from the traced positional arguments are *tracers*: Python
+``if``/``while`` on them bakes one branch into the compiled artifact
+(or raises ``TracerBoolConversionError``), ``bool()``/``int()``/
+``float()``/``.item()`` force a device sync, and ``np.*`` calls
+materialize the tracer host-side and silently constant-fold it.
+
+Why it matters here: PR 7's zero-perturbation contract — ``observe=``
+must never change simulated dynamics — holds only if observation code
+inside the scan never branches on traced state; a single host branch
+also retraces per Python value, defeating the PR 8 jit cache.
+
+Keyword-only parameters are treated as static (this codebase binds
+compile-time scalars through ``functools.partial`` keywords), as are
+``static_argnames``/``static_argnums``.  Functions entered via
+``pallas_call`` are excluded — RPR005 owns kernel bodies.
+
+Opt-in: mark closures the call graph cannot follow with
+``# repro: traced`` on the ``def`` line.  Suppress a deliberate host
+read with ``# repro: noqa[RPR001] <why>``.
+"""
+from __future__ import annotations
+
+from typing import List
+
+from repro.analysis import astutil
+from repro.analysis.engine import ModuleContext
+from repro.analysis.findings import Finding
+
+RULE_ID = "RPR001"
+SUMMARY = ("Python control flow / host coercion on traced values inside "
+           "jit/scan-reached functions")
+
+
+def check(ctx: ModuleContext) -> List[Finding]:
+    out: List[Finding] = []
+    for rec, info in ctx.traceindex.traced.items():
+        if info.kind == "pallas_call":
+            continue                    # RPR005 owns kernel bodies
+        _, flags = astutil.taint_function(rec, info, ctx.imports)
+        for flag in flags:
+            out.append(ctx.finding(
+                RULE_ID, flag.node,
+                f"in `{rec.qualname}` (traced via {info.via}): "
+                f"{flag.detail}"))
+    return out

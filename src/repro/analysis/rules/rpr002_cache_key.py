@@ -1,0 +1,210 @@
+"""RPR002 — jit-cache-key completeness.
+
+A hand-rolled jit cache — a lookup like ``self._cached_scan(sig,
+build)`` where ``build`` returns a jitted closure — is only sound if
+``sig`` keys **every** Python-level value the traced function bakes in.
+PR 8 root-caused exactly this bug: the original key was ``(T, ci,
+fault_flag)`` and collided on ``dt``, controller tuning, balancer
+layout, SLO mode and config scalars, silently reusing stale compiled
+scans.
+
+The check, per cache call site:
+
+1. *Key closure* — names reachable from the key expression.  Expansion
+   follows tuple/list literals (keying a tuple keys its elements),
+   helper calls (passing ``x`` to a ``*_sig``/digest helper counts as
+   keying ``x``) and plain aliases, but **stops at lossy expressions**:
+   keying ``deadline_ticks = slo.deadline_s / dt`` does not key ``dt``
+   (the ``None`` arm would erase it — the PR 8 bug shape).
+2. *Required set* — free variables of the traced function the builder
+   returns (nested defs included; frees that resolve to sibling local
+   defs are expanded recursively).
+3. A free is satisfied if it is in the key closure, or every
+   derivation root is ``self`` / a module-level constant / itself
+   satisfied.  ``self``-rooted values are exempt because the cache
+   dict is per-instance and every mutable ``self`` ingredient must be
+   digested explicitly (``_policy_digest`` / ``_balancer_digest`` are
+   in the key); values rooted in a non-``self`` parameter of the
+   enclosing function (``trace`` → ``dt``) must appear in the key.
+
+Cache call sites are recognized by name: a call whose callee's last
+component contains ``cache`` (``_cached_scan``, ``cache_lookup``, …)
+with one argument resolving to a local builder function and another
+being the key expression.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis import astutil
+from repro.analysis.engine import ModuleContext
+from repro.analysis.findings import Finding
+
+RULE_ID = "RPR002"
+SUMMARY = ("hand-rolled jit caches must key every non-tensor value "
+           "reaching the traced function")
+
+
+def _key_closure(expr: ast.AST, assigns: Dict[str, List[ast.expr]],
+                 ) -> Set[str]:
+    """Names keyed by ``expr`` (transitive through injective shapes)."""
+    keyed: Set[str] = set()
+    work: List[ast.AST] = [expr]
+    seen_names: Set[str] = set()
+    while work:
+        e = work.pop()
+        if isinstance(e, ast.Name):
+            if e.id in seen_names:
+                continue
+            seen_names.add(e.id)
+            keyed.add(e.id)
+            for rhs in assigns.get(e.id, ()):
+                work.append(rhs)
+        elif isinstance(e, (ast.Tuple, ast.List, ast.Set)):
+            work.extend(e.elts)
+        elif isinstance(e, ast.Dict):
+            work.extend(k for k in e.keys if k is not None)
+            work.extend(e.values)
+        elif isinstance(e, ast.Call):
+            # digest/helper semantics: every argument fed to the helper
+            # is considered keyed (the helper exists to fold it in)
+            work.extend(e.args)
+            work.extend(kw.value for kw in e.keywords)
+        elif isinstance(e, ast.Starred):
+            work.append(e.value)
+        elif isinstance(e, ast.IfExp):
+            # both arms of a conditional ALIAS (x if c else y) are keyed,
+            # but the test is not necessarily recoverable — treat as
+            # lossy for the test, injective for the arms only when both
+            # are names/containers; simplest sound choice: stop here.
+            pass
+        # every other expression shape (BinOp, Attribute, Subscript,
+        # Compare, Constant, ...) is lossy: stop.
+    return keyed
+
+
+def _covered(name: str, keyed: Set[str],
+             assigns: Dict[str, List[ast.expr]], params: Set[str],
+             memo: Dict[str, bool], visiting: Set[str]) -> bool:
+    if name in keyed or name == "self":
+        return True
+    if name in memo:
+        return memo[name]
+    if name in visiting:
+        return True                      # cycle: optimistic
+    if name in params:
+        memo[name] = False               # un-keyed non-self parameter
+        return False
+    rhss = assigns.get(name)
+    if not rhss:
+        memo[name] = True                # module-level / import / builtin
+        return True
+    visiting.add(name)
+    ok = all(
+        _covered(r, keyed, assigns, params, memo, visiting)
+        for rhs in rhss for r in sorted(astutil.name_loads(rhs)))
+    visiting.discard(name)
+    memo[name] = ok
+    return ok
+
+
+def _uncovered_roots(name: str, assigns: Dict[str, List[ast.expr]],
+                     params: Set[str], keyed: Set[str]) -> Set[str]:
+    """Human-readable culprit roots for the finding message."""
+    bad: Set[str] = set()
+    seen: Set[str] = set()
+    work = [name]
+    while work:
+        n = work.pop()
+        if n in seen or n in keyed or n == "self":
+            continue
+        seen.add(n)
+        if n in params:
+            bad.add(n)
+            continue
+        for rhs in assigns.get(n, ()):
+            work.extend(astutil.name_loads(rhs))
+    return bad
+
+
+def _resolve_builder(arg: ast.AST, scope, index: astutil.FunctionIndex,
+                     ) -> Optional[astutil.FunctionRecord]:
+    if isinstance(arg, ast.Name):
+        rec = index.lookup(scope, arg.id)
+        if rec is not None:
+            return rec
+    return None
+
+
+def _traced_from_builder(builder: astutil.FunctionRecord,
+                         ctx: ModuleContext,
+                         ) -> List[astutil.FunctionRecord]:
+    """Functions the builder's return statements jit-wrap."""
+    trace = ctx.traceindex
+    out: List[astutil.FunctionRecord] = []
+    for node in ast.walk(builder.node):
+        if isinstance(node, ast.Return) and node.value is not None:
+            rec = trace._resolve_fn_arg(node.value, builder)
+            if rec is not None and rec not in out:
+                out.append(rec)
+    return out
+
+
+def check(ctx: ModuleContext) -> List[Finding]:
+    out: List[Finding] = []
+    index = ctx.funcindex
+    for call in ast.walk(ctx.tree):
+        if not isinstance(call, ast.Call) or len(call.args) < 2:
+            continue
+        callee = astutil.dotted_name(call.func)
+        if not callee or "cache" not in callee.rsplit(".", 1)[-1].lower():
+            continue
+        scope = ctx.traceindex._enclosing_function(call)
+        if scope is None:
+            continue
+        builder = None
+        key_expr = None
+        for arg in call.args:
+            rec = _resolve_builder(arg, scope, index)
+            if rec is not None and builder is None and \
+                    _traced_from_builder(rec, ctx):
+                builder = rec
+            elif key_expr is None:
+                key_expr = arg
+        if builder is None or key_expr is None:
+            continue
+
+        assigns = astutil.assignments_of(scope.node)
+        params = set(scope.all_params()) - {"self", "cls"}
+        keyed = _key_closure(key_expr, assigns)
+
+        # required frees: traced fns returned by the builder, expanding
+        # frees that resolve to sibling local defs (lb_split, voltage2)
+        required: Set[str] = set()
+        work = list(_traced_from_builder(builder, ctx))
+        seen_fns = set()
+        while work:
+            fn = work.pop()
+            if fn in seen_fns:
+                continue
+            seen_fns.add(fn)
+            for free in astutil.free_names(fn):
+                sub = index.lookup(scope, free)
+                if sub is not None and sub.parent is scope:
+                    work.append(sub)
+                else:
+                    required.add(free)
+
+        memo: Dict[str, bool] = {}
+        for free in sorted(required):
+            if not _covered(free, keyed, assigns, params, memo, set()):
+                roots = _uncovered_roots(free, assigns, params, keyed)
+                via = (f" (derived from parameter "
+                       f"{', '.join(sorted(roots))})" if roots else "")
+                out.append(ctx.finding(
+                    RULE_ID, call,
+                    f"`{free}` is baked into the traced function built "
+                    f"by `{builder.name}` but missing from the cache "
+                    f"key{via} — stale compilations will be reused"))
+    return out

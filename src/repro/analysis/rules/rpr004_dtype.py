@@ -1,0 +1,123 @@
+"""RPR004 — dtype discipline.
+
+The repo's correctness story is differential: the NumPy ``SimEngine``
+and the DSE scoring path (``_eval_grid`` / ``pareto_front``) are the
+float64 *reference*; jax/Pallas backends run float32 and are validated
+against it at f32 tolerance.  Two drifts break that story silently:
+
+* an f32 literal/cast sneaking into the f64 reference set narrows the
+  reference itself, so the tolerance check compares f32 against f32
+  and stops catching backend bugs;
+* a float64 constant fed **directly** to a ``jnp``/``jax``/``lax`` op
+  on an accelerator path either upcasts the whole computation (2x
+  memory/bandwidth on the serving target) or is silently truncated
+  under default ``jax_enable_x64=False`` — either way the author's
+  intent is not what runs.
+
+Host-side staging like ``np.asarray(x, dtype=np.float64)`` before a
+device put is fine and not flagged; ``.astype(jnp.float64)`` and
+``jnp.zeros(..., dtype=jnp.float64)`` are.
+
+The f64 reference set is declared in :data:`F64_REFERENCE` —
+(path-suffix, function-qualname-or-None-for-whole-module) pairs.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Tuple
+
+from repro.analysis import astutil
+from repro.analysis.engine import ModuleContext
+from repro.analysis.findings import Finding
+
+RULE_ID = "RPR004"
+SUMMARY = ("no f32 in the f64 reference set; no silent f64 on "
+           "jnp/jax/lax call paths")
+
+# (relpath suffix, qualname prefix or None = entire module)
+F64_REFERENCE: Tuple[Tuple[str, Optional[str]], ...] = (
+    ("sim/engine.py", None),
+    ("core/dse.py", "_eval_grid"),
+    ("core/dse.py", "pareto_front"),
+)
+
+_F32_TOKENS = {"float32"}
+_F64_TOKENS = {"float64"}
+_JAX_ROOTS = ("jax", "jax.numpy", "jax.lax")
+
+
+def _dtype_token(node: ast.AST, imports: astutil.ImportMap,
+                 ) -> Optional[str]:
+    """'float32'/'float64' if the node names that dtype, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        if node.value in _F32_TOKENS | _F64_TOKENS:
+            return node.value
+        return None
+    dotted = imports.normalize(astutil.dotted_name(node))
+    if dotted:
+        last = dotted.rsplit(".", 1)[-1]
+        if last in _F32_TOKENS | _F64_TOKENS:
+            return last
+    return None
+
+
+def _reference_scope(ctx: ModuleContext, node: ast.AST) -> Optional[str]:
+    """Qualname of the f64 reference scope containing node, or None."""
+    for suffix, qual in F64_REFERENCE:
+        if not ctx.relpath.endswith(suffix):
+            continue
+        if qual is None:
+            return f"module {ctx.relpath}"
+        rec = ctx.traceindex._enclosing_function(node)
+        while rec is not None:
+            if rec.qualname == qual or \
+                    rec.qualname.startswith(qual + "."):
+                return qual
+            rec = rec.parent
+    return None
+
+
+def check(ctx: ModuleContext) -> List[Finding]:
+    out: List[Finding] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        dtype_args = [a for a in list(node.args)
+                      + [kw.value for kw in node.keywords]
+                      if _dtype_token(a, ctx.imports) is not None]
+        if not dtype_args:
+            continue
+        tokens = {_dtype_token(a, ctx.imports) for a in dtype_args}
+        ref = _reference_scope(ctx, node)
+        if ref is not None:
+            if tokens & _F32_TOKENS:
+                out.append(ctx.finding(
+                    RULE_ID, node,
+                    f"float32 introduced inside the f64 reference "
+                    f"scope ({ref}) — the reference must stay float64 "
+                    "so differential tolerance checks keep meaning"))
+            continue
+        if tokens & _F64_TOKENS:
+            callee = ctx.imports.normalize(
+                astutil.dotted_name(node.func))
+            is_jax_call = bool(callee) and any(
+                callee == r or callee.startswith(r + ".")
+                for r in _JAX_ROOTS)
+            is_astype = (isinstance(node.func, ast.Attribute)
+                         and node.func.attr == "astype"
+                         and any(
+                             (astutil.dotted_name(a) or "").split(".")[0]
+                             in ("jnp", "jax")
+                             or (ctx.imports.normalize(
+                                 astutil.dotted_name(a)) or ""
+                                 ).startswith("jax")
+                             for a in dtype_args))
+            if is_jax_call or is_astype:
+                out.append(ctx.finding(
+                    RULE_ID, node,
+                    f"float64 requested directly in "
+                    f"`{callee or '.astype'}` on a jax path — upcasts "
+                    "the accelerator computation (or is silently "
+                    "truncated without jax_enable_x64); stage "
+                    "host-side with np.asarray instead"))
+    return out

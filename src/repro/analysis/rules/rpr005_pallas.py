@@ -1,0 +1,105 @@
+"""RPR005 — Pallas kernel rules.
+
+``kernels/tick_sim.py`` works because its author remembered three
+non-obvious Pallas constraints; this rule remembers them for everyone
+else.  For every function passed (possibly through
+``functools.partial``) as the kernel of a ``pallas_call``:
+
+* **No array-valued closures.**  A kernel body cannot capture a traced
+  or array value from an enclosing scope — arrays must travel as
+  kernel operands (this repo's idiom: replicated "extras" inputs).
+  Flagged: any free variable of the kernel assigned in an enclosing
+  function from an array-producing call (``jnp.*``, ``np.asarray`` /
+  ``array`` / ``zeros`` / ``ones`` / ``arange``, …).  Python scalars
+  bound through ``partial`` keywords are fine and idiomatic.
+* **No ``np.*`` calls in the body.**  NumPy executes host-side at trace
+  time; inside a kernel that silently constant-folds (or crashes on a
+  ref).  Exempt: dtype introspection — ``np.issubdtype``, dtype
+  constructors, ``np.ndim`` on static metadata.
+* **No Python branching on ref-derived values.**  ``if``/``while`` on
+  data loaded from a ref must become ``pl.when`` / ``jnp.where``;
+  branching on static metadata (``.shape``/``.dtype``, keyword-only
+  partial params like ``max_q``) is fine and untainted.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List, Set
+
+from repro.analysis import astutil
+from repro.analysis.engine import ModuleContext
+from repro.analysis.findings import Finding
+
+RULE_ID = "RPR005"
+SUMMARY = ("pallas kernels: no array closures, no np.* in body, no "
+           "Python branches on refs")
+
+_NP_WHITELIST = {"issubdtype", "ndim", "result_type", "dtype", "bool_",
+                 "float16", "float32", "float64", "int8", "int16",
+                 "int32", "int64", "uint8", "uint32", "shape"}
+
+_ARRAY_PRODUCERS = {"asarray", "array", "zeros", "ones", "arange",
+                    "full", "empty", "linspace", "stack", "concatenate",
+                    "eye", "zeros_like", "ones_like", "full_like",
+                    "broadcast_to"}
+
+
+def _array_valued(rhs: ast.AST, imports: astutil.ImportMap) -> bool:
+    if isinstance(rhs, ast.Call):
+        callee = imports.normalize(astutil.dotted_name(rhs.func))
+        if not callee:
+            return False
+        root = callee.split(".")[0]
+        last = callee.rsplit(".", 1)[-1]
+        if root in ("jax",) and last not in ("jit",):
+            return True
+        if callee.startswith("jax.numpy") or callee.startswith("numpy"):
+            return last in _ARRAY_PRODUCERS
+    return False
+
+
+def check(ctx: ModuleContext) -> List[Finding]:
+    out: List[Finding] = []
+    kernels = [(rec, info) for rec, info in ctx.traceindex.traced.items()
+               if info.kind == "pallas_call"]
+    for rec, info in kernels:
+        # ---- array-valued closures
+        enclosing = rec.parent
+        if enclosing is not None:
+            assigns = astutil.assignments_of(enclosing.node)
+            for free in sorted(astutil.free_names(rec)):
+                for rhs in assigns.get(free, ()):
+                    if _array_valued(rhs, ctx.imports):
+                        out.append(ctx.finding(
+                            RULE_ID, rec.node,
+                            f"kernel `{rec.qualname}` closes over "
+                            f"array-valued `{free}` (assigned at line "
+                            f"{rhs.lineno}) — pass it as a kernel "
+                            "operand (replicated input) instead"))
+                        break
+
+        # ---- np.* calls in body
+        for node in ast.walk(rec.node):
+            if not isinstance(node, ast.Call):
+                continue
+            callee = ctx.imports.normalize(
+                astutil.dotted_name(node.func))
+            if callee and (callee == "numpy"
+                           or callee.startswith("numpy.")):
+                fn = callee.rsplit(".", 1)[-1]
+                if fn not in _NP_WHITELIST:
+                    out.append(ctx.finding(
+                        RULE_ID, node,
+                        f"`np.{fn}` inside kernel `{rec.qualname}` "
+                        "executes host-side at trace time — use jnp "
+                        "or hoist out of the kernel"))
+
+        # ---- Python branches / coercions on ref-derived values
+        _, flags = astutil.taint_function(rec, info, ctx.imports)
+        for flag in flags:
+            if flag.reason in ("branch", "coerce", "assert"):
+                out.append(ctx.finding(
+                    RULE_ID, flag.node,
+                    f"in kernel `{rec.qualname}`: {flag.detail} — "
+                    "use pl.when / jnp.where"))
+    return out
