@@ -189,6 +189,60 @@ def soc_dse_islands():
              f"best_rates={ {k: round(v, 2) for k, v in best.rates.items()} }")]
 
 
+def soc_dse_physical():
+    """Physical-DVFS sweep throughput: the dense ``soc_dse_batch`` grid
+    re-swept with a two-node tech axis (45/16 nm ITRS), timed against a
+    back-to-back linear sweep of the same grid.  The V^2 f evaluation is
+    three extra broadcast multiply-adds per point, so the gate —
+    **enforced** in CI via the trajectory guard — requires the physical
+    sweep to sustain >= 0.5x the linear sweep's points/second."""
+    m = SoCPerfModel()
+    wls = [AccelWorkload("dfsin", *CHSTONE["dfsin"]),
+           AccelWorkload("gsm", *CHSTONE["gsm"])]
+    axes = dict(ks=(1, 2, 4), acc_rates=TILE_LADDER.levels(),
+                noc_rates=NOC_LADDER.levels(),
+                tg_rates=TILE_LADDER.levels()[::2], n_tg=4)
+
+    t0 = time.perf_counter()
+    lin = grid_sweep(m, wls, **axes)
+    lin_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    res = grid_sweep(m, wls, **axes, tech_node=(45, 16))
+    phys_s = time.perf_counter() - t0
+
+    pps_lin = len(lin) / lin_s
+    pps_phys = len(res) / phys_s
+    ratio = pps_phys / pps_lin
+    best = res.design_point(int(res.topk_indices(1, "energy_per_unit")[0]))
+
+    from benchmarks.run import amend_latest_row
+    amend_latest_row(BENCH_JSON, {
+        "physical_dvfs": {
+            "tech_axis": [list(t) for _, ax in res.axes if _ == "tech"
+                          for t in ax],
+            "points": len(res),
+            "sweep_seconds": phys_s,
+            "points_per_sec": pps_phys,
+            "linear_points_per_sec": pps_lin,
+            "best_energy": {"tech": list(best.tech),
+                            "rates": best.rates,
+                            "energy_per_unit": best.energy_per_unit},
+        },
+        "gates": {
+            "physical_dvfs_throughput": {
+                "pass": bool(ratio >= 0.5),
+                "ratio_vs_linear": ratio,
+                "min_ratio": 0.5,
+                "enforced": True,
+            },
+        },
+    })
+    return [("dse_grid_sweep_physical", phys_s * 1e6,
+             f"points={len(res)} pps={pps_phys:,.0f} "
+             f"ratio_vs_linear={ratio:.2f} "
+             f"best_tech={best.tech} e={best.energy_per_unit:.3f}")]
+
+
 def pod_strategy_ranking():
     rows = []
     for arch, shape in [("granite-8b", "train_4k"),
@@ -218,4 +272,4 @@ def pod_strategy_ranking():
 
 def run():
     return (soc_dse() + soc_dse_batch() + soc_dse_islands()
-            + pod_strategy_ranking())
+            + soc_dse_physical() + pod_strategy_ranking())

@@ -27,6 +27,7 @@ import argparse
 import json
 import os
 import sys
+import tempfile
 from datetime import datetime, timezone
 
 # `python benchmarks/run.py` puts benchmarks/ (not the repo root) on
@@ -58,23 +59,75 @@ def is_row_list(doc) -> bool:
                     for r in doc))
 
 
+def _warn(msg):
+    print(f"benchmarks/run.py: {msg}", file=sys.stderr)
+
+
+def _salvage_rows(text):
+    """Recover the complete row objects from a corrupt (typically
+    truncated mid-write) trajectory document.
+
+    Walks the text with ``JSONDecoder.raw_decode`` from the opening
+    ``[``, collecting every complete dict until the first undecodable
+    span — a half-written trailing row is dropped, everything before it
+    survives.
+    """
+    dec = json.JSONDecoder()
+    i = text.find("[")
+    if i < 0:
+        return []
+    i += 1
+    rows = []
+    n = len(text)
+    while True:
+        while i < n and text[i] in " \t\r\n,]":
+            i += 1
+        if i >= n:
+            break
+        try:
+            obj, i = dec.raw_decode(text, i)
+        except ValueError:
+            break
+        if isinstance(obj, dict):
+            rows.append(obj)
+    return rows
+
+
 def load_trajectory(path):
     """Read a ``BENCH_*.json`` trajectory as a list of snapshot rows.
 
-    Missing/empty/corrupt files read as an empty trajectory; a legacy
-    bare-dict snapshot (the pre-trajectory schema) reads as a one-row
-    trajectory so old committed files keep their history when the next
-    run appends to them.
+    Missing/empty files read as an empty trajectory; a legacy bare-dict
+    snapshot (the pre-trajectory schema) reads as a one-row trajectory
+    so old committed files keep their history when the next run appends
+    to them.  A corrupt/partially-written file does NOT read as empty —
+    that used to silently drop the whole history on the next append —
+    instead the complete leading rows are salvaged (and malformed
+    non-dict rows skipped) with a warning on stderr.
     """
     try:
         with open(path) as f:
-            doc = json.load(f)
-    except (OSError, ValueError):
+            text = f.read()
+    except OSError:
         return []
+    if not text.strip():
+        return []
+    try:
+        doc = json.loads(text)
+    except ValueError:
+        rows = _salvage_rows(text)
+        _warn(f"{path}: corrupt/partially-written trajectory; salvaged "
+              f"{len(rows)} complete row(s), skipping the rest")
+        return rows
     if isinstance(doc, dict):
         return [doc]
     if isinstance(doc, list):
-        return [r for r in doc if isinstance(r, dict)]
+        good = [r for r in doc if isinstance(r, dict)]
+        if len(good) != len(doc):
+            _warn(f"{path}: skipped {len(doc) - len(good)} malformed "
+                  "(non-dict) trajectory row(s)")
+        return good
+    _warn(f"{path}: unrecognized trajectory schema "
+          f"({type(doc).__name__}); reading as empty")
     return []
 
 
@@ -89,21 +142,38 @@ def latest_row(path):
     return rows[-1] if rows else None
 
 
+def _write_trajectory(path, rows):
+    """Write a trajectory atomically: serialize to a temp file in the
+    same directory, then ``os.replace`` over the target.  A crash (or a
+    concurrent reader) mid-write can no longer leave a truncated file
+    in place of the whole history."""
+    d = os.path.dirname(os.path.abspath(path)) or "."
+    fd, tmp = tempfile.mkstemp(
+        dir=d, prefix=os.path.basename(path) + ".", suffix=".tmp")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(rows, f, indent=2)
+            f.write("\n")
+        os.replace(tmp, path)
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
 def append_bench_row(path, snapshot):
     """Append one snapshot row (stamped ``recorded_utc``) to ``path``.
 
     Returns the full trajectory after the append.  This is the only
     writer the individual benchmarks use — replacing the ``json.dump``
     of a bare dict that used to overwrite the whole history each run.
+    The write is atomic (temp file + rename).
     """
     rows = load_trajectory(path)
     row = dict(snapshot)
     row.setdefault("recorded_utc",
                    datetime.now(timezone.utc).isoformat(timespec="seconds"))
     rows.append(row)
-    with open(path, "w") as f:
-        json.dump(rows, f, indent=2)
-        f.write("\n")
+    _write_trajectory(path, rows)
     return rows
 
 
@@ -112,14 +182,13 @@ def amend_latest_row(path, extra):
 
     For multi-part benchmarks (``bench_dse``) whose later sections fold
     stats into the snapshot the earlier section just appended — an amend
-    of the current run's row, never a new row.
+    of the current run's row, never a new row.  Atomic like
+    :func:`append_bench_row`.
     """
     rows = load_trajectory(path)
     assert rows, f"amend_latest_row({path!r}): no trajectory to amend"
     rows[-1].update(extra)
-    with open(path, "w") as f:
-        json.dump(rows, f, indent=2)
-        f.write("\n")
+    _write_trajectory(path, rows)
     return rows
 
 

@@ -46,6 +46,10 @@ KNOB_ALIASES: Dict[str, Tuple[str, ...]] = {
     "faults": ("faults", "fault_schedule"),
     "slo": ("slo",),
     "backend": ("backend",),
+    # physical DVFS: engines take one `tech` spec (node or (node,
+    # variant) pair); the sweep grid splits it into two axes
+    "tech": ("tech", "tech_node"),
+    "tech_variant": ("tech_variant",),
 }
 
 # (module suffix, qualname, {knob: "accept" | "absent" | "refuse:<sub>"})
@@ -55,11 +59,14 @@ PARITY: Tuple[Tuple[str, str, Dict[str, str]], ...] = (
         "balancer": "accept",
         "faults": "accept",
         "slo": "accept",
+        "tech": "accept",
         # single-design host reference: sharding/backend selection and
-        # flow synthesis are meaningless here by design
+        # flow synthesis are meaningless here by design; the scaling
+        # variant rides inside the (node, variant) `tech` spec
         "devices": "absent",
         "flows": "absent",
         "backend": "absent",
+        "tech_variant": "absent",
     }),
     ("sim/batch.py", "BatchSimEngine.__init__", {
         "observe": "accept",
@@ -68,8 +75,11 @@ PARITY: Tuple[Tuple[str, str, Dict[str, str]], ...] = (
         "slo": "accept",
         "devices": "accept",
         "backend": "accept",
-        # flow topology arrives through the platform, not per-run
+        "tech": "accept",
+        # flow topology arrives through the platform, not per-run;
+        # the variant rides inside the (node, variant) `tech` spec
         "flows": "absent",
+        "tech_variant": "absent",
     }),
     ("core/dse.py", "closed_loop_score", {
         "observe": "accept",
@@ -79,6 +89,16 @@ PARITY: Tuple[Tuple[str, str, Dict[str, str]], ...] = (
         "devices": "accept",
         "backend": "accept",
         "flows": "accept",
+        "tech": "accept",
+        "tech_variant": "absent",
+    }),
+    # the sweep grid is the one surface where node and variant are
+    # separate AXES (cross-product knobs), not a single spec
+    ("core/dse.py", "grid_sweep", {
+        "tech": "accept",
+        "tech_variant": "accept",
+        "devices": "accept",
+        "backend": "accept",
     }),
 )
 

@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core.islands import IslandConfig, IslandSpec
 from repro.core.tiles import TilePlan
+from repro.core.voltage import TechModel, TechSpec
 
 
 DEFAULT_HISTORY_MAXLEN = 256
@@ -399,7 +400,8 @@ def policy_energy_per_token_sweep(
         islands: IslandConfig,
         perf_eval_batch: Callable[[Dict[str, np.ndarray]],
                                   Tuple[np.ndarray, np.ndarray]],
-        *, max_loss: float = 0.02) -> Dict[str, float]:
+        *, max_loss: float = 0.02,
+        tech: TechSpec = None) -> Dict[str, float]:
     """Exhaustive batched rate search minimizing energy/token.
 
     The batched counterpart of :func:`policy_energy_per_token`: instead of
@@ -415,12 +417,22 @@ def policy_energy_per_token_sweep(
 
     Returns the rate assignment with the lowest watts/token among points
     whose throughput is within ``max_loss`` of the all-max-rates config.
+
+    ``tech``: optional physical DVFS model (see
+    :mod:`repro.core.voltage`); when set, the search grid is restricted
+    to each ladder's levels inside the node's legal ``[L, U]`` ratio
+    range, so the policy can only propose commits the harness clamp
+    would accept.
     """
+    tech = TechModel.coerce(tech)
     free = [isl for isl in islands.islands if not isl.fixed]
     if not free:
         return {}
     ladders = [np.asarray(isl.ladder.levels(), dtype=np.float64)
                for isl in free]
+    if tech is not None:
+        ladders = [lv[tech.legal(lv)] if tech.legal(lv).any() else lv
+                   for lv in ladders]
     grids = np.meshgrid(*ladders, indexing="ij")
     flat = {isl.name: g.ravel() for isl, g in zip(free, grids)}
     tps, watts = perf_eval_batch(flat)
@@ -442,11 +454,16 @@ def policy_energy_per_token_sweep(
 def policy_energy_per_token(islands: IslandConfig,
                             telemetry: Dict[str, TileTelemetry],
                             perf_eval: Callable[[Dict[str, float]], Tuple[float, float]],
-                            *, steps: int = 25) -> Dict[str, float]:
+                            *, steps: int = 25,
+                            tech: TechSpec = None) -> Dict[str, float]:
     """Greedy coordinate-descent over the discrete rate ladders minimizing
     energy/token subject to <2% throughput loss vs all-max rates.
     ``perf_eval(rates) -> (tokens_per_s, watts)`` comes from core/perfmodel.
+    ``tech``: optional physical DVFS model — probe levels outside the
+    node's legal ``[L, U]`` ratio range are skipped (the harness clamp
+    would reject them anyway).
     """
+    tech = TechModel.coerce(tech)
     rates = {i.name: i.rate for i in islands.islands if not i.fixed}
     base_tps, _ = perf_eval({**rates, **{k: 1.0 for k in rates}})
     best = dict(rates)
@@ -457,6 +474,8 @@ def policy_energy_per_token(islands: IslandConfig,
             if isl.fixed:
                 continue
             for lv in isl.ladder.levels():
+                if tech is not None and not tech.legal(lv):
+                    continue
                 cand = dict(best)
                 cand[isl.name] = lv
                 tps, w = perf_eval(cand)

@@ -42,12 +42,15 @@ import numpy as np
 
 from repro.core.islands import IslandConfig, NOC_LADDER, TILE_LADDER
 from repro.core.noc import pos_index
-from repro.core.perfmodel import (AccelWorkload, SoCPerfModel, chip_power,
+from repro.core.perfmodel import (AccelWorkload, NOC_POWER_SHARE,
+                                  SoCPerfModel, chip_power,
+                                  chip_power_coeffs,
                                   _memory_traffic_math_per_accel,
                                   _throughput_math)
 from repro.core.replication import (replication_area_model,
                                     replication_throughput_model)
 from repro.core.tiles import TilePlan
+from repro.core.voltage import TechModel, tech_axis_coeffs
 
 
 @dataclass(frozen=True)
@@ -58,11 +61,13 @@ class DesignPoint:
     throughput: float
     area: float                    # normalized resource cost
     energy_per_unit: float
+    tech: Optional[Tuple[int, str]] = None   # (node, variant) when swept
 
     def key(self):
         return (tuple(sorted(self.replication.items())),
                 tuple(sorted(self.rates.items())),
-                tuple(sorted(self.placement.items())))
+                tuple(sorted(self.placement.items())),
+                self.tech)
 
 
 # ---------------------------------------------------------------------------
@@ -233,9 +238,11 @@ class _SweepIndexing:
         rates["noc_mem"] = float(av["f_noc"])
         rates["tg"] = float(av["f_tg"])
         thr, area, energy = self._point_objectives(i)
+        tech = av.get("tech")
         return DesignPoint(
             replication=replication, rates=rates, placement=placement,
-            throughput=thr, area=area, energy_per_unit=energy)
+            throughput=thr, area=area, energy_per_unit=energy,
+            tech=None if tech is None else (int(tech[0]), str(tech[1])))
 
     def _point_objectives(self, i: int) -> Tuple[float, float, float]:
         return tuple(
@@ -461,9 +468,11 @@ def _axis(values, dim: int, ndim: int) -> np.ndarray:
 @dataclass(frozen=True)
 class _AxisLayout:
     """Dimension layout of one sweep: per-accel K axes, ``f_noc``, the
-    shared or per-accel ``f_acc`` axes, ``f_tg``, per-accel pos axes."""
+    shared or per-accel ``f_acc`` axes, ``f_tg``, per-accel pos axes,
+    plus an optional trailing combined ``tech`` axis (node, variant)."""
     A: int
     independent: bool
+    tech: bool = False
 
     @property
     def R(self) -> int:
@@ -471,6 +480,11 @@ class _AxisLayout:
 
     @property
     def ndim(self) -> int:
+        return 2 * self.A + self.R + 2 + (1 if self.tech else 0)
+
+    @property
+    def tdim(self) -> int:
+        assert self.tech, "no tech axis in this sweep"
         return 2 * self.A + self.R + 2
 
     def k(self, a: int) -> int:
@@ -526,10 +540,21 @@ def _eval_grid(model: SoCPerfModel, workloads, n_tg: int, backend: str,
 
     # mean accelerator-island power (summed in accel order, then /A) +
     # the NoC share — one op sequence for both island_rates modes
-    pw = chip_power(fa_ax[0], busy=1.0)
-    for f in fa_ax[1:]:
-        pw = pw + chip_power(f, busy=1.0)
-    power = pw / float(A) + 0.3 * chip_power(fn_ax, busy=1.0)
+    if lay.tech:
+        # physical V^2 f model: per-tech-axis (p_scale, v0, v1) coefficients
+        ps = get(lay.tdim, vals["tech_ps"])
+        v0 = get(lay.tdim, vals["tech_v0"])
+        v1 = get(lay.tdim, vals["tech_v1"])
+        pw = chip_power_coeffs(fa_ax[0], 1.0, v0, v1, ps)
+        for f in fa_ax[1:]:
+            pw = pw + chip_power_coeffs(f, 1.0, v0, v1, ps)
+        power = pw / float(A) \
+            + NOC_POWER_SHARE * chip_power_coeffs(fn_ax, 1.0, v0, v1, ps)
+    else:
+        pw = chip_power(fa_ax[0], busy=1.0)
+        for f in fa_ax[1:]:
+            pw = pw + chip_power(f, busy=1.0)
+        power = pw / float(A) + NOC_POWER_SHARE * chip_power(fn_ax, busy=1.0)
     energy = np.broadcast_to(power, shape) / np.maximum(total_thr, 1e-9)
 
     # Fig.-4 memory-pressure objective: offered MEM traffic at each rate
@@ -558,7 +583,7 @@ def _flat_point_evaluator(n_devices: int, A: int, n_tg: int,
                           own_demand: float, tg_demand: float,
                           link_bw: float, hop_latency_share: float,
                           ref_hops: float, mem_service: float,
-                          tg_demand_fig4: float):
+                          tg_demand_fig4: float, tech: bool = False):
     """jit-compiled (and, for ``n_devices > 1``, ``shard_map``-sharded)
     evaluator of the three float objectives over a flat (P,) point axis.
 
@@ -570,6 +595,10 @@ def _flat_point_evaluator(n_devices: int, A: int, n_tg: int,
     ``tests/test_shard_pallas.py``.  Runs at jax default precision (f32),
     so results deviate ~1e-6 relative from the numpy f64 path, which
     stays the ground truth for ``devices=None``.
+
+    ``tech=True`` compiles the physical-DVFS variant: three extra (P,)
+    inputs ``(p_scale, v0, v1)`` — one tech coefficient triple per point —
+    replace the linear voltage proxy in the power term.
     """
     import jax
     import jax.numpy as jnp
@@ -578,22 +607,40 @@ def _flat_point_evaluator(n_devices: int, A: int, n_tg: int,
     from repro import shard as shard_mod
     from jax.sharding import PartitionSpec
 
-    def fn(kA, faA, hopA, f_noc, f_tg):
+    def _thr_mem(kA, faA, f_noc, f_tg, hopA):
         thr = jnp.zeros_like(f_noc)
         for a, (base, wire) in enumerate(base_wire):
             thr = thr + _throughput_math(
                 jnp, base, wire, kA[a], faA[a], f_noc, f_tg, n_tg, hopA[a],
                 own_demand=own_demand, tg_demand=tg_demand, link_bw=link_bw,
                 hop_latency_share=hop_latency_share, ref_hops=ref_hops)
-        pw = chip_power(faA[0], busy=1.0)
-        for a in range(1, A):
-            pw = pw + chip_power(faA[a], busy=1.0)
-        power = pw / float(A) + 0.3 * chip_power(f_noc, busy=1.0)
-        energy = power / jnp.maximum(thr, 1e-9)
         mem = _memory_traffic_math_per_accel(
             jnp, [faA[a] for a in range(A)], f_noc, f_tg, n_tg,
             mem_service=mem_service, tg_demand_fig4=tg_demand_fig4)
-        return thr, energy, mem
+        return thr, mem
+
+    if tech:
+        def fn(kA, faA, hopA, f_noc, f_tg, ps, v0, v1):
+            thr, mem = _thr_mem(kA, faA, f_noc, f_tg, hopA)
+            pw = chip_power_coeffs(faA[0], 1.0, v0, v1, ps)
+            for a in range(1, A):
+                pw = pw + chip_power_coeffs(faA[a], 1.0, v0, v1, ps)
+            power = pw / float(A) \
+                + NOC_POWER_SHARE * chip_power_coeffs(f_noc, 1.0, v0, v1, ps)
+            energy = power / jnp.maximum(thr, 1e-9)
+            return thr, energy, mem
+        n_in = 8
+    else:
+        def fn(kA, faA, hopA, f_noc, f_tg):
+            thr, mem = _thr_mem(kA, faA, f_noc, f_tg, hopA)
+            pw = chip_power(faA[0], busy=1.0)
+            for a in range(1, A):
+                pw = pw + chip_power(faA[a], busy=1.0)
+            power = pw / float(A) + NOC_POWER_SHARE * chip_power(f_noc,
+                                                                busy=1.0)
+            energy = power / jnp.maximum(thr, 1e-9)
+            return thr, energy, mem
+        n_in = 5
 
     if n_devices <= 1:
         return jax.jit(fn)
@@ -601,7 +648,7 @@ def _flat_point_evaluator(n_devices: int, A: int, n_tg: int,
     s2 = PartitionSpec(None, "points")
     s1 = PartitionSpec("points")
     return jax.jit(compat.shard_map(
-        fn, mesh=mesh, in_specs=(s2, s2, s2, s1, s1),
+        fn, mesh=mesh, in_specs=(s2, s2, s2) + (s1,) * (n_in - 3),
         out_specs=(s1, s1, s1), check_vma=False))
 
 
@@ -648,13 +695,17 @@ def _eval_flat_points(model: SoCPerfModel, workloads, n_tg: int,
         float(model.own_demand), float(model.tg_demand),
         float(model.noc.link_bw), float(model.hop_latency_share),
         float(model._ref_hops()), float(model.mem_service),
-        float(model.tg_demand_fig4))
+        float(model.tg_demand_fig4), tech=lay.tech)
 
     def pad(x: np.ndarray) -> np.ndarray:
         return shard_mod.pad_axis(x, n_devices, axis=x.ndim - 1)
 
-    thr, energy, mem = evaluator(pad(kA), pad(faA), pad(hopA),
-                                 pad(f_noc), pad(f_tg))
+    args = [pad(kA), pad(faA), pad(hopA), pad(f_noc), pad(f_tg)]
+    if lay.tech:
+        tc = coords[lay.tdim]
+        args += [pad(np.asarray(vals[n])[tc])
+                 for n in ("tech_ps", "tech_v0", "tech_v1")]
+    thr, energy, mem = evaluator(*args)
     return {"throughput": np.asarray(thr)[:P].astype(np.float64),
             "area": area,
             "energy_per_unit": np.asarray(energy)[:P].astype(np.float64),
@@ -663,10 +714,24 @@ def _eval_flat_points(model: SoCPerfModel, workloads, n_tg: int,
 
 
 def _prepare_axes(model, workloads, ks, acc_rates, noc_rates, tg_rates,
-                  positions, island_rates):
+                  positions, island_rates, tech_node=None,
+                  tech_variant=None):
     """Axis bookkeeping shared by the one-shot and chunked paths."""
     assert island_rates in ("shared", "independent"), island_rates
     independent = island_rates == "independent"
+
+    # tech_node / tech_variant combine into ONE trailing "tech" axis whose
+    # values are (node, variant) pairs — the cross product of both inputs —
+    # so the 1-D axis broadcast/chunk machinery applies unchanged
+    techs: Tuple[Tuple[int, str], ...] = ()
+    if tech_node is not None or tech_variant is not None:
+        nodes = 45 if tech_node is None else tech_node
+        if isinstance(nodes, (int, np.integer)):
+            nodes = (nodes,)
+        variants = "itrs" if tech_variant is None else tech_variant
+        if isinstance(variants, str):
+            variants = (variants,)
+        techs = tuple((int(n), str(v)) for n in nodes for v in variants)
     if positions is None:
         positions = [(r, c) for r in range(model.noc.rows)
                      for c in range(model.noc.cols)
@@ -683,7 +748,7 @@ def _prepare_axes(model, workloads, ks, acc_rates, noc_rates, tg_rates,
         acc_by_wl = [tuple(float(f) for f in acc_rates)] * len(workloads)
 
     A = len(workloads)
-    lay = _AxisLayout(A=A, independent=independent)
+    lay = _AxisLayout(A=A, independent=independent, tech=bool(techs))
     axes: List[Tuple[str, Tuple]] = []
     for wl in workloads:
         axes.append((f"K:{wl.name}", tuple(int(k) for k in ks)))
@@ -696,6 +761,8 @@ def _prepare_axes(model, workloads, ks, acc_rates, noc_rates, tg_rates,
     axes.append(("f_tg", tuple(float(f) for f in tg_rates)))
     for wl in workloads:
         axes.append((f"pos:{wl.name}", tuple(positions)))
+    if techs:
+        axes.append(("tech", techs))
 
     area_by_k = {int(k): replication_area_model(
         weight_bytes=1.0, act_bytes=0.5, k=int(k))["total_bytes_per_dev"]
@@ -708,6 +775,8 @@ def _prepare_axes(model, workloads, ks, acc_rates, noc_rates, tg_rates,
         "acc": [np.asarray(r) for r in acc_by_wl],
         "pos": pos_idx,
     }
+    if techs:
+        vals.update(tech_axis_coeffs(techs))
     return lay, tuple(axes), vals
 
 
@@ -757,7 +826,9 @@ def grid_sweep(model: SoCPerfModel,
                island_rates: str = "shared",
                chunk_points: Optional[int] = None,
                topk_track: int = 64,
-               devices=None):
+               devices=None,
+               tech_node=None,
+               tech_variant=None):
     """Batched cross-product sweep over the paper's design axes.
 
     ``workloads`` is one :class:`AccelWorkload` or a sequence for a *joint*
@@ -807,13 +878,26 @@ def grid_sweep(model: SoCPerfModel,
     deviates ~1e-6 relative.  Multi-device CPU runs need
     ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` set before the
     first jax import.
+
+    **Physical DVFS** (``tech_node=`` / ``tech_variant=``): passing a node
+    (int or sequence from :data:`repro.core.voltage.TECH_NODES`) and/or a
+    scaling variant (``"itrs"``/``"cons"`` or a sequence) appends one
+    trailing ``tech`` axis — the (node, variant) cross product — and
+    switches the energy objective from the linear voltage proxy to the
+    physical ``power_scl * (P_static + P_dyn f V̂(f)^2)`` model of
+    :class:`repro.core.voltage.TechModel`.  Throughput/area/mem_traffic
+    are tech-invariant (the grid anchors to the measured Table-I rates);
+    the axis streams through ``chunk_points=`` and shards through
+    ``devices=`` like any other.  ``tech_node=None`` (the default) keeps
+    today's linear model bit for bit.
     """
     if isinstance(workloads, AccelWorkload):
         workloads = (workloads,)
     workloads = tuple(workloads)
     lay, axes, vals = _prepare_axes(model, workloads, ks, acc_rates,
                                     noc_rates, tg_rates, positions,
-                                    island_rates)
+                                    island_rates, tech_node=tech_node,
+                                    tech_variant=tech_variant)
     ndim = lay.ndim
     shape = tuple(len(v) for _, v in axes)
     n_points = int(np.prod([len(v) for _, v in axes], dtype=np.int64))
@@ -985,18 +1069,28 @@ def _rank_scores(p99: np.ndarray, ept: np.ndarray,
     """Best-first order: SLO-miss severity (p99 miss + drop-budget miss),
     then energy.  Without SLO bounds the legacy (energy, p99) order is
     unchanged; ``drop_rate`` only participates when given (fault-aware
-    scoring), so fault-free rankings are untouched."""
+    scoring), so fault-free rankings are untouched.
+
+    Degenerate survivors — zero-completion runs reporting NaN energy per
+    request and/or NaN p99 — always rank last via an explicit mask (their
+    NaN channels carry no information, and ``np.lexsort``'s NaN placement
+    in non-primary keys is not a contract we want to lean on)."""
+    p99 = np.asarray(p99, dtype=np.float64)
+    ept = np.asarray(ept, dtype=np.float64)
+    degenerate = np.isnan(p99) | np.isnan(ept)
+    p99 = np.where(degenerate, np.inf, p99)
+    ept = np.where(degenerate, np.inf, ept)
     if p99_sla_s is not None or max_drop_rate is not None:
-        miss = np.zeros_like(np.asarray(ept, dtype=np.float64))
+        miss = np.zeros_like(ept)
         if p99_sla_s is not None:
             miss = miss + np.maximum(0.0, p99 / p99_sla_s - 1.0)
         if max_drop_rate is not None and drop_rate is not None:
             miss = miss + np.maximum(0.0, drop_rate / max_drop_rate - 1.0)
-        return np.lexsort((ept, miss))      # SLO first, then energy
+        return np.lexsort((ept, miss, degenerate))   # SLO first, then energy
     if drop_rate is not None:
         # fault-aware but unbudgeted: robustness outranks energy
-        return np.lexsort((ept, p99, drop_rate))
-    return np.lexsort((p99, ept))           # energy first, p99 tie-break
+        return np.lexsort((ept, p99, drop_rate, degenerate))
+    return np.lexsort((p99, ept, degenerate))  # energy first, p99 tie-break
 
 
 def closed_loop_score(result: SweepResult, trace, *,
@@ -1017,7 +1111,8 @@ def closed_loop_score(result: SweepResult, trace, *,
                       slo=None,
                       max_drop_rate: Optional[float] = None,
                       observe=None,
-                      devices=None
+                      devices=None,
+                      tech=None
                       ) -> ClosedLoopScore:
     """Re-rank static-sweep survivors by *simulated* runtime behaviour.
 
@@ -1083,9 +1178,17 @@ def closed_loop_score(result: SweepResult, trace, *,
     the single stacked plane).  ``observe=None`` keeps the replays
     monitoring-free and is bit-for-bit identical to pre-observability
     scoring.
+
+    Physical DVFS: ``tech=`` (a ``repro.core.voltage.TechModel``, a node
+    int, or a ``(node, variant)`` pair) replays every survivor under the
+    physical ``V^2 f`` tick-energy model and clamps DFS commits to the
+    node's legal ratio range — the re-ranking then reflects the tech
+    node's energy landscape.  ``tech=None`` keeps the linear proxy bit
+    for bit.
     """
     from repro.sim import BatchTrace, SimConfig, SimEngine, SimPlatform
 
+    tech = TechModel.coerce(tech)
     if callable(trace):
         trace = trace(trace_seed)
 
@@ -1120,7 +1223,8 @@ def closed_loop_score(result: SweepResult, trace, *,
                                           else None),
                                 backend=backend,
                                 faults=fault_schedule, slo=slo,
-                                observe=observe, devices=devices)
+                                observe=observe, devices=devices,
+                                tech=tech)
         r = engine.run(trace)
         p99 = r.p99_latency_s
         ept = r.energy_per_request_j
@@ -1154,7 +1258,7 @@ def closed_loop_score(result: SweepResult, trace, *,
                                          if balancer_factory is not None
                                          else None),
                                faults=fault_schedule, slo=slo,
-                               observe=observe)
+                               observe=observe, tech=tech)
             r = engine.run(trace.design(j) if isinstance(trace, BatchTrace)
                            else trace)
             results.append(r)
@@ -1202,7 +1306,8 @@ def sweep_soc(model: SoCPerfModel, wl: AccelWorkload,
         thr = model.accel_throughput(w, pos, rates, n_tg)
         area = replication_area_model(
             weight_bytes=1.0, act_bytes=0.5, k=k)["total_bytes_per_dev"]
-        power = chip_power(fa, busy=1.0) + 0.3 * chip_power(fn, busy=1.0)
+        power = chip_power(fa, busy=1.0) \
+            + NOC_POWER_SHARE * chip_power(fn, busy=1.0)
         out.append(DesignPoint(
             replication={wl.name: k}, rates=rates,
             placement={wl.name: pos}, throughput=thr, area=area,

@@ -40,6 +40,18 @@ class RateLadder:
         lv = np.asarray(self.levels())
         return float(lv[int(np.argmin(np.abs(lv - rate)))])
 
+    def voltages(self, tech) -> np.ndarray:
+        """The coupled voltage ladder under a physical tech model: the
+        absolute operating voltage (volts) at each frequency level, one
+        step per step (:meth:`repro.core.voltage.TechModel.volt_of_freq`
+        over :meth:`levels`)."""
+        return tech.ladder_voltages(self)
+
+    def legal_levels(self, tech) -> np.ndarray:
+        """Mask of frequency levels inside the tech node's legal DVFS
+        ratio range ``[L, U]`` — the steps a clamped commit can land on."""
+        return tech.legal_levels(self)
+
 
 # The paper's two ladders.
 TILE_LADDER = RateLadder(10, 50, 5)
@@ -96,6 +108,12 @@ class IslandConfig:
 
     def names(self) -> Tuple[str, ...]:
         return tuple(i.name for i in self.islands)
+
+    def voltage_ladders(self, tech) -> Dict[str, np.ndarray]:
+        """Per-island voltage ladders under a physical tech model:
+        island name -> operating volts at each of its frequency levels
+        (the V/f pairs a DFS commit selects between)."""
+        return {i.name: i.ladder.voltages(tech) for i in self.islands}
 
 
 def default_islands(plan: TilePlan) -> IslandConfig:

@@ -31,6 +31,7 @@ from repro.core.noc import (Flow, NocConfig, NocModel,
                             collective_bytes_ring_allreduce, hops,
                             pos_index, routing_tables)
 from repro.core.tiles import TilePlan
+from repro.core.voltage import TechModel
 
 # ---------------------------------------------------------------------------
 # TPU v5e hardware constants (per chip) — the assignment's numbers.
@@ -39,17 +40,50 @@ PEAK_FLOPS = 197e12          # bf16 FLOP/s
 HBM_BW = 819e9               # bytes/s
 ICI_BW = 50e9                # bytes/s per link
 VMEM_BYTES = 128 * 2**20
+
+# ---------------------------------------------------------------------------
+# THE shared energy-model constants block.  Every layer that charges
+# energy — grid_sweep/_eval_grid, the sharded flat-point evaluator, the
+# sequential/batched tick engines, the Pallas tick kernel, the examples —
+# imports these instead of re-deriving its own literals (the 0.7/0.3
+# voltage coefficients and the 0.3 NoC power share used to be duplicated
+# across four modules; a cross-layer drift test pins them together).
+# ---------------------------------------------------------------------------
 P_STATIC_W = 60.0            # per chip, modeled
 P_DYN_W = 140.0              # at f=1, modeled
+V_BASE = 0.7                 # linear voltage proxy: V(f) = V_BASE + V_SLOPE f
+V_SLOPE = 0.3
+NOC_POWER_SHARE = 0.3        # NoC+MEM power as a share of one tile's
 
 
 def voltage(f: float) -> float:
-    return 0.7 + 0.3 * f
+    return V_BASE + V_SLOPE * f
 
 
-def chip_power(f_comp: float, busy: float) -> float:
-    """Modeled chip power at normalized rate f and duty cycle busy."""
-    return P_STATIC_W + P_DYN_W * f_comp * voltage(f_comp) ** 2 * busy
+def chip_power_coeffs(f_comp, busy, v0, v1, p_scale):
+    """Chip power from explicit voltage-curve coefficients:
+    ``p_scale * (P_STATIC_W + P_DYN_W * f * (v0 + v1 f)^2 * busy)``.
+
+    Operators only, so it broadcasts over numpy arrays and jax tracers
+    alike — the form the tech-axis sweep evaluates with per-point
+    coefficient arrays."""
+    v = v0 + v1 * f_comp
+    return p_scale * (P_STATIC_W + P_DYN_W * f_comp * v * v * busy)
+
+
+def chip_power(f_comp: float, busy: float, *,
+               tech: Optional[TechModel] = None) -> float:
+    """Modeled chip power at normalized rate f and duty cycle busy.
+
+    ``tech=None`` (default) is the linear voltage proxy and keeps the
+    historical expression verbatim — the bit-exact parity reference.
+    With a :class:`~repro.core.voltage.TechModel`, power follows the
+    node's physical curve ``power_scl * (P_static + P_dyn f V̂(f)^2)``.
+    """
+    if tech is None:
+        return P_STATIC_W + P_DYN_W * f_comp * voltage(f_comp) ** 2 * busy
+    return chip_power_coeffs(f_comp, busy, tech.v0, tech.v1,
+                             tech.power_scl)
 
 
 # ---------------------------------------------------------------------------

@@ -49,21 +49,22 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.perfmodel import P_DYN_W, P_STATIC_W
+from repro.core.perfmodel import P_DYN_W, P_STATIC_W, V_BASE, V_SLOPE
 
 _N_IN_FIXED = 13   # arr, isctl, base, req, w, k, hop, tcr, inc, ftg,
 #                    iotM, rates0, guard0
 
 
 def _v2(f):
-    v = 0.7 + 0.3 * f
+    v = V_BASE + V_SLOPE * f
     return v * v
 
 
 def _tick_kernel(*refs, n_pol, n_extra, extra_keys, extra_bool,
                  pol_dtypes, control_fn, dt, own, tgd, link_bw, max_slow,
                  hop_lat, hop_share, hopf0, noc_share, n_tg, dyn_on,
-                 max_q, ci, noc_idx, demand_scalar, has_fwd):
+                 max_q, ci, noc_idx, demand_scalar, has_fwd,
+                 tech_on, t_ps, t_v0, t_v1):
     (arr_ref, isctl_ref, base_ref, req_ref, w_ref, k_ref, hop_ref,
      tcr_ref, inc_ref, ftg_ref, iotM_ref, rates0_ref,
      guard0_ref) = refs[:_N_IN_FIXED]
@@ -147,9 +148,17 @@ def _tick_kernel(*refs, n_pol, n_extra, extra_keys, extra_bool,
     if has_fwd:
         fw_s[...] = jnp.einsum("ba,aj->bj", served, fwd)
 
-    tp = P_STATIC_W + P_DYN_W * f_tile * _v2(f_tile) * busy
     fnr = f_noc[:, None]                # unclamped, as the scan backend
-    noc_p = noc_share * (P_STATIC_W + P_DYN_W * fnr * _v2(fnr))
+    if tech_on:
+        # physical DVFS: three baked scalars, as the scan backend
+        vt = t_v0 + t_v1 * f_tile
+        tp = t_ps * (P_STATIC_W + P_DYN_W * f_tile * vt * vt * busy)
+        vn = t_v0 + t_v1 * fnr
+        noc_p = noc_share * (
+            t_ps * (P_STATIC_W + P_DYN_W * fnr * vn * vn))
+    else:
+        tp = P_STATIC_W + P_DYN_W * f_tile * _v2(f_tile) * busy
+        noc_p = noc_share * (P_STATIC_W + P_DYN_W * fnr * _v2(fnr))
     en_s[...] += (tp.sum(axis=-1, keepdims=True) + noc_p) * dt
     ctl_busy = cb_s[...] + busy
 
@@ -333,7 +342,11 @@ def fused_tick_sim(arrivals, is_ctl, consts, scalars, init, *,
         noc_idx=int(scalars["noc_idx"]),
         demand_scalar=(float(scalars["demand"])
                        if np.ndim(scalars["demand"]) == 0 else None),
-        has_fwd=fwd is not None)
+        has_fwd=fwd is not None,
+        tech_on=bool(scalars.get("tech_on", False)),
+        t_ps=float(scalars.get("t_ps", 1.0)),
+        t_v0=float(scalars.get("t_v0", V_BASE)),
+        t_v1=float(scalars.get("t_v1", V_SLOPE)))
     outs = pl.pallas_call(
         kernel, grid=(nb, T), in_specs=in_specs, out_specs=out_specs,
         out_shape=out_shape, scratch_shapes=scratch,

@@ -62,6 +62,7 @@ from repro.core.islands import (IslandConfig, IslandSpec, NOC_LADDER,
                                 TILE_LADDER)
 from repro.core.noc import pos_index, positions_to_indices
 from repro.core.perfmodel import SoCPerfModel
+from repro.core.voltage import TechModel
 from repro.sim.control import BatchControllerHarness, LoadBalancer
 from repro.sim.engine import (PKT_BYTES, SimConfig, SimPlatform, StepConsts,
                               TickState, latency_percentiles, tick_step)
@@ -83,7 +84,7 @@ _SCAN_CACHE_MAX = 8
 # the RPR002 rule pass checks the construction stays complete.
 SCAN_SIG_FIELDS = ("tag", "T", "ci", "dt", "B", "D", "arrivals_ndim",
                    "fault_key", "policy_digest", "balancer_digest",
-                   "config", "model", "slo")
+                   "config", "model", "slo", "tech")
 
 
 # ---------------------------------------------------------------------------
@@ -299,7 +300,7 @@ class BatchSimEngine:
                  backend: str = "numpy",
                  faults: Optional[FaultSchedule] = None,
                  slo: Optional[SLOConfig] = None, observe=None,
-                 devices=None):
+                 devices=None, tech=None):
         assert backend in ("numpy", "jax", "pallas"), backend
         self.platform = platform
         # devices: None (single-device ground truth), an int, or "auto" —
@@ -307,6 +308,14 @@ class BatchSimEngine:
         self.devices = devices
         self.config = config
         self.controller = controller
+        # physical DVFS model (core/voltage.py): tick energy becomes
+        # power_scl * (P_static + P_dyn f V̂(f)^2) on every backend, and
+        # the harness clamps commits to the node's legal [L, U] range;
+        # None keeps the linear voltage proxy bit for bit
+        self.tech = TechModel.coerce(tech)
+        if self.tech is not None and controller is not None \
+                and getattr(controller, "tech", None) is None:
+            controller.tech = self.tech
         self.balancer = balancer
         self.backend = backend
         self.faults = faults
@@ -393,7 +402,7 @@ class BatchSimEngine:
             noc_power_share=cfg.noc_power_share, dt=dt,
             max_queue=cfg.max_queue,
             dynamic_contention=cfg.dynamic_contention,
-            forward=self._forward)
+            forward=self._forward, tech=self.tech)
 
     def _check_trace(self, trace) -> None:
         p = self.platform
@@ -678,7 +687,9 @@ class BatchSimEngine:
             throughput_rps=(completed / sim_seconds if sim_seconds
                             else np.zeros(B)),
             p50_latency_s=p50, p99_latency_s=p99, energy_j=energy,
-            energy_per_request_j=energy / np.maximum(completed, 1e-9),
+            energy_per_request_j=np.where(
+                completed > 0, energy / np.maximum(completed, 1e-9),
+                np.nan),
             mean_power_w=(energy / sim_seconds if sim_seconds
                           else np.zeros(B)),
             swaps=np.asarray(swaps, dtype=np.int64),
@@ -776,6 +787,23 @@ class BatchSimEngine:
                    "skip", np.ones(len(topo.names), dtype=bool)))}
         I = len(topo.names)
         pol = plan.get("policy")
+        # Physical DVFS: the harness's tech model (injected by the engine
+        # at construction when it has one) supplies the legal [L, U]
+        # ratio range; baked as compile-time floats, keyed in the jit
+        # cache via the _scan_cache_sig tech slot.
+        tech = getattr(self.controller, "tech", None)
+        tech_lo = None if tech is None else float(tech.l_bound)
+        tech_hi = None if tech is None else float(tech.u_bound)
+        if tech is not None:
+            # (I, Lmax) mask of ladder levels inside [L, U]: quantization
+            # snaps clamped requests to the nearest LEGAL level (the +inf
+            # ladder padding is illegal by construction); islands whose
+            # ladder lies fully outside fall back to every real level
+            lvq = cst["levels"]
+            legal = (lvq >= tech_lo) & (lvq <= tech_hi)
+            cst["tech_legal"] = np.where(
+                legal.any(axis=-1, keepdims=True), legal,
+                np.isfinite(lvq))
 
         if kind == "pid":
             ctlp = self.controller.policy
@@ -855,7 +883,14 @@ class BatchSimEngine:
                 valid = valid | latch
                 guard = jnp.where(ctl_flag, latch, guard)
 
+            if tech_lo is not None:
+                # clamp commits into the node's legal DVFS ratio range
+                # (NaN "no request" entries pass through jnp.clip)
+                req = jnp.clip(req, tech_lo, tech_hi)
+
             d = jnp.abs(levels[None, :, :] - req[:, :, None])
+            if tech_lo is not None:     # illegal levels can't win argmin
+                d = jnp.where(c["tech_legal"][None, :, :], d, jnp.inf)
             idx = jnp.argmin(d, axis=-1)
             qz = jnp.take_along_axis(
                 jnp.broadcast_to(levels, (req.shape[0],) + levels.shape),
@@ -951,7 +986,10 @@ class BatchSimEngine:
                  m.hop_latency_share,
                  1.0 + m.hop_latency_share * m._ref_hops(), p.n_tg),
                 None if slo is None else (slo.on_kill, slo.recovers,
-                                          slo.deadline_s))
+                                          slo.deadline_s),
+                (None if self.tech is None else self.tech.key,
+                 None if getattr(self.controller, "tech", None) is None
+                 else self.controller.tech.key))
 
     def _cached_scan(self, sig, build):
         """Look up / build the jitted scan for an explicit signature.
@@ -973,7 +1011,8 @@ class BatchSimEngine:
         import jax.numpy as jnp
         from jax import lax
         from repro import shard as shard_mod
-        from repro.core.perfmodel import P_DYN_W, P_STATIC_W
+        from repro.core.perfmodel import (P_DYN_W, P_STATIC_W, V_BASE,
+                                          V_SLOPE)
 
         p, cfg = self.platform, self.config
         B, A, T, dt = p.n_designs, p.n_tiles, trace.ticks, trace.dt
@@ -1064,8 +1103,24 @@ class BatchSimEngine:
         control, pol0, _cctl = self._jax_control(plan, ci, B)
 
         def voltage2(f):
-            v = 0.7 + 0.3 * f
+            v = V_BASE + V_SLOPE * f
             return v * v
+
+        # Physical DVFS: the tech model's three coefficients bake in as
+        # compile-time Python floats (keyed by the _scan_cache_sig tech
+        # slot); tech=None keeps the legacy linear-proxy expressions
+        # bit for bit.
+        if self.tech is None:
+            def _pw(f, busy):
+                return (P_STATIC_W
+                        + P_DYN_W * f * voltage2(f) * busy)
+        else:
+            t_ps, t_v0, t_v1 = self.tech.power_coeffs
+
+            def _pw(f, busy):
+                v = t_v0 + t_v1 * f
+                return t_ps * (P_STATIC_W
+                               + P_DYN_W * f * v * v * busy)
 
         def run_scan(pd, xs0, init):
             # per-design constants arrive as (possibly sharded) arguments
@@ -1193,13 +1248,11 @@ class BatchSimEngine:
                 if lb is not None:
                     prev_cap = cap
 
-                tp = (P_STATIC_W
-                      + P_DYN_W * f_tile * voltage2(f_tile) * busy)
+                tp = _pw(f_tile, busy)
                 if has_tile:            # dead tiles are power-gated
                     tp = tp * alive_t
                 tile_power = jnp.sum(tp, axis=-1)
-                noc_power = cfg.noc_power_share * (
-                    P_STATIC_W + P_DYN_W * f_noc * voltage2(f_noc))
+                noc_power = cfg.noc_power_share * _pw(f_noc, 1.0)
                 energy = energy + (tile_power + noc_power) * dt
                 ctl_busy = ctl_busy + busy
 
@@ -1422,12 +1475,10 @@ class BatchSimEngine:
                 else:
                     link = {kk: np.zeros((B, n_links))
                             for kk in ("flits", "util_sum", "peak_util")}
-                tp = (P_STATIC_W
-                      + P_DYN_W * f_tile * voltage2(f_tile) * busy)
+                tp = _pw(f_tile, busy)
                 if tile_alive_np is not None:
                     tp = tp * tile_alive_np[:, None, :]
-                noc_p = cfg.noc_power_share * (
-                    P_STATIC_W + P_DYN_W * f_noc * voltage2(f_noc))
+                noc_p = cfg.noc_power_share * _pw(f_noc, 1.0)
                 en = (tp.sum(axis=0) * dt) @ oh
                 if noc_idx >= 0:
                     en[:, noc_idx] += noc_p.sum(axis=0) * dt
@@ -1547,6 +1598,11 @@ class BatchSimEngine:
                                         dtype=np.float64),
                    "forward": (np.asarray(self._forward)
                                if self._forward is not None else None)}
+        if self.tech is not None:
+            # physical DVFS: bake the node's three power coefficients
+            scalars["tech_on"] = True
+            (scalars["t_ps"], scalars["t_v0"],
+             scalars["t_v1"]) = self.tech.power_coeffs
         init = {"rates": np.asarray(rates0), "guard": np.asarray(guard0),
                 "pol": tuple(pol0)}
 

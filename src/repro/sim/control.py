@@ -33,6 +33,7 @@ import numpy as np
 
 from repro.core.dfs import DFSActuator, TileTelemetry
 from repro.core.islands import IslandConfig
+from repro.core.voltage import TechModel
 
 Policy = Callable[[IslandConfig, Dict[str, TileTelemetry]], Dict[str, float]]
 
@@ -44,6 +45,8 @@ class ControlAction:
     requested: Dict[str, float]          # raw policy output
     guarded: Tuple[str, ...]             # islands overridden by the guard
     committed: Optional[int]             # new config version, or None
+    clamped: Tuple[str, ...] = ()        # islands pushed into the tech
+                                         # node's legal DVFS range
 
 
 class ControllerHarness:
@@ -53,9 +56,14 @@ class ControllerHarness:
                  *, queue_guard_ticks: Optional[float] = 4.0,
                  guard_release_ticks: Optional[float] = None,
                  guard_rate: float = 1.0, history_maxlen: int = 256,
-                 actions_maxlen: int = 1024):
+                 actions_maxlen: int = 1024, tech=None):
         self.actuator = DFSActuator(initial, history_maxlen=history_maxlen)
         self.policy = policy
+        # physical DVFS bounds (core/voltage.py): requested rates are
+        # clamped into the node's legal [L, U] ratio range before
+        # quantization; None = unconstrained (the engine injects its own
+        # tech model here when the harness was built without one)
+        self.tech = TechModel.coerce(tech)
         self.queue_guard_ticks = queue_guard_ticks
         # hysteresis: an island stays guarded until its backlog drains
         # below the (lower) release threshold — without it the guard and
@@ -146,18 +154,45 @@ class ControllerHarness:
                     requested[isl.name] = self.guard_rate
                     guarded.append(isl.name)
 
+        # DVFS-bound clamp: with a tech model in the loop, requests
+        # outside the node's legal [L, U] ratio range are pushed back in
+        # before quantization (the ControlAction keeps the raw request so
+        # the rejection is traceable)
+        clamped: List[str] = []
+        applied = requested
+        if self.tech is not None:
+            lo, hi = self.tech.l_bound, self.tech.u_bound
+            ladders = {i.name: i.ladder for i in live.islands}
+            applied = {}
+            for n, r in requested.items():
+                c = min(max(float(r), lo), hi)
+                hit = c != r
+                lad = ladders.get(n)
+                if lad is not None:
+                    lv = np.asarray(lad.levels(), dtype=np.float64)
+                    legal = lv[self.tech.legal(lv)]
+                    if legal.size:
+                        # nearest LEGAL ladder level: plain quantization
+                        # of a clamped request could snap back below L
+                        q = float(legal[int(np.argmin(np.abs(legal - c)))])
+                        hit = hit or q != lad.quantize(r)
+                        c = q
+                if hit:
+                    clamped.append(n)
+                applied[n] = c
+
         # drop no-op rate changes so the config version only bumps on a
         # real swap (ladder-quantized comparison, as with_rates would do)
         changes: Dict[str, float] = {}
         for ii, isl in enumerate(live.islands):
-            if isl.name not in requested or isl.fixed:
+            if isl.name not in applied or isl.fixed:
                 continue
             if dead is not None and dead[ii]:
                 continue
             if stuck is not None and stuck[ii]:
                 continue
-            if isl.ladder.quantize(requested[isl.name]) != isl.rate:
-                changes[isl.name] = requested[isl.name]
+            if isl.ladder.quantize(applied[isl.name]) != isl.rate:
+                changes[isl.name] = applied[isl.name]
 
         committed = None
         if changes:
@@ -165,7 +200,7 @@ class ControllerHarness:
             committed = self.actuator.commit().version
         self.actions.append(ControlAction(
             tick=tick, requested=requested, guarded=tuple(guarded),
-            committed=committed))
+            committed=committed, clamped=tuple(clamped)))
         return self.actuator.live() if committed is not None else None
 
 
@@ -307,10 +342,15 @@ class IslandTopology:
                    fixed=np.asarray([isl.fixed for isl in islands.islands]),
                    ladder_levels=levels, counts=mem.sum(axis=1))
 
-    def quantize(self, rates: np.ndarray) -> np.ndarray:
-        """Nearest ladder level per (design, island); NaN passes through."""
+    def quantize(self, rates: np.ndarray,
+                 legal: Optional[np.ndarray] = None) -> np.ndarray:
+        """Nearest ladder level per (design, island); NaN passes through.
+        ``legal``: optional (I, L_max) mask restricting the candidate
+        levels (the physical-DVFS bound — illegal levels can't win)."""
         r = np.asarray(rates, dtype=np.float64)
         d = np.abs(self.ladder_levels[None, :, :] - r[..., None])
+        if legal is not None:
+            d = np.where(legal[None, :, :], d, np.inf)
         idx = np.argmin(np.where(np.isnan(d), np.inf, d), axis=-1)
         q = self.ladder_levels[np.arange(len(self.names))[None, :], idx]
         return np.where(np.isnan(r), np.nan, q)
@@ -386,7 +426,7 @@ class BatchControllerHarness:
                  policy: Optional[BatchPolicy], *, tile_names,
                  queue_guard_ticks: Optional[float] = 4.0,
                  guard_release_ticks: Optional[float] = None,
-                 guard_rate: float = 1.0):
+                 guard_rate: float = 1.0, tech=None):
         self.topo = IslandTopology.from_config(islands, tile_names)
         rates0 = np.asarray(rates0, dtype=np.float64)
         assert rates0.ndim == 2 and rates0.shape[1] == len(self.topo.names)
@@ -395,6 +435,12 @@ class BatchControllerHarness:
         self.versions = np.full(B, islands.version, dtype=np.int64)
         self.swaps = np.zeros(B, dtype=np.int64)
         self.policy = policy
+        # physical DVFS bounds, mirroring the scalar harness: requests
+        # outside the tech node's legal [L, U] range are clamped before
+        # quantization (``last_clamped`` holds the per-(design, island)
+        # mask of the most recent step)
+        self.tech = TechModel.coerce(tech)
+        self.last_clamped = np.zeros((B, len(self.topo.names)), dtype=bool)
         self.queue_guard_ticks = queue_guard_ticks
         self.guard_release_ticks = (
             guard_release_ticks if guard_release_ticks is not None
@@ -471,8 +517,29 @@ class BatchControllerHarness:
             self._guard_active = latch
             requested = np.where(latch, self.guard_rate, requested)
 
+        # DVFS-bound clamp before quantization (NaN "no request" entries
+        # pass through np.clip untouched); quantization then snaps to
+        # the nearest LEGAL ladder level, so a clamped request cannot
+        # quantize back outside [L, U]
+        self.last_clamped = np.zeros_like(self._guard_active)
+        legal = None
+        if self.tech is not None:
+            clamped_r = np.clip(requested, self.tech.l_bound,
+                                self.tech.u_bound)
+            lv = self.topo.ladder_levels
+            legal = ((lv >= self.tech.l_bound)
+                     & (lv <= self.tech.u_bound))
+            legal = np.where(legal.any(axis=-1, keepdims=True),
+                             legal, np.isfinite(lv))
+            self.last_clamped = (
+                ~np.isnan(requested)
+                & ((clamped_r != requested)
+                   | (self.topo.quantize(clamped_r, legal=legal)
+                      != self.topo.quantize(requested))))
+            requested = clamped_r
+
         # drop no-op rate changes so versions only bump on a real swap
-        quantized = self.topo.quantize(requested)
+        quantized = self.topo.quantize(requested, legal=legal)
         changed = (~np.isnan(requested) & ~self.topo.fixed[None, :]
                    & (quantized != self.rates))
         if dead is not None:

@@ -46,7 +46,9 @@ import numpy as np
 from repro.core.islands import (IslandConfig, IslandSpec, NOC_LADDER,
                                 TILE_LADDER)
 from repro.core.noc import contention_slowdown, pos_index
-from repro.core.perfmodel import AccelWorkload, SoCPerfModel, chip_power
+from repro.core.perfmodel import (AccelWorkload, NOC_POWER_SHARE,
+                                  SoCPerfModel, chip_power)
+from repro.core.voltage import TechModel
 from repro.sim.faults import (CompiledFaults, FaultSchedule, SLOConfig,
                               compile_faults, respill_stranded)
 from repro.sim.flows import FlowPattern, compile_flows
@@ -233,6 +235,8 @@ class StepConsts:
     dynamic_contention: bool
     forward: Optional[np.ndarray] = None    # (A, A) chain coupling
     deadline_ticks: float = float("inf")    # SLO deadline in ticks
+    tech: Optional[TechModel] = None        # physical DVFS model (None =
+                                            # linear voltage proxy)
 
 
 @dataclass(frozen=True)
@@ -334,11 +338,13 @@ def tick_step(st: TickState, arr_t: np.ndarray, svc: Dict[str, np.ndarray],
     st.rtt_acc += c.hop_counts * dyn * c.hop_latency
 
     if alive is None:
-        tile_power = np.sum(chip_power(svc["f_tile"], st.busy), axis=-1)
-    else:                           # dead tiles are power-gated
-        tile_power = np.sum(chip_power(svc["f_tile"], st.busy) * alive,
+        tile_power = np.sum(chip_power(svc["f_tile"], st.busy, tech=c.tech),
                             axis=-1)
-    noc_power = c.noc_power_share * chip_power(f_noc, 1.0)
+    else:                           # dead tiles are power-gated
+        tile_power = np.sum(
+            chip_power(svc["f_tile"], st.busy, tech=c.tech) * alive,
+            axis=-1)
+    noc_power = c.noc_power_share * chip_power(f_noc, 1.0, tech=c.tech)
     st.energy += (tile_power + noc_power) * c.dt
     # chain coupling: a share of each stage's completions becomes next
     # tick's arrivals at the following stage (einsum keeps the contracted
@@ -409,7 +415,8 @@ class SimConfig:
     telemetry_capacity: int = 4096      # ring-buffer rows kept
     dynamic_contention: bool = True     # live NoC queueing on the wire term
     max_queue: float = float("inf")     # requests/tile before drops
-    noc_power_share: float = 0.3        # matches grid_sweep's energy model
+    noc_power_share: float = NOC_POWER_SHARE   # the one shared energy model
+                                        # constant (core/perfmodel.py)
 
 
 @dataclass
@@ -481,10 +488,20 @@ class SimEngine:
                  config: SimConfig = SimConfig(), controller=None,
                  balancer=None, faults: Optional[FaultSchedule] = None,
                  slo: Optional[SLOConfig] = None, supervisor=None,
-                 observe=None):
+                 observe=None, tech=None):
         self.platform = platform
         self.config = config
         self.controller = controller    # a control.ControllerHarness or None
+        # physical DVFS model (core/voltage.py): charges tick energy as
+        # power_scl * (P_static + P_dyn f V̂(f)^2) and clamps DFS commits
+        # to the node's legal [L, U] ratio range; None keeps the linear
+        # voltage proxy bit for bit
+        self.tech = TechModel.coerce(tech)
+        if self.tech is not None and controller is not None \
+                and getattr(controller, "tech", None) is None:
+            # single clamping source: the engine's tech model governs the
+            # harness unless the harness was built with its own
+            controller.tech = self.tech
         self.balancer = balancer        # a control.LoadBalancer or None
         self.faults = faults            # a faults.FaultSchedule or None
         self.slo = slo                  # a faults.SLOConfig or None
@@ -582,7 +599,7 @@ class SimEngine:
             noc_power_share=cfg.noc_power_share, dt=dt,
             max_queue=cfg.max_queue,
             dynamic_contention=cfg.dynamic_contention,
-            forward=self._forward)
+            forward=self._forward, tech=self.tech)
 
     # ---------------------------------------------------------------- run
     def _compile_faults(self, T: int) -> Optional[CompiledFaults]:
@@ -824,6 +841,14 @@ class SimEngine:
                 ctl_ticks = 0
                 if ob is not None and ob.tracing and self.controller.actions:
                     act = self.controller.actions[-1]
+                    if act.tick == t_i and getattr(act, "clamped", ()):
+                        # requests pushed back into the tech node's legal
+                        # DVFS ratio range before quantization
+                        ob.emit(t_i, "dfs_clamp",
+                                subject=",".join(act.clamped),
+                                islands=list(act.clamped),
+                                requested={i: act.requested[i]
+                                           for i in act.clamped})
                     if act.tick == t_i and act.guarded != guard_prev:
                         if act.guarded:
                             ob.emit(t_i, "dfs_guard",
@@ -884,7 +909,11 @@ class SimEngine:
             throughput_rps=completed / sim_seconds if sim_seconds else 0.0,
             p50_latency_s=p50, p99_latency_s=p99,
             energy_j=float(st.energy),
-            energy_per_request_j=float(st.energy) / max(completed, 1e-9),
+            # zero-completion (all-dropped) runs have no meaningful energy
+            # per request: signal NaN explicitly instead of an
+            # astronomically large finite number (rankers mask it)
+            energy_per_request_j=(float(st.energy) / completed
+                                  if completed > 0 else float("nan")),
             mean_power_w=float(st.energy) / sim_seconds if sim_seconds else 0.0,
             swaps=(self.controller.actuator.swaps - swaps0
                    if self.controller is not None else 0),

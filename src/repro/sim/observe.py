@@ -83,6 +83,8 @@ TRACE_KINDS: Dict[str, str] = {
     "run_end": "engine run ends (completed, dropped, swaps)",
     "dfs_commit": "DFS actuator committed new island rates (version, rates)",
     "dfs_guard": "DFS guard discarded a requested move (islands, requested)",
+    "dfs_clamp": "DFS request clamped to the tech node's legal DVFS "
+                 "range (islands, requested)",
     "lb_split": "LoadBalancer split decision snapshot (mode, weights)",
     "slo_drop_start": "SLO deadline drops began (tiles)",
     "slo_drop_end": "SLO deadline drop span ended (ticks, dropped)",

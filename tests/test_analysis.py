@@ -356,7 +356,7 @@ FAKE_ENGINE = """\
 class SimEngine:
     def __init__(self, platform, *, config=None, controller=None,
                  balancer=None, faults=None, slo=None, supervisor=None,
-                 observe=None):
+                 tech=None, observe=None):
         pass
 """
 
@@ -364,7 +364,7 @@ FAKE_BATCH = """\
 class BatchSimEngine:
     def __init__(self, platform, *, config=None, controller=None,
                  balancer=None, backend="numpy", faults=None, slo=None,
-                 observe=None, devices=None):
+                 observe=None, devices=None, tech=None):
         pass
 
     def _run_pallas(self):
@@ -378,7 +378,12 @@ FAKE_DSE = """\
 def closed_loop_score(result, trace, *, model, backend="numpy",
                       flows=None, balancer_factory=None,
                       fault_schedule=None, slo=None, observe=None,
-                      devices=None):
+                      devices=None, tech=None):
+    pass
+
+
+def grid_sweep(model, *, backend="numpy", devices=None,
+               tech_node=None, tech_variant=None):
     pass
 """
 
@@ -513,7 +518,7 @@ def test_scan_cache_sig_enumerates_every_field():
     sig = eng._scan_cache_sig(T=64, ci=4, dt=1e-3, B=1, D=1,
                               arrivals_ndim=2, fault_key=fault_key,
                               plan={"kind": "none"}, slo=None)
-    assert len(sig) == len(SCAN_SIG_FIELDS) == 13
+    assert len(sig) == len(SCAN_SIG_FIELDS) == 14
     ix = {name: i for i, name in enumerate(SCAN_SIG_FIELDS)}
     assert sig[ix["tag"]] == "scan"
     assert sig[ix["T"]] == 64
@@ -532,6 +537,8 @@ def test_scan_cache_sig_enumerates_every_field():
                                  cfg.noc_power_share)
     mdl = sig[ix["model"]]
     assert mdl[0] == m.own_demand and mdl[-1] == plat.n_tg
+    # tech slot: engine + controller tech identities (linear proxy here)
+    assert sig[ix["tech"]] == (None, None)
     # distinct dt MUST produce a distinct signature (the PR 8 bug)
     sig2 = eng._scan_cache_sig(T=64, ci=4, dt=2e-3, B=1, D=1,
                                arrivals_ndim=2, fault_key=fault_key,

@@ -143,6 +143,71 @@ def test_trajectory_append_and_legacy_migration(tmp_path):
         check_out_target(path)
 
 
+def test_truncated_trajectory_salvages_complete_rows(tmp_path, capsys):
+    """A partially-written file (crash mid-dump) no longer reads as an
+    empty trajectory — the complete leading rows are salvaged with a
+    stderr warning, so the next append preserves the history."""
+    path = str(tmp_path / "BENCH_x.json")
+    append_bench_row(path, {"runs": {"a": 1}})
+    append_bench_row(path, {"runs": {"a": 2}})
+    text = open(path).read()
+    # truncate inside the SECOND row: only the first survives
+    cut = text.index('"a": 2')
+    with open(path, "w") as f:
+        f.write(text[:cut])
+    rows = load_trajectory(path)
+    assert len(rows) == 1 and rows[0]["runs"] == {"a": 1}
+    assert "salvaged 1 complete row" in capsys.readouterr().err
+    # the append on top of the salvage keeps the surviving history
+    rows = append_bench_row(path, {"runs": {"a": 3}})
+    assert [r["runs"]["a"] for r in rows] == [1, 3]
+    assert latest_row(path)["runs"] == {"a": 3}
+
+
+def test_malformed_rows_skipped_with_warning(tmp_path, capsys):
+    """Non-dict entries inside a valid JSON list are dropped (with a
+    warning), not crashed on and not allowed to poison latest_row."""
+    path = str(tmp_path / "BENCH_x.json")
+    with open(path, "w") as f:
+        json.dump([{"runs": {"a": 1}}, "garbage", 42,
+                   {"runs": {"a": 2}}], f)
+    rows = load_trajectory(path)
+    assert [r["runs"]["a"] for r in rows] == [1, 2]
+    assert "2 malformed" in capsys.readouterr().err
+    assert latest_row(path)["runs"] == {"a": 2}
+    # a non-list non-dict document reads as empty, with a warning
+    with open(path, "w") as f:
+        json.dump("whole document is a string", f)
+    assert load_trajectory(path) == []
+    assert "unrecognized trajectory schema" in capsys.readouterr().err
+
+
+def test_append_is_atomic_write_then_rename(tmp_path, monkeypatch):
+    """append_bench_row never writes the target in place: the dump goes
+    to a temp file that is os.replace'd over the target, so a crash
+    mid-serialization leaves the previous history intact."""
+    path = str(tmp_path / "BENCH_x.json")
+    append_bench_row(path, {"runs": {"a": 1}})
+    before = open(path).read()
+
+    class Boom(RuntimeError):
+        pass
+
+    def exploding_dump(*a, **k):
+        raise Boom("crash mid-serialization")
+
+    monkeypatch.setattr(json, "dump", exploding_dump)
+    with pytest.raises(Boom):
+        append_bench_row(path, {"runs": {"a": 2}})
+    monkeypatch.undo()
+    assert open(path).read() == before          # target untouched
+    assert [p.name for p in tmp_path.iterdir()] == ["BENCH_x.json"]
+    assert [r["runs"]["a"] for r in load_trajectory(path)] == [1]
+    # amend_latest_row rides the same atomic writer
+    amend_latest_row(path, {"extra": True})
+    assert load_trajectory(path)[-1]["extra"] is True
+
+
 def test_main_fails_fast_before_running_benchmarks(tmp_path):
     """A foreign --out target aborts in the argument phase — no benchmark
     module is imported, so the failure costs milliseconds."""
